@@ -1,0 +1,49 @@
+"""Paper Fig. 7: (a) cutover-tuned fcollect at 12 PEs across work-items;
+(b) broadcast strong scaling over 2..12 PEs at 128 work-items (the 2-PE case
+is the same-device fast path, as in the paper)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import cutover
+
+
+def run():
+    hw = cutover.HwParams()
+    # (a) tuned fcollect, 12 PEs
+    for wi in (256, 512, 1024):
+        for le in range(4, 21):
+            nelems = 1 << le
+            nbytes = nelems * 4
+            td = cutover.t_collective("fcollect", nbytes, 12,
+                                      work_items=wi, path="direct", hw=hw)
+            te = cutover.t_collective("fcollect", nbytes, 12, path="engine",
+                                      hw=hw)
+            emit("fig7a_fcollect_tuned", f"wi={wi},{nelems}el",
+                 min(td, te) * 1e6,
+                 path="direct" if td <= te else "engine")
+    # (b) broadcast scaling in PEs
+    for npes in (2, 4, 6, 8, 10, 12):
+        hw_b = hw
+        for le in range(4, 21):
+            nelems = 1 << le
+            nbytes = nelems * 4
+            if npes == 2:
+                # same-device pair: no inter-chip hop (paper: two tiles)
+                t = cutover.t_collective("broadcast", nbytes, 2,
+                                         work_items=128, path="direct",
+                                         hw=cutover.HwParams(
+                                             direct_bw_cap=hw.hbm_bw,
+                                             direct_bw_per_item=6.4e9))
+            else:
+                td = cutover.t_collective("broadcast", nbytes, npes,
+                                          work_items=128, path="direct",
+                                          hw=hw_b)
+                te = cutover.t_collective("broadcast", nbytes, npes,
+                                          path="engine", hw=hw_b)
+                t = min(td, te)
+            emit("fig7b_broadcast", f"pes={npes},{nelems}el", t * 1e6,
+                 MBps=f"{nbytes / t / 1e6:.1f}")
+
+
+if __name__ == "__main__":
+    run()

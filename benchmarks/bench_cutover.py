@@ -1,0 +1,26 @@
+"""Paper Fig. 5: cutover-tuned work-group Put — bandwidth and latency vs
+message size at varying work-items.  Below the (work-item-dependent) cutover
+the direct path is used; above it the engine path; the tuned curve tracks the
+max of both (which is exactly what Fig. 5 shows).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import cutover
+
+
+def run():
+    hw = cutover.HwParams()
+    for wi in (1, 16, 128, 1024):
+        co = cutover.cutover_bytes(work_items=wi, tier="ici", hw=hw)
+        for lb in range(7, 25):
+            n = 1 << lb
+            path = cutover.choose_path(n, work_items=wi, tier="ici", hw=hw)
+            t = cutover.op_time(n, path, work_items=wi, tier="ici", hw=hw)
+            emit("fig5_tuned_put", f"wi={wi},{n}B", t * 1e6,
+                 GBps=f"{n / t / 1e9:.2f}", path=path,
+                 cutover_B=min(co, 1 << 40))
+
+
+if __name__ == "__main__":
+    run()

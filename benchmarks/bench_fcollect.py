@@ -1,0 +1,33 @@
+"""Paper Fig. 6: fcollect_work_group time vs element count for varying
+work-items and PE counts, against the host-initiated copy-engine line.
+The crossover element count depends on BOTH work-items and #PEs.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import cutover
+
+
+def run():
+    hw = cutover.HwParams()
+    for npes in (4, 8, 12):
+        for wi in (256, 1024):
+            for le in range(4, 21):                     # 16 .. 1M elements
+                nelems = 1 << le
+                nbytes = nelems * 4
+                td = cutover.t_collective("fcollect", nbytes, npes,
+                                          work_items=wi, path="direct", hw=hw)
+                te = cutover.t_collective("fcollect", nbytes, npes,
+                                          path="engine", hw=hw)
+                emit("fig6_fcollect", f"pes={npes},wi={wi},{nelems}el",
+                     min(td, te) * 1e6, direct_us=f"{td * 1e6:.2f}",
+                     engine_us=f"{te * 1e6:.2f}",
+                     winner="direct" if td <= te else "engine")
+            co = cutover.collective_cutover_elems("fcollect", npes, 4,
+                                                  work_items=wi, hw=hw)
+            emit("fig6_cutover_point", f"pes={npes},wi={wi}", 0.0,
+                 cutover_elems=min(co, 1 << 40))
+
+
+if __name__ == "__main__":
+    run()

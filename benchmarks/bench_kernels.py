@@ -1,0 +1,56 @@
+"""Measured (interpret-mode, CPU) kernel micro-benchmarks: relative trends of
+the device-initiated ring collectives and the work-group copy tile sweep.
+Absolute numbers are CPU-interpreter time, not TPU time — the TPU projection
+is the modeled column in the other benches."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import best_of, emit
+
+
+def run():
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels import ops
+
+    # local work-group copy: block-size (work-item) sweep
+    dst = jnp.zeros(1 << 16, jnp.float32)
+    src = jnp.arange(1 << 14, dtype=jnp.float32)
+    for wi in (1, 4, 16):
+        f = lambda: ops.wg_copy_local(dst, src, 0, work_items=wi) \
+            .block_until_ready()
+        t = best_of(f, trials=5)
+        emit("kern_wg_copy", f"wi={wi},64KB", t * 1e6, measured="cpu-interp")
+
+    # reduce tile: block sweep
+    rows = jax.random.normal(jax.random.key(0), (8, 4096))
+    for blk in (128, 512, 2048):
+        f = lambda: ops.reduce_tile(rows, "sum", block=blk) \
+            .block_until_ready()
+        t = best_of(f, trials=5)
+        emit("kern_reduce_tile", f"block={blk}", t * 1e6,
+             measured="cpu-interp")
+
+    # ring collectives across 8 simulated PEs
+    ndev = len(jax.devices())
+    if ndev >= 8:
+        mesh = jax.make_mesh((8,), ("x",))
+        for chunk in (256, 2048):
+            x = jax.random.normal(jax.random.key(1), (8, chunk))
+            f = jax.jit(jax.shard_map(
+                lambda v: ops.ring_allgather(v[0], axis_name="x",
+                                             npes=8)[None],
+                mesh=mesh, in_specs=P("x", None), out_specs=P("x", None, None),
+                check_vma=False))
+            f(x).block_until_ready()
+            t = best_of(lambda: f(x).block_until_ready(), trials=3)
+            emit("kern_ring_fcollect", f"pes=8,{chunk * 4}B", t * 1e6,
+                 measured="cpu-interp")
+    else:
+        emit("kern_ring_fcollect", "skipped", 0.0,
+             note=f"needs 8 devices, have {ndev}")
+
+
+if __name__ == "__main__":
+    run()

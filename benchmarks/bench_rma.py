@@ -1,0 +1,32 @@
+"""Paper Fig. 3: single-threaded Put/Get bandwidth vs message size across the
+three fabric tiers (paper: same-tile / other-tile / other-GPU; TPU mapping:
+local-HBM / ICI-neighbor / cross-pod-DCN), with the ze_peer-style engine
+baseline for comparison.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import cutover
+
+
+def run():
+    hw = cutover.HwParams()
+    tiers = [("local", "same-device"), ("ici", "other-device"),
+             ("dcn", "other-pod")]
+    for op in ("put", "get"):
+        for tier, label in tiers:
+            for lb in range(7, 25):                      # 128 B .. 16 MB
+                n = 1 << lb
+                path = cutover.choose_path(n, work_items=1, tier=tier, hw=hw)
+                t = cutover.op_time(n, path, work_items=1, tier=tier, hw=hw)
+                bw = n / t / 1e9
+                # ze_peer analogue: pure engine transfer at every size
+                te = (cutover.t_engine(hw, n, tier) if tier != "dcn"
+                      else cutover.t_proxy(hw, n, tier))
+                emit(f"fig3_{op}", f"{label},{n}B", t * 1e6,
+                     GBps=f"{bw:.2f}", path=path,
+                     engine_GBps=f"{n / te / 1e9:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Paper Fig. 4: work-group Put bandwidth vs message size for varying
+work-items: (a) kernel-driven direct stores scale with work-items; (b) the
+reverse-offloaded copy-engine path is flat in work-items.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import cutover
+
+
+def run():
+    hw = cutover.HwParams()
+    for wi in (1, 16, 128, 1024):
+        for lb in range(7, 25):
+            n = 1 << lb
+            td = cutover.t_direct(hw, n, wi, "ici")          # Fig 4a
+            te = cutover.t_engine(hw, n, "ici")              # Fig 4b
+            emit("fig4a_store", f"wi={wi},{n}B", td * 1e6,
+                 GBps=f"{n / td / 1e9:.2f}")
+            emit("fig4b_engine", f"wi={wi},{n}B", te * 1e6,
+                 GBps=f"{n / te / 1e9:.2f}")
+
+
+if __name__ == "__main__":
+    run()

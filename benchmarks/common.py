@@ -1,0 +1,40 @@
+"""Benchmark utilities.
+
+Timing follows the paper's methodology (§IV): warm-up by doubling iterations
+until total time exceeds 2 ms, then take the best of 10 trials.
+
+Every benchmark prints CSV rows ``bench,config,us_per_call,derived...``.
+Two kinds of numbers appear:
+  - modeled : the cutover engine's TPU v5e projection (the apples-to-apples
+              reproduction of the paper's figures), and
+  - measured: wall-clock of the interpret-mode kernels / protocol machines on
+              CPU (relative trends only; absolute CPU time is not TPU time).
+"""
+from __future__ import annotations
+
+import time
+
+
+def best_of(fn, *, trials: int = 10, min_warm_s: float = 0.002):
+    """Paper methodology: double warm-up iterations until >2 ms, then best
+    of ``trials``."""
+    iters = 1
+    while True:
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        dt = time.perf_counter() - t0
+        if dt > min_warm_s:
+            break
+        iters *= 2
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(bench: str, config: str, us_per_call: float, **derived):
+    extra = ",".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{bench},{config},{us_per_call:.3f},{extra}")

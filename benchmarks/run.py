@@ -1,0 +1,44 @@
+import os
+
+# the ring-kernel benches exercise 8 simulated PEs (this is a separate process
+# from tests and from the 512-device dry-run)
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``bench,config,us_per_call,derived...`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig3,...]
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_broadcast, bench_cutover, bench_fcollect,
+                            bench_kernels, bench_ring, bench_rma,
+                            bench_workgroup)
+    suites = [
+        ("fig3_rma", bench_rma.run),
+        ("fig4_workgroup", bench_workgroup.run),
+        ("fig5_cutover", bench_cutover.run),
+        ("fig6_fcollect", bench_fcollect.run),
+        ("fig7_broadcast", bench_broadcast.run),
+        ("ring_buffer", bench_ring.run),
+        ("kernels", bench_kernels.run),
+    ]
+    only = args.only.split(",") if args.only else None
+    print("bench,config,us_per_call,derived")
+    for name, fn in suites:
+        if only and not any(o in name for o in only):
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

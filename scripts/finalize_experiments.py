@@ -1,0 +1,37 @@
+"""Regenerate the roofline tables inside EXPERIMENTS.md from
+experiments/dryrun artifacts (idempotent; keeps everything else)."""
+import re
+import subprocess
+import sys
+
+sys.path.insert(0, "src")
+from repro.roofline import analysis  # noqa: E402
+
+MARK = "<!-- ROOFLINE TABLES -->"
+
+
+def main():
+    out = []
+    for mesh, label in (("pod1", "single pod — 256 chips (baseline table)"),
+                        ("pod2", "multi-pod — 512 chips")):
+        recs = analysis.load("experiments/dryrun", mesh)
+        if not recs:
+            continue
+        out.append(f"\n#### Roofline — {label}\n")
+        out.append(analysis.table("experiments/dryrun", mesh))
+        out.append("")
+    text = open("EXPERIMENTS.md").read()
+    assert MARK in text
+    pre, post = text.split(MARK, 1)
+    # drop any previously generated tables (up to the next "Reading of")
+    post = post.split("Reading of the baseline table", 1)[-1]
+    new = (pre + MARK + "\n" + "\n".join(out)
+           + "\nReading of the baseline table" + post)
+    open("EXPERIMENTS.md", "w").write(new)
+    print("EXPERIMENTS.md roofline tables regenerated "
+          f"({sum(1 for _ in analysis.load('experiments/dryrun', 'pod1'))} "
+          "pod1 records)")
+
+
+if __name__ == "__main__":
+    main()

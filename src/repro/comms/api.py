@@ -1,0 +1,136 @@
+"""Collective-ops facade consumed by model/training code inside shard_map.
+
+Two interchangeable backends:
+
+- ``xla``   : ``jax.lax`` collectives — the "copy-engine/GSPMD" path; the
+              compiler schedules DMA-engine transfers.
+- ``shmem`` : the paper's device-initiated path — Pallas ring kernels issuing
+              remote DMAs from inside running kernels, with the cutover engine
+              choosing push vs ring vs engine per message size (paper §IV).
+
+Numerical equivalence between the backends is asserted by
+tests/test_comms_equiv.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cutover
+from repro.kernels import ops as kops
+
+
+def get_ops(backend: str, *, npes: int = None,
+            hw: cutover.HwParams = cutover.HwParams(),
+            tuning: cutover.Tuning = cutover.Tuning()):
+    if backend == "xla":
+        return XlaOps()
+    if backend == "shmem":
+        assert npes is not None, "shmem backend needs the axis size"
+        return ShmemOps(npes=npes, hw=hw, tuning=tuning)
+    raise ValueError(backend)
+
+
+class XlaOps:
+    """Engine path: XLA-scheduled collectives."""
+
+    name = "xla"
+
+    def psum(self, x, axis_name):
+        return jax.lax.psum(x, axis_name)
+
+    def all_gather(self, x, axis_name):
+        return jax.lax.all_gather(x, axis_name)
+
+    def reduce_scatter(self, x, axis_name):
+        # x: (npes, chunk...) addend rows -> (chunk...)
+        return jax.lax.psum_scatter(x, axis_name, scatter_dimension=0,
+                                    tiled=False)
+
+    def broadcast(self, x, axis_name, root=0):
+        src = jax.lax.all_gather(x, axis_name)
+        return src[root]
+
+    def ppermute(self, x, axis_name, perm):
+        return jax.lax.ppermute(x, axis_name, perm)
+
+
+@dataclasses.dataclass
+class ShmemOps:
+    """Device-initiated path with the paper's cutover policy."""
+
+    npes: int
+    hw: cutover.HwParams = cutover.HwParams()
+    tuning: cutover.Tuning = cutover.Tuning()
+    name: str = "shmem"
+
+    # -- helpers -------------------------------------------------------------
+    def _rows(self, x):
+        """Flatten x to (npes, k) addend rows (pad to a multiple of npes*128)."""
+        flat = x.reshape(-1)
+        unit = self.npes * 128
+        pad = (-flat.size) % unit
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return flat.reshape(self.npes, -1), x.shape, pad
+
+    # -- collectives ---------------------------------------------------------
+    def psum(self, x, axis_name):
+        rows, shape, pad = self._rows(x)
+        nbytes = int(x.size * x.dtype.itemsize)
+        path = cutover.choose_path(nbytes, work_items=self.tuning.work_group_size,
+                                   tier="ici", hw=self.hw, tuning=self.tuning)
+        if path == "direct" and nbytes <= 1 << 16:
+            # paper §III-G2 small reduce: fcollect + duplicated local compute
+            gathered = kops.ring_allgather(x, axis_name=axis_name,
+                                           npes=self.npes)
+            return gathered.sum(axis=0)
+        full = kops.ring_allreduce(rows, axis_name=axis_name, npes=self.npes)
+        flat = full.reshape(-1)
+        if pad:
+            flat = flat[:-pad]
+        return flat.reshape(shape)
+
+    def all_gather(self, x, axis_name):
+        return kops.ring_allgather(x, axis_name=axis_name, npes=self.npes)
+
+    def reduce_scatter(self, x, axis_name):
+        return kops.ring_reduce_scatter(x, axis_name=axis_name,
+                                        npes=self.npes)
+
+    def broadcast(self, x, axis_name, root=0):
+        return kops.push_broadcast(x, axis_name=axis_name, npes=self.npes,
+                                   root=root)
+
+    def ppermute(self, x, axis_name, perm):
+        # ring permutation == neighbor put (device-initiated)
+        offsets = {s: (d - s) % self.npes for s, d in perm}
+        off = offsets.get(0, 1)
+        return kops.remote_put(x, axis_name=axis_name, npes=self.npes,
+                               target_offset=off,
+                               work_items=self.tuning.work_group_size)
+
+    def psum_hierarchical(self, x, ici_axis, dcn_axis):
+        """Two-level allreduce mirroring the paper's transport tiers:
+
+        1. ring reduce-scatter over the intra-pod ``ici_axis`` —
+           device-initiated direct path (Xe-Link analogue);
+        2. allreduce of the (1/npes-sized) shards across the ``dcn_axis`` —
+           the scale-out tier, which the paper reverse-offloads to the host
+           proxy + NIC; here: an XLA DCN collective;
+        3. ring all-gather back over ``ici_axis``.
+
+        Wire per device: 2·s·(n-1)/n over ICI + 2·(s/n)·(p-1)/p over DCN —
+        the DCN (scarce) tier carries only 1/npes of the payload.
+        """
+        rows, shape, pad = self._rows(x)
+        mine = kops.ring_reduce_scatter(rows, axis_name=ici_axis,
+                                        npes=self.npes)
+        mine = jax.lax.psum(mine, dcn_axis)        # proxy/engine tier
+        full = kops.ring_allgather(mine, axis_name=ici_axis, npes=self.npes)
+        flat = full.reshape(-1)
+        if pad:
+            flat = flat[:-pad]
+        return flat.reshape(shape)

@@ -1,0 +1,310 @@
+"""Architecture + input-shape configuration registry.
+
+Every assigned architecture is a frozen ``ArchConfig``; the four assigned
+input shapes are ``ShapeSpec`` entries in ``SHAPES``.  ``input_specs`` builds
+``jax.ShapeDtypeStruct`` stand-ins for the dry-run (no allocation), and
+``reduced`` derives the CPU smoke-test variant of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    source: str = ""                 # citation for the config
+
+    # --- attention options -------------------------------------------------
+    attention: str = "full"          # full | swa
+    window: int = 4096               # SWA window (and long-context fallback window)
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    mlp_type: str = "swiglu"         # swiglu | gelu
+    tie_embeddings: bool = False
+
+    # --- MoE ----------------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_dense_ff: int = 0            # arctic-style parallel dense-residual FFN
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # --- SSM / hybrid -------------------------------------------------------
+    ssm_state: int = 0               # Mamba2 state dim per head
+    ssm_expand: int = 2              # d_inner = expand * d_model
+    ssm_conv: int = 4                # local conv width
+    hybrid_period: int = 0           # zamba2: every Nth layer is the shared attn block
+    xlstm_pattern: tuple = ()        # ("mlstm","slstm") repeating unit
+
+    # --- enc-dec / vlm frontends (stubbed modality encoders) ----------------
+    encoder_layers: int = 0          # whisper audio encoder depth
+    encoder_seq: int = 1500          # whisper: #frame embeddings from conv stub
+    cross_attn_every: int = 0        # vlm: 1 cross-attn layer per N layers
+    image_tokens: int = 0            # vlm: #patch embeddings from ViT stub
+
+    # --- numerics / training -----------------------------------------------
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    optimizer: str = "adamw"         # adamw | adafactor (giant models)
+    remat: bool = True
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch serve a 500k-token context (skip rule for long_500k)?"""
+        return self.family in ("ssm", "hybrid") or self.attention == "swa"
+
+    @property
+    def is_decoder(self) -> bool:
+        return True  # all assigned archs have a decoder (whisper is enc-dec)
+
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    # -- parameter counting (for MODEL_FLOPS = 6 N D) -------------------------
+    def param_count(self, active_only: bool = False) -> int:
+        d, ff, hd = self.d_model, self.d_ff, self.hd
+        nq, nkv = self.num_heads, self.num_kv_heads
+        attn = d * nq * hd + 2 * d * nkv * hd + nq * hd * d
+        mlp_mult = 3 if self.mlp_type == "swiglu" else 2
+        dense_mlp = mlp_mult * d * ff if ff else 0
+        total = 0
+        kinds = layer_kinds(self)
+        shared_attn_counted = False
+        for kind in kinds:
+            if kind == "attn":
+                total += attn + dense_mlp
+            elif kind == "moe":
+                e = self.experts_per_token if active_only else self.num_experts
+                total += attn + e * mlp_mult * d * ff
+                if self.moe_dense_ff:
+                    total += mlp_mult * d * self.moe_dense_ff
+            elif kind == "mamba":
+                d_in = self.ssm_expand * d
+                total += 2 * d * d_in + d_in * d + d_in * self.ssm_conv
+            elif kind == "mlstm":
+                d_in = 2 * d
+                total += 2 * d * d_in + d_in * d + 3 * d_in * hd  # qkv+gates approx
+            elif kind == "slstm":
+                total += 4 * d * d + 2 * d * (4 * d // 3)
+            elif kind == "shared_attn":
+                if not shared_attn_counted or not active_only:
+                    pass
+                if not shared_attn_counted:
+                    total += attn + dense_mlp
+                    shared_attn_counted = True
+            elif kind == "cross":
+                total += attn + dense_mlp  # cross-attn layer (kv from image embeds)
+            elif kind == "encdec":
+                total += 2 * attn + dense_mlp  # self-attn + cross-attn + mlp
+        total += self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        total += self.encoder_layers * (attn + dense_mlp)
+        return int(total)
+
+
+def layer_kinds(cfg: ArchConfig) -> list:
+    """Per-layer block kinds for the decoder stack."""
+    if cfg.family == "moe":
+        return ["moe"] * cfg.num_layers
+    if cfg.family == "audio":
+        return ["encdec"] * cfg.num_layers  # self-attn + cross-attn + mlp
+    if cfg.family == "ssm" and cfg.xlstm_pattern:
+        pat = list(cfg.xlstm_pattern)
+        return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_period or 6
+        return ["shared_attn" if (i % per == per - 1) else "mamba"
+                for i in range(cfg.num_layers)]
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        per = cfg.cross_attn_every
+        return ["cross" if (i % per == per - 1) else "attn"
+                for i in range(cfg.num_layers)]
+    return ["attn"] * cfg.num_layers
+
+
+def repeat_unit(cfg: ArchConfig):
+    """(unit_kinds, n_repeats) such that unit*n == layer_kinds.
+
+    The model scans over repeats of this unit to bound HLO size.
+    """
+    kinds = layer_kinds(cfg)
+    n = len(kinds)
+    for ulen in range(1, n + 1):
+        if n % ulen:
+            continue
+        unit = kinds[:ulen]
+        if unit * (n // ulen) == kinds:
+            return tuple(unit), n // ulen
+    return tuple(kinds), 1
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeSpec) -> bool:
+    if shape.name == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input stand-ins (dry-run: no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), jnp.dtype(dtype))
+
+
+def frontend_specs(cfg: ArchConfig, batch: int) -> dict:
+    """Stubbed modality-frontend embeddings (the one allowed stub)."""
+    out = {}
+    if cfg.family == "audio":
+        out["audio_embeds"] = _sds((batch, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm":
+        out["image_embeds"] = _sds((batch, cfg.image_tokens, cfg.d_model), cfg.dtype)
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this step kind."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+        }
+        specs.update(frontend_specs(cfg, b))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((b, s), jnp.int32)}
+        specs.update(frontend_specs(cfg, b))
+        return specs
+    # decode: ONE new token against a seq_len-deep cache.  Modality frontends
+    # are consumed at prefill (their KV lives in the cache), not at decode.
+    return {
+        "token": _sds((b, 1), jnp.int32),
+        "pos": _sds((b,), jnp.int32),
+        "cache": cache_specs(cfg, b, s),
+    }
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    """Pytree of ShapeDtypeStructs matching models.kvcache.init_cache."""
+    from repro.models import kvcache  # local import: keep configs jax-light
+
+    return kvcache.cache_struct(cfg, batch, seq_len)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_NAMES = [
+    "minitron_8b",
+    "h2o_danube_3_4b",
+    "starcoder2_7b",
+    "llama4_scout_17b_a16e",
+    "arctic_480b",
+    "xlstm_125m",
+    "whisper_medium",
+    "zamba2_2_7b",
+    "llama_3_2_vision_90b",
+    "qwen3_4b",
+]
+
+_ALIASES = {n.replace("_", "-"): n for n in ARCH_NAMES}
+
+
+def get_config(name: str) -> ArchConfig:
+    key = _ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    if key not in ARCH_NAMES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{key}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict:
+    return {n: get_config(n) for n in ARCH_NAMES}
+
+
+# ---------------------------------------------------------------------------
+# Reduced (smoke-test) variants: same family, tiny dims
+# ---------------------------------------------------------------------------
+
+
+def reduced(cfg: ArchConfig) -> ArchConfig:
+    """<=2-ish layers (one repeat unit), d_model<=512, <=4 experts, small vocab."""
+    unit, _ = repeat_unit(cfg)
+    layers = len(unit) if len(unit) > 1 else 2
+    heads = min(cfg.num_heads, 4)
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    d_model = 256
+    changes = dict(
+        num_layers=layers,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=64,
+        d_ff=0 if cfg.d_ff == 0 else 512,
+        vocab_size=512,
+        window=64,
+        encoder_layers=min(cfg.encoder_layers, 2),
+        encoder_seq=min(cfg.encoder_seq, 32),
+        image_tokens=min(cfg.image_tokens, 16) if cfg.image_tokens else 0,
+        num_experts=min(cfg.num_experts, 4) if cfg.num_experts else 0,
+        experts_per_token=(min(cfg.experts_per_token, 2)
+                           if cfg.experts_per_token else 0),
+        moe_dense_ff=256 if cfg.moe_dense_ff else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        dtype="float32",
+        param_dtype="float32",
+        remat=False,
+    )
+    return dataclasses.replace(cfg, **changes)

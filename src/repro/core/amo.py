@@ -1,0 +1,80 @@
+"""Atomic Memory Operations on symmetric scalars (OpenSHMEM 1.5 AMO set).
+
+The paper's AMOs are single-element remote atomics over Xe-Link (no
+``work_group`` variants — "scalar operations that would not benefit from
+group optimizations").  On TPU the device-side analogue is leader-issued
+(one program per chip, see DESIGN.md); semantically they are linearizable
+read-modify-writes on one element of the symmetric heap, which is what this
+module implements (and what the property tests check under permuted
+schedules).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.heap import SymPtr, SymmetricHeap
+
+
+def _rmw(ctx, heap, ptr: SymPtr, pe, fn, opname, src_pe=0):
+    old = heap.read(ptr, pe).reshape(())
+    new = fn(old)
+    tier = ctx.tier(src_pe, pe)
+    path = "proxy" if tier == "dcn" else "direct"
+    ctx.record(f"amo_{opname}", jnp.dtype(ptr.dtype).itemsize, path, tier, 1)
+    return heap.write(ptr, pe, new), old
+
+
+def fetch(ctx, heap, ptr, pe, *, src_pe=0):
+    heap2, old = _rmw(ctx, heap, ptr, pe, lambda o: o, "fetch", src_pe)
+    return old
+
+
+def set_(ctx, heap, ptr, value, pe, *, src_pe=0):
+    heap2, _ = _rmw(ctx, heap, ptr, pe,
+                    lambda o: jnp.asarray(value, o.dtype), "set", src_pe)
+    return heap2
+
+
+def swap(ctx, heap, ptr, value, pe, *, src_pe=0):
+    return _rmw(ctx, heap, ptr, pe,
+                lambda o: jnp.asarray(value, o.dtype), "swap", src_pe)
+
+
+def compare_swap(ctx, heap, ptr, cond, value, pe, *, src_pe=0):
+    def fn(old):
+        return jnp.where(old == jnp.asarray(cond, old.dtype),
+                         jnp.asarray(value, old.dtype), old)
+    return _rmw(ctx, heap, ptr, pe, fn, "cswap", src_pe)
+
+
+def fetch_add(ctx, heap, ptr, value, pe, *, src_pe=0):
+    return _rmw(ctx, heap, ptr, pe,
+                lambda o: o + jnp.asarray(value, o.dtype), "fadd", src_pe)
+
+
+def add(ctx, heap, ptr, value, pe, *, src_pe=0):
+    heap2, _ = fetch_add(ctx, heap, ptr, value, pe, src_pe=src_pe)
+    return heap2
+
+
+def fetch_inc(ctx, heap, ptr, pe, *, src_pe=0):
+    return fetch_add(ctx, heap, ptr, 1, pe, src_pe=src_pe)
+
+
+def inc(ctx, heap, ptr, pe, *, src_pe=0):
+    return add(ctx, heap, ptr, 1, pe, src_pe=src_pe)
+
+
+def fetch_and(ctx, heap, ptr, value, pe, *, src_pe=0):
+    return _rmw(ctx, heap, ptr, pe,
+                lambda o: o & jnp.asarray(value, o.dtype), "fand", src_pe)
+
+
+def fetch_or(ctx, heap, ptr, value, pe, *, src_pe=0):
+    return _rmw(ctx, heap, ptr, pe,
+                lambda o: o | jnp.asarray(value, o.dtype), "for", src_pe)
+
+
+def fetch_xor(ctx, heap, ptr, value, pe, *, src_pe=0):
+    return _rmw(ctx, heap, ptr, pe,
+                lambda o: o ^ jnp.asarray(value, o.dtype), "fxor", src_pe)

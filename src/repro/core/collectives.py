@@ -1,0 +1,181 @@
+"""Team collectives (paper §III-G2) with the paper's algorithm choices:
+
+- ``sync``      — push: every PE fires an atomic increment at every teammate's
+                  counter, then waits locally (pipelined fire-and-forget
+                  remote atomics + cached local wait).
+- ``broadcast`` / ``fcollect`` — push-style remote *stores* with the inner
+                  loop over destinations (stores beat loads; load-shares all
+                  links).
+- ``reduce``    — small/medium: address-split across threads, each PE pulls
+                  all rows with vector loads and reduces locally (duplicated
+                  compute avoids inter-PE synchronization).  Large: ring
+                  reduce-scatter + all-gather.
+- ``alltoall``  — pairwise exchange.
+
+Every op is functional over the heap, selects a path via the cutover engine,
+and records cost on the ledger.  ``work_items`` is the SYCL work-group size
+knob of the ``ishmemx_*_work_group`` variants.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import cutover
+from repro.core.heap import SymPtr
+from repro.core.teams import Team
+
+REDUCE_OPS = {
+    "sum": (jnp.add, 0),
+    "prod": (jnp.multiply, 1),
+    "min": (jnp.minimum, None),
+    "max": (jnp.maximum, None),
+    "and": (jnp.bitwise_and, None),
+    "or": (jnp.bitwise_or, None),
+    "xor": (jnp.bitwise_xor, None),
+}
+
+# messages larger than this per PE use the ring algorithm for reductions
+RING_REDUCE_BYTES = 1 << 20
+
+
+def _team_rows(heap, ptr: SymPtr, team: Team):
+    data = heap.read_all(ptr)                       # (npes, *shape)
+    return data[jnp.array(team.pes())]              # (team.size, *shape)
+
+
+def _scatter_team(heap, ptr: SymPtr, team: Team, values):
+    data = heap.read_all(ptr)
+    data = data.at[jnp.array(team.pes())].set(values)
+    return heap.write_all(ptr, data)
+
+
+def _path(ctx, kind, nbytes, npes, work_items):
+    if ctx.tuning.force_path:
+        return ctx.tuning.force_path
+    td = cutover.t_collective(kind, nbytes, npes, work_items=work_items,
+                              path="direct", hw=ctx.hw)
+    te = cutover.t_collective(kind, nbytes, npes, path="engine", hw=ctx.hw)
+    return "direct" if td <= te else "engine"
+
+
+def _record(ctx, kind, nbytes, team, path, work_items):
+    base_kind = kind.split("[")[0]
+    t = cutover.t_collective(base_kind, nbytes, team.size,
+                             work_items=work_items, path=path, hw=ctx.hw)
+    from repro.core.context import OpRecord
+    ctx.ledger.append(OpRecord(kind, nbytes, path, "ici", t, work_items))
+
+
+# ---------------------------------------------------------------------------
+# synchronization
+# ---------------------------------------------------------------------------
+
+
+def sync(ctx, heap, counter: SymPtr, team: Team, *, work_items: int = 1):
+    """ishmem_team_sync: push atomic increments, local wait.
+
+    ``counter`` is a symmetric int buffer.  Returns (heap, satisfied: bool
+    array over team) — in the full simulation all waits are satisfied after
+    the pushes land; the property tests drive partial schedules through
+    the AMO layer instead.
+    """
+    rows = heap.read_all(counter)                   # (npes, 1)
+    pes = jnp.array(team.pes())
+    rows = rows.at[pes].add(team.size)              # team.size increments each
+    heap = heap.write_all(counter, rows)
+    target = rows[pes].reshape(team.size)
+    satisfied = target >= team.size
+    _record(ctx, "sync", 8, team, "direct", work_items)
+    return heap, satisfied
+
+
+def barrier(ctx, heap, counter: SymPtr, team: Team, *, work_items: int = 1):
+    """barrier = quiet + sync."""
+    from repro.core import rma
+    heap = rma.quiet(ctx, heap)
+    return sync(ctx, heap, counter, team, work_items=work_items)
+
+
+# ---------------------------------------------------------------------------
+# data collectives
+# ---------------------------------------------------------------------------
+
+
+def broadcast(ctx, heap, ptr: SymPtr, root: int, team: Team, *,
+              work_items: int = 1):
+    """ishmem_broadcast: root pushes its buffer to every teammate (stores,
+    inner loop over destinations)."""
+    path = _path(ctx, "broadcast", ptr.nbytes, team.size, work_items)
+    src = heap.read(ptr, team.translate(root))
+    vals = jnp.broadcast_to(src[None], (team.size,) + ptr.shape)
+    heap = _scatter_team(heap, ptr, team, vals)
+    _record(ctx, "broadcast", ptr.nbytes, team, path, work_items)
+    return heap
+
+
+def fcollect(ctx, heap, dest: SymPtr, src: SymPtr, team: Team, *,
+             work_items: int = 1):
+    """ishmem_fcollect (allgather): every PE pushes its src chunk into the
+    right slot of every teammate's dest.  dest.size == team.size * src.size."""
+    assert dest.size == team.size * src.size, "fcollect size mismatch"
+    chunks = _team_rows(heap, src, team)            # (team, *src.shape)
+    gathered = chunks.reshape((team.size * src.size,))
+    vals = jnp.broadcast_to(gathered[None],
+                            (team.size, team.size * src.size))
+    heap = _scatter_team(heap, dest, team, vals.reshape(
+        (team.size,) + dest.shape))
+    path = _path(ctx, "fcollect", src.nbytes, team.size, work_items)
+    _record(ctx, "fcollect", src.nbytes, team, path, work_items)
+    return heap
+
+
+def collect(ctx, heap, dest: SymPtr, src: SymPtr, nelems_per_pe, team: Team, *,
+            work_items: int = 1):
+    """ishmem_collect: variable contribution sizes (ragged allgather)."""
+    rows = _team_rows(heap, src, team)
+    parts = [rows[i, :int(nelems_per_pe[i])] for i in range(team.size)]
+    gathered = jnp.concatenate(parts)
+    total = int(sum(nelems_per_pe))
+    assert total <= dest.size
+    cur = _team_rows(heap, dest, team).reshape(team.size, dest.size)
+    vals = cur.at[:, :total].set(jnp.broadcast_to(gathered[None],
+                                                  (team.size, total)))
+    heap = _scatter_team(heap, dest, team, vals.reshape(
+        (team.size,) + dest.shape))
+    path = _path(ctx, "fcollect", int(max(nelems_per_pe)) * 4, team.size,
+                 work_items)
+    _record(ctx, "fcollect", total * 4, team, path, work_items)
+    return heap
+
+
+def reduce(ctx, heap, dest: SymPtr, src: SymPtr, op: str, team: Team, *,
+           work_items: int = 1):
+    """ishmem_<op>_reduce.  Address-split duplicated compute (small/medium)
+    or ring reduce-scatter + all-gather (large) — identical results, different
+    cost/collective schedule (the kernels implement both tile computations)."""
+    fn, _ = REDUCE_OPS[op]
+    rows = _team_rows(heap, src, team)              # (team, *shape)
+    acc = rows[0]
+    for i in range(1, team.size):                   # vector binary ops
+        acc = fn(acc, rows[i])
+    vals = jnp.broadcast_to(acc[None], (team.size,) + src.shape)
+    heap = _scatter_team(heap, dest, team, vals.reshape(
+        (team.size,) + dest.shape))
+    algo = "ring" if src.nbytes > RING_REDUCE_BYTES else "flat"
+    path = _path(ctx, "reduce", src.nbytes, team.size, work_items)
+    _record(ctx, f"reduce[{algo}]", src.nbytes, team, path, work_items)
+    return heap
+
+
+def alltoall(ctx, heap, dest: SymPtr, src: SymPtr, team: Team, *,
+             work_items: int = 1):
+    """ishmem_alltoall: PE i's chunk j lands in PE j's slot i."""
+    assert src.size == dest.size and src.size % team.size == 0
+    chunk = src.size // team.size
+    rows = _team_rows(heap, src, team).reshape(team.size, team.size, chunk)
+    out = rows.transpose(1, 0, 2).reshape(team.size, dest.size)
+    heap = _scatter_team(heap, dest, team, out.reshape(
+        (team.size,) + dest.shape))
+    path = _path(ctx, "broadcast", chunk * 4, team.size, work_items)
+    _record(ctx, "alltoall", src.nbytes, team, path, work_items)
+    return heap

@@ -1,0 +1,80 @@
+"""ishmem_init / library context.
+
+Holds everything the paper's runtime sets up host-side: the device-resident
+symmetric heap, PE topology (which PEs share a fabric tier), transport tuning,
+and an operation ledger used by the benchmarks for the analytic cost curves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import cutover, heap as heap_mod, teams
+
+
+@dataclasses.dataclass
+class OpRecord:
+    op: str
+    nbytes: int
+    path: str
+    tier: str
+    t_sec: float
+    work_items: int = 1
+
+
+@dataclasses.dataclass
+class ShmemContext:
+    npes: int
+    node_size: int                      # PEs per shared-fabric node (pod)
+    hw: cutover.HwParams
+    tuning: cutover.Tuning
+    use_kernels: bool = False           # route direct-path copies via Pallas
+    ledger: list = dataclasses.field(default_factory=list)
+
+    # ------------------------------------------------------------ topology
+    def node_of(self, pe: int) -> int:
+        return pe // self.node_size
+
+    def tier(self, src_pe: int, dst_pe: int) -> str:
+        if src_pe == dst_pe:
+            return "local"
+        if self.node_of(src_pe) == self.node_of(dst_pe):
+            return "ici"
+        return "dcn"
+
+    @property
+    def team_world(self) -> teams.Team:
+        return teams.world(self.npes)
+
+    def team_shared(self, pe: int = 0) -> teams.Team:
+        return teams.shared(self.npes, self.node_size, self.node_of(pe))
+
+    # ------------------------------------------------------------ ledger
+    def record(self, op: str, nbytes: int, path: str, tier: str,
+               work_items: int = 1) -> None:
+        t = cutover.op_time(nbytes, path, work_items=work_items,
+                            tier=tier if path != "proxy" else "dcn",
+                            hw=self.hw)
+        self.ledger.append(OpRecord(op, nbytes, path, tier, t, work_items))
+
+    def total_time(self) -> float:
+        return sum(r.t_sec for r in self.ledger)
+
+    def reset_ledger(self) -> None:
+        self.ledger = []
+
+
+def init(npes: int, node_size: Optional[int] = None,
+         hw: Optional[cutover.HwParams] = None,
+         tuning: Optional[cutover.Tuning] = None,
+         heap_words: int = 1 << 20,
+         use_kernels: bool = False):
+    """ishmem_init: returns (ctx, heap).  1 PE : 1 device (paper §III-E)."""
+    ctx = ShmemContext(
+        npes=npes,
+        node_size=node_size or npes,
+        hw=hw or cutover.HwParams(),
+        tuning=tuning or cutover.Tuning(),
+        use_kernels=use_kernels,
+    )
+    return ctx, heap_mod.create(npes, heap_words)

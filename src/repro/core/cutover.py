@@ -1,0 +1,178 @@
+"""Adaptive transport selection — the paper's "cutover" engine (§III-B, §IV).
+
+Three transports, mirroring Xe-Link load/store vs copy-engine vs host proxy,
+adapted to the TPU tiering (see DESIGN.md §2):
+
+  - ``direct``  : kernel-initiated remote stores (Pallas `make_async_remote_copy`
+                  issued from a running kernel).  Near-zero startup; bandwidth
+                  scales with the number of concurrent "work items" (grid
+                  programs × outstanding DMA descriptors) up to a cap below
+                  peak link speed — the compute cores are busy issuing.
+  - ``engine``  : DMA/copy-engine transfer scheduled outside the kernel (an
+                  XLA collective).  Full link bandwidth, but pays a startup
+                  that includes the reverse-offload round trip when initiated
+                  from device code (paper: ~5 us).
+  - ``proxy``   : host-proxy scale-out path over the NIC/DCN (cross-pod).
+
+The cutover point — the message size where ``engine`` overtakes ``direct`` —
+is a function of BOTH the message size and the work-group size (paper Fig. 4a:
+store bandwidth varies with #work-items, engine bandwidth does not, Fig. 4b),
+and for collectives also the number of PEs (Fig. 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class HwParams:
+    """TPU v5e-flavored transport constants (per chip)."""
+    hbm_bw: float = 819e9            # B/s — local copies (same-PE tier)
+    ici_bw: float = 50e9             # B/s per link — engine path peak
+    dcn_bw: float = 25e9             # B/s — cross-pod NIC tier
+    direct_bw_cap: float = 45e9      # B/s — kernel-issued stores saturate below peak
+    direct_bw_per_item: float = 1.6e9  # B/s per concurrent work item
+    alpha_direct: float = 1.2e-6     # s — in-kernel DMA issue latency
+    alpha_engine: float = 4.5e-6     # s — engine startup incl. reverse offload
+    alpha_proxy: float = 8.0e-6      # s — ring-buffer RTT + NIC doorbell
+    ring_msg_bytes: int = 64         # reverse-offload message size (§III-D)
+    ring_rate: float = 20e6          # msgs/s through one host proxy thread
+
+
+@dataclasses.dataclass(frozen=True)
+class Tuning:
+    """User-tunable cutover policy (ISHMEM_* env-vars in the real library)."""
+    cutover_bytes: int | None = None   # None -> model-derived
+    force_path: str | None = None      # "direct" | "engine" | "proxy"
+    work_group_size: int = 128
+
+
+TIERS = ("local", "ici", "dcn")
+
+
+def direct_bw(hw: HwParams, work_items: int) -> float:
+    return min(hw.direct_bw_cap, max(1, work_items) * hw.direct_bw_per_item)
+
+
+def t_direct(hw: HwParams, nbytes: int, work_items: int, tier: str) -> float:
+    if tier == "dcn":
+        return math.inf                      # no kernel-initiated NIC path
+    bw = direct_bw(hw, work_items)
+    if tier == "local":
+        bw = min(hw.hbm_bw, max(bw, work_items * 4 * hw.direct_bw_per_item))
+    return hw.alpha_direct + nbytes / bw
+
+
+def t_engine(hw: HwParams, nbytes: int, tier: str) -> float:
+    bw = {"local": hw.hbm_bw, "ici": hw.ici_bw, "dcn": hw.dcn_bw}[tier]
+    return hw.alpha_engine + nbytes / bw
+
+
+def t_proxy(hw: HwParams, nbytes: int, tier: str) -> float:
+    bw = hw.dcn_bw if tier == "dcn" else hw.ici_bw
+    return hw.alpha_proxy + nbytes / bw + hw.ring_msg_bytes / hw.dcn_bw
+
+
+def choose_path(nbytes: int, *, work_items: int = 128, tier: str = "ici",
+                hw: HwParams = HwParams(), tuning: Tuning = Tuning()) -> str:
+    """Pick the transport for one RMA op (the paper's tuned cutover)."""
+    if tuning.force_path:
+        return tuning.force_path
+    if tier == "dcn":
+        return "proxy"
+    if tuning.cutover_bytes is not None:
+        return "direct" if nbytes <= tuning.cutover_bytes else "engine"
+    td = t_direct(hw, nbytes, work_items, tier)
+    te = t_engine(hw, nbytes, tier)
+    return "direct" if td <= te else "engine"
+
+
+def cutover_bytes(*, work_items: int = 128, tier: str = "ici",
+                  hw: HwParams = HwParams()) -> int:
+    """Closed-form crossing point of t_direct and t_engine.
+
+    alpha_d + n/bw_d = alpha_e + n/bw_e  =>  n* = (alpha_e - alpha_d) /
+                                                   (1/bw_d - 1/bw_e)
+    If the direct path is at least as fast at all sizes (bw_d >= bw_e), the
+    cutover is infinite (never switch).
+    """
+    bw_d = direct_bw(hw, work_items)
+    bw_e = {"local": hw.hbm_bw, "ici": hw.ici_bw, "dcn": hw.dcn_bw}[tier]
+    if tier == "local":
+        bw_d = min(hw.hbm_bw, max(bw_d, work_items * 4 * hw.direct_bw_per_item))
+    if bw_d >= bw_e:
+        return 1 << 62
+    n = (hw.alpha_engine - hw.alpha_direct) / (1.0 / bw_d - 1.0 / bw_e)
+    return max(0, int(n))
+
+
+def op_time(nbytes: int, path: str, *, work_items: int = 128,
+            tier: str = "ici", hw: HwParams = HwParams()) -> float:
+    if path == "direct":
+        return t_direct(hw, nbytes, work_items, tier)
+    if path == "engine":
+        return t_engine(hw, nbytes, tier)
+    if path == "proxy":
+        return t_proxy(hw, nbytes, tier)
+    raise ValueError(path)
+
+
+# ---------------------------------------------------------------------------
+# Collective cost models (push-style, §III-G2) — used by the benchmarks to
+# reproduce the shapes of paper Figs. 6-7 and by the shmem comms backend to
+# pick collective algorithms.
+# ---------------------------------------------------------------------------
+
+
+def t_collective(kind: str, nbytes_per_pe: int, npes: int, *,
+                 work_items: int = 128, path: str = "direct",
+                 hw: HwParams = HwParams()) -> float:
+    """Time for one intra-node collective on an all-to-all-connected tier."""
+    if kind == "sync":
+        # pipelined remote atomic increments, then a local wait
+        return hw.alpha_direct + (npes - 1) * 64 / direct_bw(hw, work_items) \
+            + hw.alpha_direct
+    if kind in ("broadcast", "fcollect"):
+        # push: inner loop over destinations pipelines stores across all
+        # links, but every store still consumes the initiator's issue
+        # bandwidth -> aggregate direct_bw(wi), one startup
+        total = nbytes_per_pe * (npes - 1)
+        if path == "direct":
+            return hw.alpha_direct + total / direct_bw(hw, work_items)
+        return hw.alpha_engine * (npes - 1) + total / hw.ici_bw
+    if kind == "alltoall":
+        # pairwise exchange: each PE sends npes-1 distinct chunks
+        total = nbytes_per_pe * (npes - 1) / max(1, npes)
+        if path == "direct":
+            return hw.alpha_direct + total / direct_bw(hw, work_items)
+        return hw.alpha_engine * (npes - 1) + total / hw.ici_bw
+    if kind == "reduce":
+        # address-split across threads; each PE reads npes rows, computes, stores
+        loads = nbytes_per_pe * npes
+        if path == "direct":
+            return hw.alpha_direct + loads / direct_bw(hw, work_items)
+        return hw.alpha_engine * npes + loads / hw.ici_bw
+    raise ValueError(kind)
+
+
+def collective_cutover_elems(kind: str, npes: int, elem_bytes: int, *,
+                             work_items: int = 128,
+                             hw: HwParams = HwParams()) -> int:
+    """Smallest nelems where the engine path beats direct (Fig. 6 crossover)."""
+    lo, hi = 1, 1 << 30
+    f = lambda n: (t_collective(kind, n * elem_bytes, npes,
+                                work_items=work_items, path="direct", hw=hw)
+                   <= t_collective(kind, n * elem_bytes, npes,
+                                   work_items=work_items, path="engine", hw=hw))
+    if not f(lo):
+        return 0
+    if f(hi):
+        return 1 << 62
+    while lo + 1 < hi:
+        mid = (lo + hi) // 2
+        if f(mid):
+            lo = mid
+        else:
+            hi = mid
+    return hi

@@ -1,0 +1,132 @@
+"""Device-resident symmetric heap (paper §III-E).
+
+The PGAS address space is modeled as per-dtype pools of shape
+``(npes, words)``: every PE sees an identically laid-out region (symmetric),
+and a ``SymPtr`` (dtype, offset, shape) is valid at *every* PE — exactly the
+OpenSHMEM symmetric-heap contract.  Allocation metadata lives host-side (the
+paper: "memory management APIs are host-only"); data updates are functional.
+
+On real hardware the ``npes`` axis is the mesh: each PE owns its row, and the
+kernels in ``repro.kernels`` move rows across chips.  On CPU the whole array
+is materialized, which makes every op testable against a numpy oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+ALIGN = 128  # lane-aligned allocations (TPU minor dim = 128)
+
+
+class SymPtr(NamedTuple):
+    dtype: str
+    offset: int
+    shape: tuple
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= int(s)
+        return n
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * jnp.dtype(self.dtype).itemsize
+
+    def index(self, i: int) -> "SymPtr":
+        """Pointer to element i of a flattened buffer (for AMOs)."""
+        if not 0 <= i < self.size:
+            raise IndexError(i)
+        return SymPtr(self.dtype, self.offset + i, ())
+
+
+@dataclasses.dataclass
+class SymmetricHeap:
+    """Functional symmetric heap.  Mutating ops return a new heap."""
+
+    npes: int
+    pools: dict                    # dtype str -> (npes, words) jnp array
+    _cursor: dict = dataclasses.field(default_factory=dict)
+    _free: dict = dataclasses.field(default_factory=dict)
+    words_per_pool: int = 1 << 20
+
+    # ----------------------------------------------------------- allocation
+    def malloc(self, shape, dtype) -> SymPtr:
+        """shmem_malloc: symmetric, collective over all PEs (host-only API)."""
+        # canonicalize (JAX without x64: 64-bit symmetric objects narrow to
+        # 32-bit — documented TPU adaptation; TPUs natively prefer 32-bit)
+        dt = jax.dtypes.canonicalize_dtype(jnp.dtype(dtype)).name
+        shape = tuple(int(s) for s in shape)
+        n = 1
+        for s in shape:
+            n *= s
+        n_aligned = max(ALIGN, -(-n // ALIGN) * ALIGN)
+        # first-fit over the free list
+        for i, (off, sz) in enumerate(self._free.get(dt, [])):
+            if sz >= n_aligned:
+                self._free[dt].pop(i)
+                if sz > n_aligned:
+                    self._free[dt].append((off + n_aligned, sz - n_aligned))
+                return SymPtr(dt, off, shape)
+        cur = self._cursor.get(dt, 0)
+        if dt not in self.pools:
+            self.pools[dt] = jnp.zeros((self.npes, self.words_per_pool),
+                                       jnp.dtype(dt))
+        if cur + n_aligned > self.pools[dt].shape[1]:
+            # grow the pool (doubling)
+            new_words = max(self.pools[dt].shape[1] * 2,
+                            cur + n_aligned)
+            pad = jnp.zeros((self.npes, new_words - self.pools[dt].shape[1]),
+                            jnp.dtype(dt))
+            self.pools[dt] = jnp.concatenate([self.pools[dt], pad], axis=1)
+        self._cursor[dt] = cur + n_aligned
+        return SymPtr(dt, cur, shape)
+
+    def calloc(self, shape, dtype) -> SymPtr:
+        return self.malloc(shape, dtype)  # pools are zero-initialized
+
+    def free(self, ptr: SymPtr) -> None:
+        n = max(ALIGN, -(-ptr.size // ALIGN) * ALIGN)
+        self._free.setdefault(ptr.dtype, []).append((ptr.offset, n))
+
+    # ----------------------------------------------------------- access
+    def read(self, ptr: SymPtr, pe) -> jnp.ndarray:
+        """Local load of the buffer as seen at PE ``pe``."""
+        flat = jax.lax.dynamic_slice(
+            self.pools[ptr.dtype][pe], (ptr.offset,), (max(ptr.size, 1),))
+        return flat[: ptr.size].reshape(ptr.shape)
+
+    def write(self, ptr: SymPtr, pe, value) -> "SymmetricHeap":
+        value = jnp.asarray(value, jnp.dtype(ptr.dtype)).reshape((ptr.size,))
+        pool = self.pools[ptr.dtype].at[pe, ptr.offset:ptr.offset + ptr.size] \
+            .set(value)
+        return self.replace_pool(ptr.dtype, pool)
+
+    def read_all(self, ptr: SymPtr) -> jnp.ndarray:
+        """(npes, *shape) view of the buffer across every PE."""
+        flat = self.pools[ptr.dtype][:, ptr.offset:ptr.offset + ptr.size]
+        return flat.reshape((self.npes,) + ptr.shape)
+
+    def write_all(self, ptr: SymPtr, values) -> "SymmetricHeap":
+        values = jnp.asarray(values, jnp.dtype(ptr.dtype)).reshape(
+            (self.npes, ptr.size))
+        pool = self.pools[ptr.dtype].at[:, ptr.offset:ptr.offset + ptr.size] \
+            .set(values)
+        return self.replace_pool(ptr.dtype, pool)
+
+    def replace_pool(self, dt, pool) -> "SymmetricHeap":
+        pools = dict(self.pools)
+        pools[dt] = pool
+        new = SymmetricHeap(self.npes, pools, dict(self._cursor),
+                            {k: list(v) for k, v in self._free.items()},
+                            self.words_per_pool)
+        return new
+
+
+def create(npes: int, words_per_pool: int = 1 << 20) -> SymmetricHeap:
+    """shmemx_heap_create analogue: device-resident symmetric heap."""
+    return SymmetricHeap(npes, {}, {}, {}, words_per_pool)

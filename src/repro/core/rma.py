@@ -1,0 +1,142 @@
+"""Remote Memory Access: put/get (+p/g scalars, iput/iget strided, nbi, and
+the thread-collaborative ``work_group`` extensions — paper §III-F/G1).
+
+Semantics are one-sided: ``put`` stores into the *destination PE's* row of the
+symmetric heap; ``get`` loads from the source PE's row.  Every op picks a
+transport via the cutover engine and records it on the context ledger; when
+``ctx.use_kernels`` is set, direct-path copies run through the Pallas
+work-group copy kernel (interpret mode on CPU, RDMA on TPU).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import cutover
+from repro.core.heap import SymPtr, SymmetricHeap
+
+
+def _pick(ctx, nbytes, work_items, tier):
+    return cutover.choose_path(nbytes, work_items=work_items, tier=tier,
+                               hw=ctx.hw, tuning=ctx.tuning)
+
+
+def _write_row(ctx, heap, ptr, pe, flat_value):
+    if ctx.use_kernels:
+        from repro.kernels import ops as kops
+        pool = heap.pools[ptr.dtype]
+        row = kops.copy_into(pool[pe], flat_value, ptr.offset)
+        return heap.replace_pool(ptr.dtype, pool.at[pe].set(row))
+    return heap.write(ptr, pe, flat_value)
+
+
+# ---------------------------------------------------------------------------
+# blocking RMA
+# ---------------------------------------------------------------------------
+
+
+def put(ctx, heap: SymmetricHeap, dest: SymPtr, value, dst_pe, *,
+        src_pe: int = 0, work_items: int = 1) -> SymmetricHeap:
+    """ishmem_put (work_items=1) / ishmemx_put_work_group (work_items>1)."""
+    value = jnp.asarray(value, jnp.dtype(dest.dtype)).reshape((dest.size,))
+    tier = ctx.tier(src_pe, dst_pe)
+    path = _pick(ctx, dest.nbytes, work_items, tier)
+    ctx.record("put", dest.nbytes, path, tier, work_items)
+    return _write_row(ctx, heap, dest, dst_pe, value)
+
+
+def get(ctx, heap: SymmetricHeap, src: SymPtr, src_pe_remote, *,
+        src_pe: int = 0, work_items: int = 1):
+    """ishmem_get / ishmemx_get_work_group: one-sided load from a remote PE."""
+    tier = ctx.tier(src_pe, src_pe_remote)
+    path = _pick(ctx, src.nbytes, work_items, tier)
+    ctx.record("get", src.nbytes, path, tier, work_items)
+    return heap.read(src, src_pe_remote)
+
+
+def p(ctx, heap, dest: SymPtr, scalar, dst_pe, *, src_pe: int = 0):
+    """ishmem_p: blocking scalar store — always the direct path (a single
+    remote store; this is the op the paper uses to motivate load/store)."""
+    tier = ctx.tier(src_pe, dst_pe)
+    path = "proxy" if tier == "dcn" else "direct"
+    ctx.record("p", jnp.dtype(dest.dtype).itemsize, path, tier, 1)
+    return heap.write(dest, dst_pe, jnp.asarray(scalar))
+
+
+def g(ctx, heap, src: SymPtr, src_pe_remote, *, src_pe: int = 0):
+    """ishmem_g: blocking scalar fetch."""
+    tier = ctx.tier(src_pe, src_pe_remote)
+    path = "proxy" if tier == "dcn" else "direct"
+    ctx.record("g", jnp.dtype(src.dtype).itemsize, path, tier, 1)
+    return heap.read(src, src_pe_remote).reshape(())
+
+
+# ---------------------------------------------------------------------------
+# strided RMA (iput/iget)
+# ---------------------------------------------------------------------------
+
+
+def iput(ctx, heap, dest: SymPtr, value, dst_pe, *, dst_stride: int = 1,
+         src_stride: int = 1, nelems: int = None, src_pe: int = 0):
+    """ishmem_iput: strided store (SYCL-vectorized on device, §III-G1)."""
+    value = jnp.asarray(value, jnp.dtype(dest.dtype)).reshape((-1,))
+    n = nelems if nelems is not None else (value.size + src_stride - 1) // src_stride
+    picked = value[::src_stride][:n]
+    cur = heap.read(dest, dst_pe).reshape((-1,))
+    idx = jnp.arange(n) * dst_stride
+    newv = cur.at[idx].set(picked)
+    nbytes = int(n) * jnp.dtype(dest.dtype).itemsize
+    tier = ctx.tier(src_pe, dst_pe)
+    ctx.record("iput", nbytes, _pick(ctx, nbytes, 1, tier), tier, 1)
+    return heap.write(dest, dst_pe, newv)
+
+
+def iget(ctx, heap, src: SymPtr, src_pe_remote, *, src_stride: int = 1,
+         nelems: int = None, src_pe: int = 0):
+    data = heap.read(src, src_pe_remote).reshape((-1,))
+    n = nelems if nelems is not None else data.size // max(1, src_stride)
+    out = data[::src_stride][:n]
+    nbytes = int(n) * jnp.dtype(src.dtype).itemsize
+    tier = ctx.tier(src_pe, src_pe_remote)
+    ctx.record("iget", nbytes, _pick(ctx, nbytes, 1, tier), tier, 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# non-blocking (nbi) + ordering
+# ---------------------------------------------------------------------------
+
+
+def put_nbi(ctx, heap, dest, value, dst_pe, *, src_pe: int = 0,
+            work_items: int = 1):
+    """ishmem_put_nbi: non-blocking put.  NBI ops always prefer the engine
+    path (the paper: copy engines overlap with compute; completion at quiet)."""
+    value = jnp.asarray(value, jnp.dtype(dest.dtype)).reshape((dest.size,))
+    tier = ctx.tier(src_pe, dst_pe)
+    path = "proxy" if tier == "dcn" else "engine"
+    ctx.record("put_nbi", dest.nbytes, path, tier, work_items)
+    heap = _write_row(ctx, heap, dest, dst_pe, value)
+    ctx.ledger[-1].op = "put_nbi(pending)"
+    return heap
+
+
+def get_nbi(ctx, heap, src, src_pe_remote, *, src_pe: int = 0,
+            work_items: int = 1):
+    tier = ctx.tier(src_pe, src_pe_remote)
+    path = "proxy" if tier == "dcn" else "engine"
+    ctx.record("get_nbi", src.nbytes, path, tier, work_items)
+    return heap.read(src, src_pe_remote)
+
+
+def quiet(ctx, heap):
+    """ishmem_quiet: completes all pending nbi ops (memory ordering)."""
+    for r in ctx.ledger:
+        if r.op == "put_nbi(pending)":
+            r.op = "put_nbi"
+    ctx.record("quiet", 0, "direct", "local", 1)
+    return heap
+
+
+def fence(ctx, heap):
+    """ishmem_fence: orders (but does not complete) pending ops."""
+    ctx.record("fence", 0, "direct", "local", 1)
+    return heap

@@ -1,0 +1,49 @@
+"""Signaling ops: put_signal (+work_group) and signal_wait_until.
+
+``put_signal`` is the paper's ordered "data then flag" primitive: the data put
+completes at the target before the signal word updates (on TPU: the remote DMA
+completion semaphore gates the signal store).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import rma
+
+SIGNAL_SET = 0
+SIGNAL_ADD = 1
+
+_CMP = {
+    "eq": lambda a, b: a == b,
+    "ne": lambda a, b: a != b,
+    "gt": lambda a, b: a > b,
+    "ge": lambda a, b: a >= b,
+    "lt": lambda a, b: a < b,
+    "le": lambda a, b: a <= b,
+}
+
+
+def put_signal(ctx, heap, dest, value, sig_ptr, signal, sig_op, dst_pe, *,
+               src_pe: int = 0, work_items: int = 1):
+    """ishmem_put_signal / ishmemx_put_signal_work_group."""
+    heap = rma.put(ctx, heap, dest, value, dst_pe, src_pe=src_pe,
+                   work_items=work_items)
+    old = heap.read(sig_ptr, dst_pe).reshape(())
+    new = (jnp.asarray(signal, old.dtype) if sig_op == SIGNAL_SET
+           else old + jnp.asarray(signal, old.dtype))
+    ctx.record("signal", jnp.dtype(sig_ptr.dtype).itemsize, "direct",
+               ctx.tier(src_pe, dst_pe), 1)
+    return heap.write(sig_ptr, dst_pe, new)
+
+
+def signal_fetch(ctx, heap, sig_ptr, pe):
+    return heap.read(sig_ptr, pe).reshape(())
+
+
+def signal_wait_until(ctx, heap, sig_ptr, pe, cmp: str, value):
+    """Local wait; in the sequential simulation this is a satisfiability check
+    (the caller drives progress).  Returns the satisfied signal value."""
+    cur = heap.read(sig_ptr, pe).reshape(())
+    ok = _CMP[cmp](cur, jnp.asarray(value, cur.dtype))
+    ctx.record("signal_wait", 0, "direct", "local", 1)
+    return cur, ok

@@ -1,0 +1,49 @@
+"""OpenSHMEM 1.5 teams (paper §I: "teams API"-aligned collectives).
+
+A team is a (start, stride, size) slice of the world PE set, exactly the
+``shmem_team_split_strided`` model.  ``TEAM_SHARED`` is the set of PEs that
+share one node's fabric (one pod / Xe-Link group).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Team:
+    start: int
+    stride: int
+    size: int
+
+    def pes(self) -> list:
+        return [self.start + i * self.stride for i in range(self.size)]
+
+    def translate(self, team_pe: int) -> int:
+        """team-relative rank -> world PE."""
+        if not 0 <= team_pe < self.size:
+            raise ValueError(f"rank {team_pe} outside team of size {self.size}")
+        return self.start + team_pe * self.stride
+
+    def rank_of(self, world_pe: int) -> int:
+        """world PE -> team rank, or -1 if not a member."""
+        d = world_pe - self.start
+        if d < 0 or d % self.stride or d // self.stride >= self.size:
+            return -1
+        return d // self.stride
+
+    def split_strided(self, start: int, stride: int, size: int) -> "Team":
+        """shmem_team_split_strided relative to this team."""
+        if start + (size - 1) * stride >= self.size:
+            raise ValueError("child team exceeds parent")
+        return Team(self.translate(start), self.stride * stride, size)
+
+
+def world(npes: int) -> Team:
+    return Team(0, 1, npes)
+
+
+def shared(npes: int, node_size: int, node_id: int) -> Team:
+    """ISHMEM_TEAM_SHARED: the PEs of one shared-fabric node/pod."""
+    if node_size * (node_id + 1) > npes:
+        raise ValueError("node beyond world")
+    return Team(node_id * node_size, 1, node_size)

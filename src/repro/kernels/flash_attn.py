@@ -1,0 +1,88 @@
+"""Fused causal flash attention (Pallas, VMEM-resident scores).
+
+The §Perf analysis shows the pure-XLA blockwise attention round-trips its
+f32 exp-score tensors through HBM (and the rematerialized backward re-gathers
+them) — the dominant memory/collective cost of every train/prefill dry-run.
+This kernel keeps the (bq, bk) score tile in VMEM: HBM traffic is q/k/v/o
+only.
+
+Layout: inputs flattened to (BH, S, hd); grid = (BH, S/bq); each program
+holds one q tile and streams kv tiles with an online softmax.  GQA callers
+repeat KV heads first (`ops.flash_attention` handles that).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _interpret():
+    return (pltpu.InterpretParams()
+            if jax.default_backend() != "tpu" else False)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, scale):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+    S = k_ref.shape[1]
+    hd = q.shape[-1]
+    hi = (qi + 1) * bq                                # causal kv limit
+    nkb = pl.cdiv(hi, bk)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.ds(j * bk, bk)].astype(jnp.float32)   # (bk, hd)
+        v = v_ref[0, pl.ds(j * bk, bk)].astype(jnp.float32)
+        s = q @ k.T                                   # (bq, bk) — stays in VMEM
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nkb, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, block_q: int = 256, block_k: int = 256):
+    """Causal attention, equal head counts.  q,k,v: (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    assert k.shape == v.shape == (B, S, H, hd), "repeat KV heads first (GQA)"
+    bq = min(block_q, S)
+    while S % bq:
+        bq //= 2
+    bk = min(block_k, S)
+    while S % bk:
+        bk //= 2
+    scale = hd ** -0.5
+
+    def flat(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+    qf, kf, vf = flat(q), flat(k), flat(v)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale),
+        grid=(B * H, S // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, S, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, S, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        interpret=_interpret(),
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

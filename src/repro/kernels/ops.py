@@ -1,0 +1,70 @@
+"""Jitted dispatch wrappers for the kernel package.
+
+CPU: interpret mode (kernel bodies execute in Python) — used by tests and
+benchmarks.  TPU: the same pallas_calls compile to real MXU/ICI programs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import reduce_tile as rt_mod, rma_copy, ring_collectives
+
+LANE = 128
+
+
+@functools.partial(jax.jit, static_argnames=("offset", "work_items"))
+def wg_copy_local(dst_row, src, offset: int, work_items: int = 8):
+    return rma_copy.wg_copy_local(dst_row, src, offset,
+                                  work_items=work_items)
+
+
+def copy_into(dst_row, value, offset: int):
+    """core.rma direct-path data mover; falls back to .at[].set when the
+    transfer is too small/unaligned for the DMA path (exactly the scalar
+    store case on hardware)."""
+    n = value.shape[0]
+    if n % LANE or offset % LANE:
+        return dst_row.at[offset:offset + n].set(value)
+    g = 8
+    while n % (g * LANE) and g > 1:
+        g -= 1
+    blk = n // g
+    if offset % blk or dst_row.shape[0] % blk:
+        # block grid must tile the destination row exactly
+        return dst_row.at[offset:offset + n].set(value)
+    return wg_copy_local(dst_row, value, offset, work_items=g)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "block"))
+def reduce_tile(rows, op: str = "sum", block: int = 512):
+    return rt_mod.reduce_tile(rows, op, block=block)
+
+
+# shard_map-level collectives (call inside shard_map)
+ring_allgather = ring_collectives.ring_allgather
+ring_reduce_scatter = ring_collectives.ring_reduce_scatter
+push_broadcast = ring_collectives.push_broadcast
+barrier_push = ring_collectives.barrier_push
+remote_put = rma_copy.remote_put
+
+
+def flash_attention(q, k, v, *, block_q: int = 256, block_k: int = 256):
+    """Fused causal attention with GQA support (repeats KV heads)."""
+    from repro.kernels import flash_attn
+    nq, nkv = q.shape[2], k.shape[2]
+    if nq != nkv:
+        rep = nq // nkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    return flash_attn.flash_attention(q, k, v, block_q=block_q,
+                                      block_k=block_k)
+
+
+def ring_allreduce(x, *, axis_name: str, npes: int):
+    """Allreduce = ring reduce-scatter + ring all-gather (engine-free,
+    device-initiated end to end).  x: (npes, chunk...) addend rows."""
+    mine = ring_reduce_scatter(x, axis_name=axis_name, npes=npes)
+    return ring_allgather(mine, axis_name=axis_name, npes=npes)

@@ -1,0 +1,52 @@
+"""Vectorized tile reduction kernel (paper §III-G2 "Reduction"):
+
+"split the reduction by address across threads, each thread uses vector loads
+... vector binary operations ... vector stores" — on TPU the address split is
+the grid, each program reduces a (T, block) VMEM tile over the team axis with
+f32 accumulation.  This is the compute body of the engine-path reduce and of
+the ring reduce-scatter step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import BINOPS
+
+LANE = 128
+
+
+def _interpret():
+    return (pltpu.InterpretParams()
+            if jax.default_backend() != "tpu" else False)
+
+
+def _reduce_kernel(rows_ref, o_ref, *, op):
+    fn = BINOPS[op]
+    rows = rows_ref[...]
+    acc = rows[0].astype(jnp.float32)
+    for i in range(1, rows.shape[0]):
+        acc = fn(acc, rows[i].astype(jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def reduce_tile(rows, op: str = "sum", *, block: int = 512):
+    """(T, N) -> (N,), N a multiple of 128; grid over N/block tiles."""
+    T, N = rows.shape
+    assert N % LANE == 0
+    blk = min(block, N)
+    while N % blk:
+        blk //= 2
+    grid = (N // blk,)
+    return pl.pallas_call(
+        functools.partial(_reduce_kernel, op=op),
+        grid=grid,
+        in_specs=[pl.BlockSpec((T, blk), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), rows.dtype),
+        interpret=_interpret(),
+    )(rows)

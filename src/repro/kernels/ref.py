@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BINOPS = {
+    "sum": jnp.add,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+    "prod": jnp.multiply,
+}
+
+
+def wg_copy(dst_row, src, offset: int):
+    """Copy src into dst_row at offset (the work-group put data movement)."""
+    return jnp.asarray(dst_row).at[offset:offset + src.size].set(src)
+
+
+def reduce_tile(rows, op: str = "sum"):
+    """(T, N) -> (N,): vector binary-op reduction over the team axis."""
+    fn = BINOPS[op]
+    acc = rows[0].astype(jnp.float32) if rows.dtype != jnp.int32 else rows[0]
+    for i in range(1, rows.shape[0]):
+        acc = fn(acc, rows[i].astype(acc.dtype))
+    return acc.astype(rows.dtype)
+
+
+def ring_allgather(shards):
+    """(npes, chunk...) per-device inputs -> (npes, npes*chunk...) outputs:
+    every device ends with every chunk, own chunk at slot == device index."""
+    npes = shards.shape[0]
+    full = shards.reshape((npes,) + shards.shape[1:])
+    return jnp.broadcast_to(full[None], (npes,) + full.shape)
+
+
+def ring_reduce_scatter(x):
+    """x: (npes, npes, chunk...) — device i holds addend rows for all chunks.
+    Returns (npes, chunk...): device i gets sum over devices of chunk i."""
+    total = x.sum(axis=0)                  # (npes, chunk...)
+    return total
+
+
+def ring_allreduce(x):
+    """x: (npes, n...) -> (npes, n...): every device gets the sum."""
+    s = x.sum(axis=0)
+    return jnp.broadcast_to(s[None], x.shape)
+
+
+def push_broadcast(x, root: int):
+    """x: (npes, n...) -> all rows replaced by row[root]."""
+    return jnp.broadcast_to(x[root][None], x.shape)
+
+
+def flash_attention(q, k, v):
+    """Causal attention oracle, equal heads.  q,k,v: (B,S,H,hd)."""
+    import jax
+    B, S, H, hd = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,225 @@
+"""Device-initiated ring collectives over ICI (paper §III-G2 -> TPU).
+
+All kernels are issued from *inside* a running Pallas kernel (the paper's
+"GPU-initiated" path) using ``make_async_remote_copy``; they run under
+shard_map and are validated on CPU in TPU interpret mode, and compile to real
+ICI RDMA on TPU.
+
+- ``ring_allgather``     : fcollect — N-1 ring steps, each forwarding the
+                           chunk received in the previous step.
+- ``ring_reduce_scatter``: large-reduction building block ("split the work by
+                           address across PEs and exchange results").
+- ``push_broadcast``     : root *stores* to every destination — the paper's
+                           push strategy with the inner loop over destinations.
+- ``barrier_push``       : semaphore signal to every teammate + local wait —
+                           the TPU analogue of the paper's pipelined remote
+                           atomic-increment sync.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _interpret():
+    return (pltpu.InterpretParams()
+            if jax.default_backend() != "tpu" else False)
+
+
+def _wait_incoming(ref, sem):
+    """Wait for an incoming DMA of ref's size (receiver-side recv wait)."""
+    pltpu.make_async_copy(ref, ref, sem).wait()
+
+
+# ---------------------------------------------------------------------------
+# ring all-gather (fcollect)
+# ---------------------------------------------------------------------------
+
+
+def _ag_kernel(x_ref, o_ref, local_sem, send_sem, recv_sems, *, axis_name,
+               npes):
+    my = jax.lax.axis_index(axis_name)
+    right = jax.lax.rem(my + 1, npes)
+    # place own chunk
+    cp = pltpu.make_async_copy(x_ref, o_ref.at[my], local_sem)
+    cp.start()
+    cp.wait()
+
+    def step(s, _):
+        src_slot = jax.lax.rem(my - s + npes, npes)
+        copy = pltpu.make_async_remote_copy(
+            o_ref.at[src_slot], o_ref.at[src_slot], send_sem,
+            recv_sems.at[s], device_id={axis_name: right},
+            device_id_type=pltpu.DeviceIdType.MESH)
+        copy.start()
+        copy.wait()          # sent my slot AND received left's slot for step s
+        return 0
+
+    jax.lax.fori_loop(0, npes - 1, step, 0)
+
+
+def ring_allgather(x, *, axis_name: str, npes: int):
+    """x: (chunk, ...) per PE -> (npes, chunk, ...): device-initiated fcollect.
+    Call inside shard_map."""
+    kernel = functools.partial(_ag_kernel, axis_name=axis_name, npes=npes)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((npes,) + x.shape, x.dtype),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
+                        pltpu.SemaphoreType.DMA((npes - 1,))],
+        interpret=_interpret(),
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# ring reduce-scatter
+# ---------------------------------------------------------------------------
+
+
+def _rs_kernel(x_ref, o_ref, send_buf, recv_buf, acc_v, rcv_v, local_sem,
+               send_sem, recv_sems, *, axis_name, npes):
+    """Ring reduce-scatter step structure (TPU-idiomatic):
+
+      VMEM acc --local DMA--> HBM send_buf --remote DMA--> right's HBM
+      recv_buf[s] --local DMA--> VMEM, add next local addend, repeat.
+
+    recv_buf has one landing slot per step: a fast upstream sub-ring may run
+    arbitrarily far ahead of a slow PE (its progress is not gated on ours),
+    so a single landing buffer would be overwritten — per-step slots + per-step
+    recv semaphores make the pipeline race-free (same structure the all-gather
+    uses with its per-slot output writes).
+    """
+    my = jax.lax.axis_index(axis_name)
+    right = jax.lax.rem(my + 1, npes)
+    first = jax.lax.rem(my - 1 + npes, npes)
+    acc_v[...] = x_ref[first]
+
+    def step(s, _):
+        recv_idx = jax.lax.rem(my - 2 - s + 2 * npes, npes)
+        cp = pltpu.make_async_copy(acc_v, send_buf, local_sem)
+        cp.start()
+        cp.wait()
+        rcp = pltpu.make_async_remote_copy(
+            send_buf, recv_buf.at[s], send_sem, recv_sems.at[s],
+            device_id={axis_name: right}, device_id_type=pltpu.DeviceIdType.MESH)
+        rcp.start()
+        rcp.wait()                      # sent mine AND received left's partial
+        cp = pltpu.make_async_copy(recv_buf.at[s], rcv_v, local_sem)
+        cp.start()
+        cp.wait()
+        acc_v[...] = rcv_v[...] + x_ref[recv_idx]
+        return 0
+
+    jax.lax.fori_loop(0, npes - 1, step, 0)
+    o_ref[...] = acc_v[...]
+
+
+def ring_reduce_scatter(x, *, axis_name: str, npes: int):
+    """x: (npes, chunk...) addends per PE -> (chunk...): PE i returns the full
+    sum of chunk i.  Call inside shard_map."""
+    chunk_shape = x.shape[1:]
+    kernel = functools.partial(_rs_kernel, axis_name=axis_name, npes=npes)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(chunk_shape, x.dtype),           # result
+            jax.ShapeDtypeStruct(chunk_shape, x.dtype),           # send staging
+            jax.ShapeDtypeStruct((npes - 1,) + chunk_shape, x.dtype),  # landings
+        ),
+        out_specs=(
+            pl.BlockSpec(chunk_shape, lambda: (0,) * len(chunk_shape)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM(chunk_shape, x.dtype),   # acc
+            pltpu.VMEM(chunk_shape, x.dtype),   # recv (VMEM side)
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((npes - 1,)),
+        ],
+        interpret=_interpret(),
+    )(x)
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# push broadcast
+# ---------------------------------------------------------------------------
+
+
+def _bcast_kernel(x_ref, o_ref, local_sem, send_sem, recv_sem, *, axis_name,
+                  npes, root):
+    my = jax.lax.axis_index(axis_name)
+
+    @pl.when(my == root)
+    def _():
+        cp = pltpu.make_async_copy(x_ref, o_ref, local_sem)
+        cp.start()
+        cp.wait()
+
+        # the paper's push: inner loop over destinations (stores beat loads)
+        def send(i, _):
+            dst = jax.lax.rem(root + 1 + i, npes)
+            cp = pltpu.make_async_remote_copy(
+                x_ref, o_ref, send_sem, recv_sem, device_id={axis_name: dst},
+                device_id_type=pltpu.DeviceIdType.MESH)
+            cp.start()
+            cp.wait_send()
+            return 0
+
+        jax.lax.fori_loop(0, npes - 1, send, 0)
+
+    @pl.when(my != root)
+    def _():
+        _wait_incoming(o_ref, recv_sem)
+
+
+def push_broadcast(x, *, axis_name: str, npes: int, root: int = 0):
+    kernel = functools.partial(_bcast_kernel, axis_name=axis_name, npes=npes,
+                               root=root)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
+                        pltpu.SemaphoreType.DMA],
+        interpret=_interpret(),
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# push-style barrier (sync)
+# ---------------------------------------------------------------------------
+
+
+def _barrier_kernel(o_ref, sem, *, axis_name, npes):
+    my = jax.lax.axis_index(axis_name)
+
+    def send(i, _):
+        dst = jax.lax.rem(my + 1 + i, npes)
+        pltpu.semaphore_signal(sem, 1, device_id={axis_name: dst},
+                               device_id_type=pltpu.DeviceIdType.MESH)
+        return 0
+
+    jax.lax.fori_loop(0, npes - 1, send, 0)   # fire-and-forget increments
+    pltpu.semaphore_wait(sem, npes - 1)       # local wait on own counter
+    o_ref[0] = jnp.int32(1)
+
+
+def barrier_push(*, axis_name: str, npes: int):
+    """Returns 1 on every PE after all PEs arrive.  Call inside shard_map."""
+    kernel = functools.partial(_barrier_kernel, axis_name=axis_name, npes=npes)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.int32),
+        scratch_shapes=[pltpu.SemaphoreType.REGULAR],
+        interpret=_interpret(),
+    )()

@@ -1,0 +1,116 @@
+"""Work-group collaborative RMA copy kernels (paper §III-F, Fig. 4).
+
+Two kernels:
+
+- ``wg_copy_local``: the data-movement body of ``ishmemx_put_work_group`` —
+  a tiled VMEM copy where the grid dimension plays the SYCL work-group role
+  (more programs <=> more work-items <=> more outstanding bytes).  The target
+  offset arrives by scalar prefetch, exactly how a TPU kernel computes DMA
+  addresses from a symmetric-heap base.
+
+- ``remote_put``: the device-initiated remote put — ``make_async_remote_copy``
+  over ICI to a target PE, issued from inside a running kernel with
+  ``work_items`` outstanding DMA slices (the TPU analogue of N work-items
+  driving Xe-Link stores).  Runs under shard_map; validated in TPU interpret
+  mode on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+
+
+def _interpret():
+    return (pltpu.InterpretParams()
+            if jax.default_backend() != "tpu" else False)
+
+
+# ---------------------------------------------------------------------------
+# local tiled copy (the work-group put body)
+# ---------------------------------------------------------------------------
+
+
+def _copy_block_kernel(off_ref, src_ref, dst_in_ref, dst_ref):
+    del off_ref, dst_in_ref
+    dst_ref[...] = src_ref[...]
+
+
+def wg_copy_local(dst_row, src, offset, *, work_items: int = 8):
+    """Copy ``src`` (len multiple of 128) into ``dst_row`` at ``offset``
+    (multiple of the block size).  Grid = work_items programs."""
+    n = src.shape[0]
+    assert n % LANE == 0, "RMA sizes are lane (128) aligned"
+    g = max(1, min(work_items, n // LANE))
+    while n % (g * LANE):
+        g -= 1
+    blk = n // g
+    assert offset % blk == 0, "offset must be block aligned (ALIGN=128 heap)"
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i, off: (i,)),
+            pl.BlockSpec((blk,), lambda i, off: (off[0] // blk + i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i, off: (off[0] // blk + i,)),
+    )
+    return pl.pallas_call(
+        _copy_block_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst_row.shape, dst_row.dtype),
+        input_output_aliases={2: 0},     # dst_in -> out (untouched blocks keep)
+        interpret=_interpret(),
+    )(jnp.asarray([offset], jnp.int32), src, dst_row)
+
+
+# ---------------------------------------------------------------------------
+# device-initiated remote put (inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+def _remote_put_kernel(x_ref, o_ref, send_sem, recv_sem, *, axis_name,
+                       target_offset, npes, work_items):
+    my = jax.lax.axis_index(axis_name)
+    tgt = jax.lax.rem(my + target_offset, npes)
+    n = x_ref.shape[0]
+    w = max(1, min(work_items, n // LANE))
+    blk = n // w
+    # issue `w` outstanding remote DMA slices — the work-item knob
+    for i in range(w):
+        sl = pl.ds(i * blk, blk)
+        pltpu.make_async_remote_copy(
+            x_ref.at[sl], o_ref.at[sl], send_sem, recv_sem,
+            device_id={axis_name: tgt},
+            device_id_type=pltpu.DeviceIdType.MESH,
+        ).start()
+    for i in range(w):
+        sl = pl.ds(i * blk, blk)
+        pltpu.make_async_remote_copy(
+            x_ref.at[sl], o_ref.at[sl], send_sem, recv_sem,
+            device_id={axis_name: tgt},
+            device_id_type=pltpu.DeviceIdType.MESH,
+        ).wait()
+
+
+def remote_put(x, *, axis_name: str, npes: int, target_offset: int = 1,
+               work_items: int = 1):
+    """Every PE puts its buffer into PE (me+target_offset)'s output buffer.
+    Call inside shard_map over ``axis_name``."""
+    kernel = functools.partial(
+        _remote_put_kernel, axis_name=axis_name,
+        target_offset=target_offset, npes=npes, work_items=work_items)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA],
+        interpret=_interpret(),
+    )(x)

@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (architecture x input-shape x mesh)
+combination against the production meshes, with NO real allocation
+(ShapeDtypeStruct inputs), and record memory/cost/collective analysis.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod both] --out experiments/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgbase
+from repro.launch import mesh as mesh_mod, policy as policy_mod, sharding, \
+    shardctx
+from repro.models import model
+from repro.roofline import hlo_parser
+from repro.train import optimizer as opt_mod, train_step as ts_mod
+
+
+def _eval_struct(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def build_step(cfg, shape, mesh):
+    """Returns (jitted_fn, example_args (SDS pytree), donate)."""
+    specs = cfgbase.input_specs(cfg, shape)
+    if shape.kind == "train":
+        params_s = _eval_struct(
+            lambda: model.init_params(jax.random.key(0), cfg))
+        opt_s = _eval_struct(lambda: opt_mod.init(cfg.optimizer,
+                                                  params_s))
+        step = ts_mod.make_train_step(
+            cfg, opt_mod.OptConfig(name=cfg.optimizer))
+        p_sh = sharding.param_shardings(cfg, mesh, params_s)
+        o_sh = sharding.opt_shardings(cfg, mesh, opt_s)
+        b_sh = sharding.batch_shardings(cfg, mesh, specs)
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+        return fn, (params_s, opt_s, specs)
+    params_s = _eval_struct(lambda: model.init_params(jax.random.key(0), cfg))
+    p_sh = sharding.param_shardings(cfg, mesh, params_s)
+    if shape.kind == "prefill":
+        cache_s = cfgbase.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        c_sh = sharding.cache_shardings(cfg, mesh, cache_s)
+        batch = {k: v for k, v in specs.items()}
+        b_sh = sharding.batch_shardings(cfg, mesh, batch)
+
+        def step(params, batch, cache):
+            return model.prefill(params, cfg, batch, cache)
+
+        fn = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(2,))
+        return fn, (params_s, batch, cache_s)
+    # decode
+    cache_s = specs["cache"]
+    c_sh = sharding.cache_shardings(cfg, mesh, cache_s)
+    tok_sh = sharding.batch_shardings(cfg, mesh, {
+        "token": specs["token"], "pos": specs["pos"]})
+
+    def step(params, token, pos, cache):
+        return model.decode_step(params, cfg, token, pos, cache)
+
+    fn = jax.jit(step,
+                 in_shardings=(p_sh, tok_sh["token"], tok_sh["pos"], c_sh),
+                 out_shardings=(None, c_sh), donate_argnums=(3,))
+    return fn, (params_s, specs["token"], specs["pos"], cache_s)
+
+
+def model_flops(cfg, shape):
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch   # decode: 1 token per seq
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            save_hlo: bool = False, policy: "policy_mod.PerfPolicy" = None,
+            tag: str = ""):
+    cfg = cfgbase.get_config(arch)
+    shape = cfgbase.SHAPES[shape_name]
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag}
+    if not cfgbase.shape_applicable(cfg, shape):
+        rec["status"] = "skipped (full-attention arch at 500k context)"
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            with open(os.path.join(
+                    out_dir, f"{arch}.{shape_name}.{mesh_tag}{tag}.json"),
+                    "w") as f:
+                json.dump(rec, f, indent=2)
+        return rec
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    nchips = mesh.devices.size
+    t0 = time.time()
+    pol = policy or policy_mod.PerfPolicy()
+    rec["policy"] = dataclasses_asdict(pol)
+    try:
+        with mesh, shardctx.rules(sharding.activation_rules(cfg, mesh)), \
+                policy_mod.use(pol):
+            fn, args = build_step(cfg, shape, mesh)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        parsed = hlo_parser.analyze(hlo, num_partitions=nchips)
+        rec.update({
+            "status": "ok",
+            "chips": nchips,
+            "t_lower_s": round(t_lower, 2),
+            "t_compile_s": round(t_compile, 2),
+            "memory": {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            },
+            "cost_analysis": {k: float(v) for k, v in (cost or {}).items()
+                              if k in ("flops", "bytes accessed",
+                                       "transcendentals", "optimal_seconds")},
+            "hlo_parsed": parsed,
+            "model_flops": model_flops(cfg, shape),
+            "params_total": cfg.param_count(),
+            "params_active": cfg.param_count(active_only=True),
+            "hlo_chars": len(hlo),
+        })
+        if save_hlo:
+            os.makedirs(out_dir, exist_ok=True)
+            with open(os.path.join(
+                    out_dir,
+                    f"{arch}.{shape_name}.{mesh_tag}{tag}.hlo"), "w") as f:
+                f.write(hlo)
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_tag}: OK "
+              f"(compile {t_compile:.1f}s, "
+              f"temp {rec['memory'].get('temp_size_in_bytes', 0)/2**30:.2f} GiB)",
+              flush=True)
+    except Exception as e:
+        rec["status"] = f"error: {type(e).__name__}: {str(e)[:2000]}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_tag}: "
+              f"FAILED {type(e).__name__}: {str(e)[:200]}", flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(
+                out_dir, f"{arch}.{shape_name}.{mesh_tag}{tag}.json"),
+                "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+    return rec
+
+
+def dataclasses_asdict(pol):
+    import dataclasses as _dc
+    return _dc.asdict(pol)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", default="no", choices=["no", "yes", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--policy", action="append", default=None,
+                    help="PerfPolicy override k=v (repeatable)")
+    ap.add_argument("--tag", default="",
+                    help="artifact suffix for policy experiments")
+    args = ap.parse_args()
+    pol = policy_mod.parse_overrides(args.policy) if args.policy else None
+
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multipod]
+    archs = cfgbase.ARCH_NAMES if args.all or not args.arch else [args.arch]
+    shapes = (list(cfgbase.SHAPES) if args.all or not args.shape
+              else [args.shape])
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                results.append(run_one(arch, shape, mp, args.out,
+                                       args.save_hlo, policy=pol,
+                                       tag=args.tag))
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    skipped = sum(1 for r in results
+                  if str(r.get("status", "")).startswith("skipped"))
+    print(f"[dryrun] done: {ok} ok, {skipped} skipped, "
+          f"{len(results) - ok - skipped} failed / {len(results)} total")
+
+
+if __name__ == "__main__":
+    main()

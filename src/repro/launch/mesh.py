@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: (data=16, model=16) = 256 chips of a
+v5e pod; multi-pod adds a leading DCN "pod" axis (2 pods = 512 chips).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices=None, *, multi_pod: bool = False):
+    """Small mesh over however many host devices exist (tests)."""
+    n = len(devices or jax.devices())
+    if multi_pod and n >= 8:
+        return jax.make_mesh((2, 2, n // 4), ("pod", "data", "model"))
+    if n >= 4:
+        return jax.make_mesh((2, n // 2), ("data", "model"))
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis(mesh) -> str:
+    return "model"

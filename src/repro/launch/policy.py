@@ -1,0 +1,100 @@
+"""Performance policy knobs for the §Perf hillclimbing loop.
+
+Every knob is consumed somewhere in the model/sharding stack; the dry-run
+CLI can override any field (``--policy k=v``), so a hypothesis -> change ->
+re-lower -> re-analyse cycle is one command.
+
+Knobs (and the roofline term they target):
+
+- ``attn_block_q/k``     : KV-block sizes of blockwise attention  [memory]
+- ``attn_p_bf16``        : bf16 exp-score tensor (m/l stay f32)   [memory]
+- ``logits_bf16``        : bf16 CE logits (f32 logsumexp)         [memory]
+- ``ce_chunk``           : CE sequence chunk                      [memory]
+- ``fsdp_gather_weights``: constrain scanned layer weights to a
+  data-replicated spec inside the layer body, turning the data-axis
+  *activation all-reduces* that GSPMD otherwise inserts for
+  contraction-dim-sharded weights into per-layer *weight all-gathers*
+  (ZeRO-3 style)                                                  [collective]
+- ``moe_seq_shard``      : constrain MoE dispatch buffers to expert-
+  sharded layout                                                  [collective]
+- ``decode_replicate_small_cache``: replicate decode caches smaller than
+  ``small_cache_bytes`` instead of sharding them (1-token decode over a
+  windowed cache is latency-bound; gathers on sharded ring caches
+  trigger involuntary full rematerialization)                     [collective]
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfPolicy:
+    attn_impl: str = "blockwise"        # "blockwise" (XLA online-softmax
+                                        # scan) or "flash" (fused Pallas
+                                        # kernel, kernels/flash_attn.py;
+                                        # interpret on CPU, Mosaic on TPU)
+    attn_block_q: int = 512
+    attn_block_k: int = 512
+    attn_p_bf16: bool = False
+    attn_qk_bf16: bool = False          # keep q/k bf16 into the score dot
+                                        # (f32 via preferred_element_type,
+                                        # MXU-native)  [memory+collective]
+    logits_bf16: bool = False
+    ce_chunk: int = 512
+    fsdp_gather_weights: bool = False
+    param_tp_only: bool = False         # block weights sharded on "model"
+                                        # only (no ZeRO over "data"):
+                                        # trades HBM for wire  [collective]
+    attn_repeat_kv: bool = False        # replicate KV heads to nq so the
+                                        # head axis (divisible by 16) shards
+                                        # over "model" inside attention —
+                                        # Megatron GQA-TP duplication
+                                        # [collective]
+    hidden_spec: str = "replicated"     # residual-stream constraint between
+                                        # blocks: "replicated" (baseline:
+                                        # P(b,None,None)), "dshard"
+                                        # (P(b,None,model)), or "off" (let
+                                        # GSPMD propagate)      [collective]
+    seq_parallel_hidden: bool = False   # shard hidden seq over "model"
+                                        # between blocks (Megatron SP):
+                                        # all-reduce -> RS + AG   [collective]
+    moe_expert_shard: bool = False
+    decode_onehot_update: bool = False  # one-hot masked cache write instead
+                                        # of scatter: shard-local on a
+                                        # seq-sharded cache  [collective]
+    decode_replicate_small_cache: bool = False
+    small_cache_bytes: int = 1 << 30
+
+
+_CURRENT = PerfPolicy()
+
+
+def get() -> PerfPolicy:
+    return _CURRENT
+
+
+@contextlib.contextmanager
+def use(policy: PerfPolicy):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = policy
+    try:
+        yield
+    finally:
+        _CURRENT = prev
+
+
+def parse_overrides(pairs) -> PerfPolicy:
+    """['attn_p_bf16=1', 'attn_block_k=1024', ...] -> PerfPolicy."""
+    kw = {}
+    for pair in pairs or []:
+        k, v = pair.split("=", 1)
+        field = PerfPolicy.__dataclass_fields__[k]
+        if field.type in ("bool", bool):
+            kw[k] = v.lower() in ("1", "true", "yes")
+        elif field.type in ("str", str):
+            kw[k] = v
+        else:
+            kw[k] = int(v)
+    return PerfPolicy(**kw)

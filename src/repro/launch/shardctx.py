@@ -1,0 +1,34 @@
+"""Activation-sharding context.
+
+The model code is mesh-agnostic; the launcher installs a rule table here and
+``constrain(x, role)`` becomes ``with_sharding_constraint`` under a mesh, or a
+no-op on a bare CPU.  Roles: "hidden" (B,S,d), "logits" (B,C,V).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_RULES = None
+
+
+@contextlib.contextmanager
+def rules(rule_fn):
+    """rule_fn(role, shape) -> PartitionSpec | None."""
+    global _RULES
+    prev = _RULES
+    _RULES = rule_fn
+    try:
+        yield
+    finally:
+        _RULES = prev
+
+
+def constrain(x, role: str):
+    if _RULES is None:
+        return x
+    spec = _RULES(role, x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,42 @@
+"""Training launcher.
+
+CPU-scale (default): runs the real training loop on a reduced config.
+Pod-scale (--dryrun): lowers/compiles the same step for the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full architecture (pods); default reduced")
+    args = ap.parse_args()
+
+    from repro.configs import base as cfgbase
+    from repro.train import trainer
+
+    cfg = cfgbase.get_config(args.arch)
+    if not args.full_size:
+        cfg = cfgbase.reduced(cfg)
+    tcfg = trainer.TrainConfig(
+        steps=args.steps, seq_len=args.seq_len,
+        global_batch=args.global_batch, grad_accum=args.grad_accum,
+        lr=args.lr, ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+    trainer.train(cfg, tcfg, resume=args.resume)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""GQA attention: blockwise-causal (train/prefill), full (encoder/cross), and
+single-token decode against KV caches (dense or ring/SWA).
+
+Blockwise attention uses an online-softmax scan over KV blocks so that the
+lowered HLO never materializes an (S x S) score matrix — required for the
+32k-prefill dry-runs.  The KV-block scan is a `lax.scan`; the roofline HLO
+analyzer scales while-bodies by their known trip count.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, head_rms_norm
+
+NEG_INF = -1e30
+
+
+def init_attn(key, cfg, dtype, kv_input_dim=None):
+    d, nq, nkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    kvd = kv_input_dim or d
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, nq * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (kvd, nkv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (kvd, nkv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (nq * hd, d), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def project_q(p, x, cfg, positions=None):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.num_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p["q_norm"])
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def project_kv(p, x, cfg, positions=None):
+    B, S, _ = x.shape
+    k = (x @ p["wk"]).reshape(B, S, cfg.num_kv_heads, cfg.hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.num_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        k = head_rms_norm(k, p["k_norm"])
+    if positions is not None:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def _pick_block(s, want):
+    b = min(want, s)
+    while s % b:
+        b -= 1
+    return max(b, 1)
+
+
+def blockwise_causal_attn(q, k, v, *, window=None, block_q=None,
+                          block_k=None):
+    """Online-softmax causal attention.  q: (B,S,nq,hd); k,v: (B,S,nkv,hd)."""
+    from repro.launch import policy as policy_mod
+    pol = policy_mod.get()
+    block_q = block_q or pol.attn_block_q
+    block_k = block_k or pol.attn_block_k
+    p_dtype = jnp.bfloat16 if pol.attn_p_bf16 else jnp.float32
+    B, S, nq, hd = q.shape
+    nkv = k.shape[2]
+    g = nq // nkv
+    bq = _pick_block(S, block_q)
+    bk = _pick_block(S, block_k)
+    nqb, nkb = S // bq, S // bk
+    scale = hd ** -0.5
+    qb = q.reshape(B, nqb, bq, nkv, g, hd)
+    kb = k.reshape(B, nkb, bk, nkv, hd)
+    vb = v.reshape(B, nkb, bk, nkv, hd)
+    qk_bf16 = pol.attn_qk_bf16
+    outs = []
+    for qi in range(nqb):
+        if qk_bf16:
+            q_i = qb[:, qi]                               # bf16 into the MXU
+        else:
+            q_i = qb[:, qi].astype(jnp.float32) * scale   # (B,bq,nkv,g,hd)
+        q_start = qi * bq
+        qpos = q_start + jnp.arange(bq)
+        k_hi = min(nkb, (q_start + bq + bk - 1) // bk)    # exclusive
+        k_lo = 0 if window is None else max(0, q_start - int(window) + 1) // bk
+
+        def step(carry, kj, q_i=q_i, qpos=qpos):
+            m, l, acc = carry
+            k_j = jax.lax.dynamic_index_in_dim(kb, kj, 1, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vb, kj, 1, keepdims=False)
+            if qk_bf16:
+                s = jnp.einsum("bqkgh,bskh->bkgqs", q_i, k_j,
+                               preferred_element_type=jnp.float32) * scale
+            else:
+                s = jnp.einsum("bqkgh,bskh->bkgqs", q_i,
+                               k_j.astype(jnp.float32))
+            kpos = kj * bk + jnp.arange(bk)
+            mask = kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - int(window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            # policy: the big exp-score tensor may be bf16 (m/l stay f32)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(p_dtype),
+                v_j.astype(p_dtype), preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, nkv, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, nkv, g, bq), jnp.float32)
+        a0 = jnp.zeros((B, nkv, g, bq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                      jnp.arange(k_lo, k_hi))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]        # (B,nkv,g,bq,hd)
+        outs.append(o.transpose(0, 3, 1, 2, 4).reshape(B, bq, nq, hd))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def full_attn(q, k, v, mask=None):
+    """Unblocked attention for short KV (encoder / cross-attn / decode).
+
+    q: (B,Sq,nq,hd); k,v: (B,Skv,nkv,hd); mask: broadcastable to
+    (B,nkv,g,Sq,Skv) or (B,Skv).
+    """
+    B, Sq, nq, hd = q.shape
+    nkv = k.shape[2]
+    g = nq // nkv
+    qf = q.reshape(B, Sq, nkv, g, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    if mask is not None:
+        if mask.ndim == 2:                                # (B,Skv) validity
+            mask = mask[:, None, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bkgqh", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, nq, hd).astype(q.dtype)
+
+
+def decode_attn(q, k_cache, v_cache, valid_mask):
+    """One-token attention against a cache.  q: (B,1,nq,hd);
+    k_cache/v_cache: (B,S,nkv,hd); valid_mask: (B,S) bool."""
+    return full_attn(q, k_cache, v_cache, mask=valid_mask)

@@ -1,0 +1,105 @@
+"""KV / recurrent-state caches.
+
+Cache layout mirrors the model's scan structure: one entry per repeat-unit
+position, every leaf stacked over the R unit repeats on axis 0.
+
+Self-attention caches are *dense* (seq_len slots, validity = slot <= pos) or
+*ring* (window slots + an explicit per-slot position array) when the
+architecture is sub-quadratic at that context length (SWA; hybrid @ 500k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgbase
+from repro.models import ssm as ssm_mod
+
+
+def self_cache_len(cfg, seq_len: int) -> int:
+    if cfg.attention == "swa":
+        return min(cfg.window, seq_len)
+    if cfg.family == "hybrid" and seq_len > 65_536:
+        return min(cfg.window, seq_len)   # zamba2 shared-attn windowed @ 500k
+    return seq_len
+
+
+def is_ring(cfg, seq_len: int) -> bool:
+    return self_cache_len(cfg, seq_len) < seq_len
+
+
+def _entry(kind, cfg, batch, seq_len, make):
+    """make(shape, dtype) -> leaf (ShapeDtypeStruct or zeros)."""
+    nkv, hd, dt = cfg.num_kv_heads, cfg.hd, cfg.dtype
+    W = self_cache_len(cfg, seq_len)
+    if kind in ("attn", "moe", "shared_attn", "encdec"):
+        e = {
+            "k": make((batch, W, nkv, hd), dt),
+            "v": make((batch, W, nkv, hd), dt),
+        }
+        if is_ring(cfg, seq_len):
+            e["kpos"] = make((batch, W), jnp.int32)
+        if kind == "encdec":
+            e["ck"] = make((batch, cfg.encoder_seq, nkv, hd), dt)
+            e["cv"] = make((batch, cfg.encoder_seq, nkv, hd), dt)
+        return e
+    if kind == "cross":
+        return {
+            "ck": make((batch, cfg.image_tokens, nkv, hd), dt),
+            "cv": make((batch, cfg.image_tokens, nkv, hd), dt),
+        }
+    if kind == "mamba":
+        d_in, p, nh, N = ssm_mod.mamba_dims(cfg)
+        conv_dim = d_in + 2 * N
+        return {
+            "state": make((batch, nh, p, N), jnp.float32),
+            "conv": make((batch, cfg.ssm_conv - 1, conv_dim), jnp.float32),
+        }
+    if kind == "mlstm":
+        d_in, nh, dk = ssm_mod.mlstm_dims(cfg)
+        return {
+            "C": make((batch, nh, dk, dk), jnp.float32),
+            "n": make((batch, nh, dk), jnp.float32),
+            "m": make((batch, nh), jnp.float32),
+        }
+    if kind == "slstm":
+        d = cfg.d_model
+        return {
+            "c": make((batch, d), jnp.float32),
+            "n": make((batch, d), jnp.float32),
+            "m": make((batch, d), jnp.float32),
+            "h": make((batch, d), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def _stacked(cfg, batch, seq_len, make):
+    unit, reps = cfgbase.repeat_unit(cfg)
+    blocks = []
+    for kind in unit:
+        entry = _entry(kind, cfg, batch, seq_len, make)
+        blocks.append(jax.tree.map(
+            lambda leaf: _prepend_axis(leaf, reps, make), entry))
+    return {"blocks": blocks}
+
+
+def _prepend_axis(leaf, reps, make):
+    shape = (reps,) + tuple(leaf.shape)
+    return make(shape, leaf.dtype)
+
+
+def cache_struct(cfg, batch: int, seq_len: int):
+    make = lambda shape, dtype: jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+    return _stacked(cfg, batch, seq_len, make)
+
+
+def init_cache(cfg, batch: int, seq_len: int):
+    def make(shape, dtype):
+        return jnp.zeros(shape, dtype)
+
+    cache = _stacked(cfg, batch, seq_len, make)
+    # ring caches track per-slot positions; -1 == empty
+    for blk in cache["blocks"]:
+        if "kpos" in blk:
+            blk["kpos"] = jnp.full(blk["kpos"].shape, -1, jnp.int32)
+    return cache

@@ -1,0 +1,452 @@
+"""Model assembly for all assigned architecture families.
+
+Pure init/apply: ``init_params(rng, cfg)`` builds a nested-dict pytree whose
+per-layer blocks are stacked over the repeat units of ``layer_kinds(cfg)``;
+forward passes scan over the repeats (``lax.scan``; the roofline analyzer
+accounts for trip counts).
+
+Three step kinds:
+  - ``train_loss``   : full-sequence teacher-forced LM loss (chunked CE head)
+  - ``prefill``      : full-sequence forward that fills the decode cache
+  - ``decode_step``  : ONE token against the cache
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgbase
+from repro.models import attention as attn_mod
+from repro.models import kvcache, moe as moe_mod, ssm as ssm_mod
+from repro.models.layers import (apply_mlp, dense_init, init_mlp, rms_norm)
+from repro.launch import shardctx
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, kind, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if kind in ("attn", "shared_attn"):
+        p = {"norm1": jnp.ones((d,), dtype),
+             "attn": attn_mod.init_attn(ks[0], cfg, dtype)}
+        if cfg.d_ff:
+            p["norm2"] = jnp.ones((d,), dtype)
+            p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_type, dtype)
+        return p
+    if kind == "moe":
+        return {"norm1": jnp.ones((d,), dtype),
+                "attn": attn_mod.init_attn(ks[0], cfg, dtype),
+                "norm2": jnp.ones((d,), dtype),
+                "moe": moe_mod.init_moe(ks[1], cfg, dtype)}
+    if kind == "encdec":
+        return {"norm1": jnp.ones((d,), dtype),
+                "attn": attn_mod.init_attn(ks[0], cfg, dtype),
+                "norm_x": jnp.ones((d,), dtype),
+                "cross": attn_mod.init_attn(ks[1], cfg, dtype),
+                "norm2": jnp.ones((d,), dtype),
+                "mlp": init_mlp(ks[2], d, cfg.d_ff, cfg.mlp_type, dtype)}
+    if kind == "cross":
+        return {"norm1": jnp.ones((d,), dtype),
+                "cross": attn_mod.init_attn(ks[0], cfg, dtype),
+                "gate": jnp.zeros((), jnp.float32),
+                "norm2": jnp.ones((d,), dtype),
+                "mlp": init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_type, dtype)}
+    if kind == "mamba":
+        return ssm_mod.init_mamba(key, cfg, dtype)
+    if kind == "mlstm":
+        return ssm_mod.init_mlstm(key, cfg, dtype)
+    if kind == "slstm":
+        return ssm_mod.init_slstm(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def init_params(rng, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    unit, reps = cfgbase.repeat_unit(cfg)
+    keys = jax.random.split(rng, 8)
+    params = {
+        "embed": dense_init(keys[0], (cfg.vocab_size, cfg.d_model),
+                            scale=0.02, dtype=dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            keys[1], (cfg.d_model, cfg.vocab_size), dtype=dtype)
+
+    blocks = []
+    for i, kind in enumerate(unit):
+        if kind == "shared_attn":
+            # zamba2: ONE weight-shared attention block used at every repeat
+            params["shared_attn"] = _init_block(
+                jax.random.fold_in(keys[2], i), kind, cfg, dtype)
+            blocks.append({})          # placeholder slot in the scanned stack
+            continue
+        bkeys = jax.random.split(jax.random.fold_in(keys[2], i), reps)
+        blocks.append(jax.vmap(
+            lambda k: _init_block(k, kind, cfg, dtype))(bkeys))
+    params["blocks"] = blocks
+
+    if cfg.family == "audio":
+        ekeys = jax.random.split(keys[3], cfg.encoder_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(
+                lambda k: _init_block(k, "attn", cfg, dtype))(ekeys),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Per-block apply
+# ---------------------------------------------------------------------------
+
+
+def _self_attention(bp, x, cfg, mode, positions, cache, pos):
+    """Shared self-attention for attn/moe/encdec blocks.
+
+    Returns (attn_out, new_cache_entries|{}).
+    """
+    from repro.launch import policy as policy_mod
+    p = bp["attn"]
+    flat = lambda o: o.reshape(o.shape[0], o.shape[1], -1)
+    window = cfg.window if cfg.attention == "swa" else None
+
+    def maybe_repeat(k, v):
+        # Megatron GQA-TP duplication: replicate KV heads to nq so the head
+        # axis divides the model-axis size and attention shards head-local
+        if policy_mod.get().attn_repeat_kv and cfg.q_per_kv > 1:
+            k = jnp.repeat(k, cfg.q_per_kv, axis=2)
+            v = jnp.repeat(v, cfg.q_per_kv, axis=2)
+        return k, v
+
+    if mode in ("train", "prefill"):
+        q = attn_mod.project_q(p, x, cfg, positions)
+        k, v = attn_mod.project_kv(p, x, cfg, positions)
+        kr, vr = maybe_repeat(k, v)
+        S = x.shape[1]
+        use_blockwise = S > 1024 or window is not None
+        if (policy_mod.get().attn_impl == "flash" and window is None):
+            # fused Pallas kernel: scores never leave VMEM
+            from repro.kernels import ops as kops
+            pol = policy_mod.get()
+            o = kops.flash_attention(q, kr, vr,
+                                     block_q=min(pol.attn_block_q, 256),
+                                     block_k=min(pol.attn_block_k, 256))
+        elif use_blockwise:
+            o = attn_mod.blockwise_causal_attn(q, kr, vr, window=window)
+        else:
+            B = x.shape[0]
+            causal = jnp.tril(jnp.ones((S, S), bool))
+            o = attn_mod.full_attn(q, kr, vr,
+                                   mask=causal[None, None, None])
+        new = {}
+        if mode == "prefill" and cache is not None:
+            W = cache["k"].shape[1]
+            if "kpos" not in cache:     # dense cache (W >= S)
+                if W == S:
+                    new["k"] = k.astype(cache["k"].dtype)
+                    new["v"] = v.astype(cache["v"].dtype)
+                else:
+                    new["k"] = jnp.zeros_like(cache["k"]).at[:, :S].set(
+                        k.astype(cache["k"].dtype))
+                    new["v"] = jnp.zeros_like(cache["v"]).at[:, :S].set(
+                        v.astype(cache["v"].dtype))
+            else:                       # ring: keep the last min(W,S) positions
+                T = min(W, S)
+                kpos = jnp.arange(S - T, S)
+                slots = kpos % W
+                new["k"] = jnp.zeros_like(cache["k"]).at[:, slots].set(
+                    k[:, S - T:].astype(cache["k"].dtype))
+                new["v"] = jnp.zeros_like(cache["v"]).at[:, slots].set(
+                    v[:, S - T:].astype(cache["v"].dtype))
+                new["kpos"] = jnp.full_like(cache["kpos"], -1).at[:, slots].set(
+                    kpos.astype(jnp.int32))
+        return (flat(o) @ p["wo"]), new
+
+    # ---- decode ------------------------------------------------------------
+    B = x.shape[0]
+    q = attn_mod.project_q(p, x, cfg, pos[:, None])
+    k, v = attn_mod.project_kv(p, x, cfg, pos[:, None])
+    W = cache["k"].shape[1]
+    onehot_update = policy_mod.get().decode_onehot_update
+
+    def write(buf, value, slot):
+        """Insert value (B,nkv,hd) at buf[:, slot] — scatter (baseline) or a
+        one-hot masked select that stays shard-local on a seq-sharded cache."""
+        if onehot_update:
+            hot = jnp.arange(W)[None, :] == slot[:, None]          # (B,W)
+            return jnp.where(hot[..., None, None],
+                             value[:, None].astype(buf.dtype), buf)
+        return buf.at[jnp.arange(B), slot].set(value.astype(buf.dtype))
+
+    if "kpos" in cache:                 # ring (SWA / windowed-hybrid)
+        slot = pos % W
+        k_cache = write(cache["k"], k[:, 0], slot)
+        v_cache = write(cache["v"], v[:, 0], slot)
+        if onehot_update:
+            hot = jnp.arange(W)[None, :] == slot[:, None]
+            kpos = jnp.where(hot, pos[:, None], cache["kpos"])
+        else:
+            kpos = cache["kpos"].at[jnp.arange(B), slot].set(pos)
+        valid = (kpos >= 0) & (kpos > (pos - W)[:, None]) & \
+                (kpos <= pos[:, None])
+        new = {"k": k_cache, "v": v_cache, "kpos": kpos}
+    else:                               # dense
+        k_cache = write(cache["k"], k[:, 0], pos)
+        v_cache = write(cache["v"], v[:, 0], pos)
+        valid = jnp.arange(W)[None, :] <= pos[:, None]
+        new = {"k": k_cache, "v": v_cache}
+    kr, vr = maybe_repeat(k_cache, v_cache)
+    o = attn_mod.decode_attn(q, kr, vr, valid)
+    return (flat(o) @ p["wo"]), new
+
+
+def _cross_attention(bp, x, cfg, mode, kv_source=None, cache=None):
+    """Cross-attention (whisper decoder / vlm image layers).
+
+    kv_source: (B, Skv, d) encoder output or image embeddings (prefill/train);
+    at decode the projected KV comes from the cache.
+    Returns (out, new_cache_entries).
+    """
+    p = bp["cross"]
+    q = attn_mod.project_q(p, x, cfg, None)
+    if mode in ("train", "prefill"):
+        ck, cv = attn_mod.project_kv(p, kv_source, cfg, None)
+        new = {}
+        if mode == "prefill" and cache is not None:
+            new = {"ck": ck.astype(cache["ck"].dtype),
+                   "cv": cv.astype(cache["cv"].dtype)}
+    else:
+        ck, cv = cache["ck"], cache["cv"]
+        new = {"ck": ck, "cv": cv}
+    o = attn_mod.full_attn(q, ck, cv)
+    return (o.reshape(o.shape[0], o.shape[1], -1) @ p["wo"]), new
+
+
+def apply_block(kind, bp, x, *, cfg, mode, positions=None, cache=None,
+                enc_out=None, image_embeds=None, pos=None):
+    """Returns (x_out, new_cache_entry, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+
+    if kind in ("attn", "shared_attn", "moe", "encdec"):
+        h = rms_norm(x, bp["norm1"])
+        o, nc = _self_attention(bp, h, cfg, mode, positions, cache, pos)
+        x = x + o
+        new_cache.update(nc)
+        if kind == "encdec":
+            h = rms_norm(x, bp["norm_x"])
+            o, nc = _cross_attention(bp, h, cfg, mode, enc_out,
+                                     cache)
+            x = x + o
+            new_cache.update(nc)
+        if kind == "moe":
+            h = rms_norm(x, bp["norm2"])
+            B, S, d = h.shape
+            y, aux = moe_mod.moe_ffn(bp["moe"], h.reshape(B * S, d), cfg)
+            x = x + y.reshape(B, S, d)
+        elif cfg.d_ff:
+            h = rms_norm(x, bp["norm2"])
+            x = x + apply_mlp(bp["mlp"], h, cfg.mlp_type)
+        return x, new_cache, aux
+
+    if kind == "cross":
+        h = rms_norm(x, bp["norm1"])
+        o, nc = _cross_attention(bp, h, cfg, mode, image_embeds, cache)
+        x = x + jnp.tanh(bp["gate"]).astype(x.dtype) * o
+        new_cache.update(nc)
+        h = rms_norm(x, bp["norm2"])
+        x = x + apply_mlp(bp["mlp"], h, cfg.mlp_type)
+        return x, new_cache, aux
+
+    if kind == "mamba":
+        h = rms_norm(x, bp["norm"])
+        if mode == "decode":
+            y, state, conv = ssm_mod.mamba_decode(
+                bp, h, cfg, cache["state"], cache["conv"])
+            return x + y, {"state": state, "conv": conv}, aux
+        y, state, conv = ssm_mod.mamba_forward(bp, h, cfg)
+        if mode == "prefill":
+            new_cache = {"state": state, "conv": conv}
+        return x + y, new_cache, aux
+
+    if kind == "mlstm":
+        h = rms_norm(x, bp["norm"])
+        if mode == "decode":
+            y, st = ssm_mod.mlstm_decode(bp, h, cfg,
+                                         (cache["C"], cache["n"], cache["m"]))
+            return x + y, {"C": st[0], "n": st[1], "m": st[2]}, aux
+        y, st = ssm_mod.mlstm_forward(bp, h, cfg)
+        if mode == "prefill":
+            new_cache = {"C": st[0], "n": st[1], "m": st[2]}
+        return x + y, new_cache, aux
+
+    if kind == "slstm":
+        h = rms_norm(x, bp["norm"])
+        if mode == "decode":
+            y, st = ssm_mod.slstm_decode(
+                bp, h, cfg, (cache["c"], cache["n"], cache["m"], cache["h"]))
+            return x + y, dict(zip("cnmh", st)), aux
+        y, st = ssm_mod.slstm_forward(bp, h, cfg)
+        if mode == "prefill":
+            new_cache = dict(zip("cnmh", st))
+        return x + y, new_cache, aux
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Backbone scan over repeat units
+# ---------------------------------------------------------------------------
+
+
+def _encoder_forward(params, cfg, audio_embeds):
+    """Whisper audio encoder over stubbed frame embeddings (bidirectional)."""
+    enc = params["encoder"]
+    x = audio_embeds.astype(cfg.activation_dtype())
+
+    def body(x, bp):
+        h = rms_norm(x, bp["norm1"])
+        q = attn_mod.project_q(bp["attn"], h, cfg, None)
+        k, v = attn_mod.project_kv(bp["attn"], h, cfg, None)
+        o = attn_mod.full_attn(q, k, v)
+        x = x + o.reshape(o.shape[0], o.shape[1], -1) @ bp["attn"]["wo"]
+        h = rms_norm(x, bp["norm2"])
+        x = x + apply_mlp(bp["mlp"], h, cfg.mlp_type)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, enc["blocks"])
+    return rms_norm(x, enc["final_norm"])
+
+
+def backbone(params, cfg, x, *, mode, positions=None, cache=None,
+             enc_out=None, image_embeds=None, pos=None):
+    """x: (B,S,d) embedded inputs.  Returns (x, new_cache, aux)."""
+    unit, reps = cfgbase.repeat_unit(cfg)
+    shared = params.get("shared_attn")
+
+    from repro.launch import policy as policy_mod
+
+    def unit_body(carry, xs):
+        x, aux = carry
+        bstack, cstack = xs
+        new_entries = []
+        for i, kind in enumerate(unit):
+            bp = shared if kind == "shared_attn" else bstack[i]
+            if policy_mod.get().fsdp_gather_weights:
+                bp = jax.tree.map(
+                    lambda w: shardctx.constrain(w, "gathered_weight"), bp)
+            c = cstack[i] or None
+            x, nc, a = apply_block(
+                kind, bp, x, cfg=cfg, mode=mode, positions=positions,
+                cache=c, enc_out=enc_out, image_embeds=image_embeds, pos=pos)
+            new_entries.append(nc)
+            aux = aux + a
+        x = shardctx.constrain(x, "hidden")
+        return (x, aux), new_entries
+
+    if cfg.remat and mode == "train":
+        unit_body = jax.checkpoint(unit_body)
+
+    cache_blocks = (cache["blocks"] if cache is not None
+                    else [{} for _ in unit])
+    xs = (params["blocks"], cache_blocks)
+    (x, aux), new_blocks = jax.lax.scan(
+        unit_body, (x, jnp.zeros((), jnp.float32)), xs)
+    new_cache = {"blocks": new_blocks} if cache is not None else None
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg, tokens):
+    x = params["embed"][tokens].astype(cfg.activation_dtype())
+    return shardctx.constrain(x, "hidden")
+
+
+def _frontends(params, cfg, batch):
+    enc_out = None
+    image_embeds = None
+    if cfg.family == "audio":
+        enc_out = _encoder_forward(params, cfg, batch["audio_embeds"])
+    if cfg.family == "vlm":
+        image_embeds = batch["image_embeds"].astype(cfg.activation_dtype())
+    return enc_out, image_embeds
+
+
+def _lm_matrix(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def train_loss(params, cfg, batch):
+    """batch: tokens (B,S), labels (B,S) [+ frontend embeds].
+
+    Returns (loss, metrics).
+    """
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    enc_out, image_embeds = _frontends(params, cfg, batch)
+    x = _embed(params, cfg, tokens)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, _, aux = backbone(params, cfg, x, mode="train", positions=positions,
+                         enc_out=enc_out, image_embeds=image_embeds)
+    x = rms_norm(x, params["final_norm"])
+
+    from repro.launch import policy as policy_mod
+    pol = policy_mod.get()
+    W = _lm_matrix(params, cfg)
+    want = pol.ce_chunk
+    C = S if S <= want else max(c for c in (want, 512, 256, 128)
+                                if c <= want and S % c == 0)
+    nchunks = S // C
+    xc = x.reshape(B, nchunks, C, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nchunks, C).transpose(1, 0, 2)
+
+    def ce_chunk(tot, xs):
+        xi, li = xs
+        ldt = jnp.bfloat16 if pol.logits_bf16 else jnp.float32
+        logits = shardctx.constrain((xi @ W).astype(ldt), "logits")
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logits, li[..., None],
+                                 axis=-1)[..., 0].astype(jnp.float32)
+        return tot + jnp.sum(lse - ll), None
+
+    total, _ = jax.lax.scan(ce_chunk, jnp.zeros((), jnp.float32), (xc, lc))
+    ce = total / (B * S)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def prefill(params, cfg, batch, cache):
+    """Fill the cache from a full prompt; returns (last_logits, cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    enc_out, image_embeds = _frontends(params, cfg, batch)
+    x = _embed(params, cfg, tokens)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, new_cache, _ = backbone(params, cfg, x, mode="prefill",
+                               positions=positions, cache=cache,
+                               enc_out=enc_out, image_embeds=image_embeds)
+    x = rms_norm(x[:, -1:], params["final_norm"])
+    logits = (x @ _lm_matrix(params, cfg)).astype(jnp.float32)
+    return logits[:, 0], new_cache
+
+
+def decode_step(params, cfg, token, pos, cache):
+    """ONE token (B,1) at positions pos (B,) against the cache."""
+    x = _embed(params, cfg, token)
+    x, new_cache, _ = backbone(params, cfg, x, mode="decode",
+                               cache=cache, pos=pos)
+    x = rms_norm(x, params["final_norm"])
+    logits = (x @ _lm_matrix(params, cfg)).astype(jnp.float32)
+    return logits[:, 0], new_cache

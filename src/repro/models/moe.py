@@ -1,0 +1,87 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (GShard-style
+capacity, Megablox-style sort routing — no (T,E,C) one-hot dispatch tensor, so
+dry-run memory stays honest and HLO FLOPs ≈ active FLOPs).
+
+Supports top-k routing (k=1 llama4-scout, k=2 arctic) and an optional parallel
+dense-residual MLP (arctic) / shared expert (llama4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_mlp, apply_mlp, silu
+
+
+def init_moe(key, cfg, dtype):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), scale=d ** -0.5, dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, ff), dtype=dtype),
+        "w_up": dense_init(ks[2], (e, d, ff), dtype=dtype),
+        "w_down": dense_init(ks[3], (e, ff, d), dtype=dtype),
+    }
+    if cfg.moe_dense_ff:
+        p["dense_mlp"] = init_mlp(ks[4], d, cfg.moe_dense_ff, cfg.mlp_type, dtype)
+    return p
+
+
+def capacity(cfg, num_tokens: int) -> int:
+    c = int(cfg.capacity_factor * num_tokens * cfg.experts_per_token
+            / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_ffn(p, x, cfg):
+    """x: (T, d) -> (y: (T, d), aux_loss: scalar)."""
+    T, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    C = capacity(cfg, T)
+
+    logits = (x.astype(jnp.float32) @ p["router"])            # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, k)                # (T,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (Switch/GShard form) -------------------
+    me = probs.mean(0)                                        # (E,)
+    assign = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0)
+    ce = assign / (T * k)
+    aux = E * jnp.sum(me * ce) * cfg.router_aux_weight
+
+    # ---- sort-based dispatch -------------------------------------------------
+    flat_e = expert_idx.reshape(-1)                           # (T*k,)
+    order = jnp.argsort(flat_e)                               # stable
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))     # (E,)
+    rank_sorted = jnp.arange(T * k) - seg_start[sorted_e]
+    rank = jnp.zeros((T * k,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    keep = rank < C
+    slot = jnp.where(keep, rank, C)                           # dropped -> pad slot
+
+    tok_idx = jnp.repeat(jnp.arange(T), k)                    # (T*k,)
+    buf = jnp.zeros((E, C + 1, d), x.dtype)
+    buf = buf.at[flat_e, slot].set(x[tok_idx])
+    buf = buf[:, :C]                                          # (E,C,d)
+
+    # ---- expert computation (batched einsum over sharded expert dim) --------
+    if cfg.mlp_type == "swiglu":
+        h = silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * \
+            jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w_up"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])      # (E,C,d)
+
+    # ---- combine -------------------------------------------------------------
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((E, 1, d), out_buf.dtype)], axis=1)
+    routed = out_buf[flat_e, slot]                            # (T*k,d)
+    routed = jnp.where(keep[:, None], routed, 0)
+    y = (routed.reshape(T, k, d)
+         * gate[..., None].astype(routed.dtype)).sum(axis=1)
+
+    if "dense_mlp" in p:
+        y = y + apply_mlp(p["dense_mlp"], x, cfg.mlp_type)
+    return y.astype(x.dtype), aux

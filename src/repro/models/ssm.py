@@ -1,0 +1,397 @@
+"""State-space / recurrent blocks:
+
+- Mamba2 (SSD): chunked scan — intra-chunk quadratic form + inter-chunk linear
+  state recurrence (chunk = 64 keeps the (B,nh,L,L) decay tensor honest for
+  dry-run memory analysis).
+- mLSTM (xLSTM): chunked matrix-memory linear attention with exponential
+  gating and a running log-stabilizer (TFLA-style).
+- sLSTM (xLSTM): per-timestep `lax.scan` (true recurrent gates through h,
+  not parallelizable); the roofline analyzer scales the while body by its
+  trip count.
+
+All recurrences accumulate in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm, silu
+
+MAMBA_CHUNK = 64
+MLSTM_CHUNK = 64
+MAMBA_HEADDIM = 64
+
+
+def _chunk(s, want):
+    c = min(want, s)
+    while s % c:
+        c -= 1
+    return max(c, 1)
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+
+def mamba_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    p = MAMBA_HEADDIM if d_in % MAMBA_HEADDIM == 0 else max(
+        x for x in (32, 16, 8) if d_in % x == 0)
+    return d_in, p, d_in // p, cfg.ssm_state
+
+
+def init_mamba(key, cfg, dtype):
+    d = cfg.d_model
+    d_in, p, nh, N = mamba_dims(cfg)
+    conv_dim = d_in + 2 * N
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "wz": dense_init(ks[0], (d, d_in), dtype=dtype),
+        "wx": dense_init(ks[1], (d, d_in), dtype=dtype),
+        "wB": dense_init(ks[2], (d, N), dtype=dtype),
+        "wC": dense_init(ks[3], (d, N), dtype=dtype),
+        "wdt": dense_init(ks[4], (d, nh), dtype=dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv_w": dense_init(ks[5], (cfg.ssm_conv, conv_dim),
+                             scale=0.3, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "out_proj": dense_init(ks[6], (d_in, d), dtype=dtype),
+    }
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv as shifted adds.  x: (B,S,D); w: (K,D)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x) + b
+    for j in range(K):
+        shift = K - 1 - j
+        xs = x if shift == 0 else jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :-shift]
+        out = out + xs * w[j]
+    return out
+
+
+def _mamba_project(p, x, cfg):
+    d_in, hp, nh, N = mamba_dims(cfg)
+    z = x @ p["wz"]
+    xr = x @ p["wx"]
+    Bm = x @ p["wB"]
+    Cm = x @ p["wC"]
+    dt_raw = x @ p["wdt"]
+    return z, xr, Bm, Cm, dt_raw
+
+
+def mamba_forward(p, x, cfg, state=None, conv_cache=None):
+    """Full-sequence Mamba2.  x: (B,S,d).  Returns (y, final_state, conv_tail).
+
+    state: (B,nh,p,N) initial SSM state (zeros if None).
+    """
+    B, S, d = x.shape
+    d_in, hp, nh, N = mamba_dims(cfg)
+    z, xr, Bm, Cm, dt_raw = _mamba_project(p, x, cfg)
+
+    xBC = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    if conv_cache is not None:                    # continue from cached tail
+        xBC_full = jnp.concatenate([conv_cache.astype(xBC.dtype), xBC], 1)
+        conv = causal_conv(xBC_full, p["conv_w"], p["conv_b"])[:, conv_cache.shape[1]:]
+    else:
+        conv = causal_conv(xBC, p["conv_w"], p["conv_b"])
+    conv = silu(conv)
+    conv_tail = jnp.concatenate([jnp.zeros((B, cfg.ssm_conv - 1, xBC.shape[-1]),
+                                           xBC.dtype), xBC], 1)[:, -(cfg.ssm_conv - 1):]
+    xr = conv[..., :d_in]
+    Bm = conv[..., d_in:d_in + N].astype(jnp.float32)
+    Cm = conv[..., d_in + N:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,nh)
+    a = -jnp.exp(p["A_log"])                                          # (nh,)
+    dA = dt * a                                                       # (B,S,nh)
+    xh = xr.reshape(B, S, nh, hp).astype(jnp.float32)
+    xdt = xh * dt[..., None]                                          # (B,S,nh,p)
+
+    L = _chunk(S, MAMBA_CHUNK)
+    nc = S // L
+    # reshape into chunks
+    dA_c = dA.reshape(B, nc, L, nh)
+    x_c = xdt.reshape(B, nc, L, nh, hp)
+    B_c = Bm.reshape(B, nc, L, N)
+    C_c = Cm.reshape(B, nc, L, N)
+
+    cs = jnp.cumsum(dA_c, axis=2)                                     # (B,nc,L,nh)
+    tot = cs[:, :, -1]                                                # (B,nc,nh)
+
+    # intra-chunk (quadratic within chunk, like attention)
+    G = jnp.einsum("bcln,bcsn->bcls", C_c, B_c)                       # (B,nc,L,L)
+    idx = jnp.arange(L)
+    causal = idx[:, None] >= idx[None, :]
+    decay = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])      # (B,nc,L,L,nh)
+    W = jnp.where(causal[None, None, :, :, None], G[..., None] * decay, 0.0)
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", W, x_c)
+
+    # per-chunk local end-state: sum_s exp(tot - cs_s) x_s B_s^T
+    sdecay = jnp.exp(tot[:, :, None, :] - cs)                         # (B,nc,L,nh)
+    local_state = jnp.einsum("bclh,bclhp,bcln->bchpn", sdecay, x_c, B_c)
+
+    # inter-chunk recurrence over nc chunks
+    s0 = (jnp.zeros((B, nh, hp, N), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+
+    def step(carry, inp):
+        loc, ctot = inp                                # (B,nh,p,N), (B,nh)
+        new = carry * jnp.exp(ctot)[..., None, None] + loc
+        return new, carry                              # emit state *entering* chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step, s0,
+        (local_state.transpose(1, 0, 2, 3, 4), tot.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,nh,p,N)
+
+    y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                         C_c, prev_states, jnp.exp(cs))
+    y = (y_intra + y_inter).reshape(B, S, nh, hp)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = y * silu(z)
+    return y @ p["out_proj"], final_state, conv_tail
+
+
+def mamba_decode(p, x, cfg, state, conv_cache):
+    """Single-token step.  x: (B,1,d); state: (B,nh,p,N);
+    conv_cache: (B,K-1,conv_dim)."""
+    B, _, d = x.shape
+    d_in, hp, nh, N = mamba_dims(cfg)
+    z, xr, Bm, Cm, dt_raw = _mamba_project(p, x, cfg)
+    xBC = jnp.concatenate([xr, Bm, Cm], axis=-1)[:, 0]                # (B,conv_dim)
+    window = jnp.concatenate([conv_cache.astype(xBC.dtype),
+                              xBC[:, None]], 1)                       # (B,K,conv_dim)
+    conv = silu((window * p["conv_w"][None]).sum(1) + p["conv_b"])
+    new_conv_cache = window[:, 1:]
+
+    xr = conv[:, :d_in]
+    Bm = conv[:, d_in:d_in + N].astype(jnp.float32)
+    Cm = conv[:, d_in + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    a = -jnp.exp(p["A_log"])
+    xh = xr.reshape(B, nh, hp).astype(jnp.float32)
+
+    decay = jnp.exp(dt * a)                                           # (B,nh)
+    upd = jnp.einsum("bhp,bn->bhpn", xh * dt[..., None], Bm)
+    new_state = state.astype(jnp.float32) * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm, new_state)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, d_in).astype(x.dtype) * silu(z[:, 0])
+    return (y @ p["out_proj"])[:, None], new_state, new_conv_cache
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory cell)
+# ===========================================================================
+
+
+def mlstm_dims(cfg):
+    d_in = 2 * cfg.d_model
+    nh = cfg.num_heads
+    return d_in, nh, d_in // nh
+
+
+def init_mlstm(key, cfg, dtype):
+    d = cfg.d_model
+    d_in, nh, dk = mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "wx": dense_init(ks[0], (d, d_in), dtype=dtype),
+        "wz": dense_init(ks[1], (d, d_in), dtype=dtype),
+        "wq": dense_init(ks[2], (d_in, d_in), dtype=dtype),
+        "wk": dense_init(ks[3], (d_in, d_in), dtype=dtype),
+        "wv": dense_init(ks[4], (d_in, d_in), dtype=dtype),
+        "wi": dense_init(ks[5], (d_in, nh), scale=0.02, dtype=jnp.float32),
+        "wf": dense_init(ks[6], (d_in, nh), scale=0.02, dtype=jnp.float32),
+        "f_bias": jnp.full((nh,), 3.0, jnp.float32),   # open forget gates at init
+        "gnorm": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[7], (d_in, d), dtype=dtype),
+    }
+
+
+def _mlstm_qkvif(p, x, cfg):
+    B, S, _ = x.shape
+    d_in, nh, dk = mlstm_dims(cfg)
+    xi = x @ p["wx"]
+    z = x @ p["wz"]
+    q = (xi @ p["wq"]).reshape(B, S, nh, dk).astype(jnp.float32) * dk ** -0.5
+    k = (xi @ p["wk"]).reshape(B, S, nh, dk).astype(jnp.float32)
+    v = (xi @ p["wv"]).reshape(B, S, nh, dk).astype(jnp.float32)
+    i_g = xi.astype(jnp.float32) @ p["wi"]                          # (B,S,nh)
+    f_g = xi.astype(jnp.float32) @ p["wf"] + p["f_bias"]
+    return z, q, k, v, i_g, f_g
+
+
+def mlstm_forward(p, x, cfg, state=None):
+    """x: (B,S,d) -> (y, new_state).  state = (C,n,m)."""
+    B, S, d = x.shape
+    d_in, nh, dk = mlstm_dims(cfg)
+    z, q, k, v, i_g, f_g = _mlstm_qkvif(p, x, cfg)
+    logf = -jax.nn.softplus(-f_g)                                   # log sigmoid
+
+    L = _chunk(S, MLSTM_CHUNK)
+    nc = S // L
+    rs = lambda t: t.reshape((B, nc, L) + t.shape[2:])
+    qc, kc, vc = rs(q), rs(k), rs(v)
+    ic, fc = rs(i_g), rs(logf)
+    b = jnp.cumsum(fc, axis=2)                                      # (B,nc,L,nh)
+    btot = b[:, :, -1]                                              # (B,nc,nh)
+
+    if state is None:
+        C0 = jnp.zeros((B, nh, dk, dk), jnp.float32)
+        n0 = jnp.zeros((B, nh, dk), jnp.float32)
+        m0 = jnp.full((B, nh), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = [s.astype(jnp.float32) for s in state]
+
+    idx = jnp.arange(L)
+    causal = idx[:, None] >= idx[None, :]
+
+    def step(carry, inp):
+        C, n, m = carry
+        qq, kk, vv, ii, bb, bt = inp                                 # per-chunk
+        # log weights intra: g[t,s] = b_t - b_s + i_s   (s<=t)
+        g = bb[:, :, None, :] - bb[:, None, :, :] + ii[:, None, :, :]  # (B,L,L,nh)
+        g = jnp.where(causal[None, :, :, None], g, -1e30)
+        m_intra = g.max(axis=2)                                      # (B,L,nh)
+        m_inter = m[:, None] + bb                                    # (B,L,nh)
+        m_t = jnp.maximum(m_intra, m_inter)
+        w = jnp.exp(g - m_t[:, :, None, :])                          # (B,L,L,nh)
+        qk = jnp.einsum("blhd,bshd->blsh", qq, kk)                   # (B,L,L,nh)
+        wqk = qk * w
+        num = jnp.einsum("blsh,bshd->blhd", wqk, vv)
+        den = wqk.sum(axis=2)                                        # (B,L,nh)
+        carry_scale = jnp.exp(m_inter - m_t)                         # (B,L,nh)
+        num = num + carry_scale[..., None] * jnp.einsum("blhd,bhde->blhe", qq, C)
+        den = den + carry_scale * jnp.einsum("blhd,bhd->blh", qq, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # carry update to end of chunk
+        m_loc = (bt[:, None, :] - bb + ii).max(axis=1)               # (B,nh)
+        m_new = jnp.maximum(m + bt, m_loc)
+        sdecay = jnp.exp(bt[:, None, :] - bb + ii - m_new[:, None, :])  # (B,L,nh)
+        C_new = C * jnp.exp(m + bt - m_new)[..., None, None] + \
+            jnp.einsum("blh,blhd,blhe->bhde", sdecay, kk, vv)
+        n_new = n * jnp.exp(m + bt - m_new)[..., None] + \
+            jnp.einsum("blh,blhd->bhd", sdecay, kk)
+        return (C_new, n_new, m_new), h
+
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), ic.transpose(1, 0, 2, 3),
+          b.transpose(1, 0, 2, 3), btot.transpose(1, 0, 2))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, dk)
+    h = h.reshape(B, S, d_in)
+    h = rms_norm(h.astype(x.dtype), p["gnorm"])
+    y = (h * silu(z)) @ p["out_proj"]
+    return y, (C, n, m)
+
+
+def mlstm_decode(p, x, cfg, state):
+    """x: (B,1,d); state=(C,n,m)."""
+    B, _, d = x.shape
+    d_in, nh, dk = mlstm_dims(cfg)
+    z, q, k, v, i_g, f_g = _mlstm_qkvif(p, x, cfg)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                              # (B,nh,dk)
+    i_g, f_g = i_g[:, 0], f_g[:, 0]                                  # (B,nh)
+    logf = -jax.nn.softplus(-f_g)
+    C, n, m = [s.astype(jnp.float32) for s in state]
+    m_new = jnp.maximum(logf + m, i_g)
+    fs = jnp.exp(logf + m - m_new)
+    is_ = jnp.exp(i_g - m_new)
+    C_new = C * fs[..., None, None] + is_[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n_new = n * fs[..., None] + is_[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    den = jnp.einsum("bhd,bhd->bh", q, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(B, d_in)
+    h = rms_norm(h.astype(x.dtype), p["gnorm"])
+    y = (h * silu(z[:, 0])) @ p["out_proj"]
+    return y[:, None], (C_new, n_new, m_new)
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar cell with true recurrence)
+# ===========================================================================
+
+
+def slstm_dims(cfg):
+    nh = cfg.num_heads
+    return nh, cfg.d_model // nh
+
+
+def init_slstm(key, cfg, dtype):
+    d = cfg.d_model
+    nh, hd = slstm_dims(cfg)
+    ffp = -(-4 * d // 3 // 8) * 8
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "w_in": dense_init(ks[0], (d, 4 * d), dtype=dtype),          # z,i,f,o
+        "r": dense_init(ks[1], (4, nh, hd, hd), scale=hd ** -0.5,
+                        dtype=jnp.float32),
+        "bias": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                                 jnp.full((d,), 3.0, jnp.float32),
+                                 jnp.zeros((d,), jnp.float32)]),
+        "gnorm": jnp.ones((d,), dtype),
+        "ff1": dense_init(ks[2], (d, 2 * ffp), dtype=dtype),
+        "ff2": dense_init(ks[3], (ffp, d), dtype=dtype),
+    }
+
+
+def _slstm_cell(p, xg, state, cfg):
+    """One timestep.  xg: (B,4d) precomputed input gates; state=(c,n,m,h)."""
+    B = xg.shape[0]
+    d = cfg.d_model
+    nh, hd = slstm_dims(cfg)
+    c, n, m, h = state
+    hh = h.reshape(B, nh, hd)
+    rec = jnp.einsum("bkh,gkhf->bgkf", hh, p["r"]).reshape(B, 4 * d)
+    gates = xg.astype(jnp.float32) + rec + p["bias"]
+    zr, ir, fr, orr = jnp.split(gates, 4, axis=-1)
+    z = jnp.tanh(zr)
+    o = jax.nn.sigmoid(orr)
+    logf = -jax.nn.softplus(-fr)
+    m_new = jnp.maximum(logf + m, ir)
+    c_new = jnp.exp(logf + m - m_new) * c + jnp.exp(ir - m_new) * z
+    n_new = jnp.exp(logf + m - m_new) * n + jnp.exp(ir - m_new)
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_forward(p, x, cfg, state=None):
+    """x: (B,S,d) -> (y, new_state).  Timestep scan (true recurrence)."""
+    B, S, d = x.shape
+    xg = x @ p["w_in"]                                               # (B,S,4d)
+    if state is None:
+        zeros = jnp.zeros((B, d), jnp.float32)
+        state = (zeros, zeros, jnp.full((B, d), -1e30, jnp.float32), zeros)
+
+    def step(carry, xt):
+        new = _slstm_cell(p, xt, carry, cfg)
+        return new, new[3]
+
+    state, hs = jax.lax.scan(step, state, xg.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)                        # (B,S,d)
+    h = rms_norm(h, p["gnorm"])
+    u, g = jnp.split(h @ p["ff1"], 2, axis=-1)
+    y = (jax.nn.gelu(g) * u) @ p["ff2"]
+    return y, state
+
+
+def slstm_decode(p, x, cfg, state):
+    B, _, d = x.shape
+    xg = (x @ p["w_in"])[:, 0]
+    state = _slstm_cell(p, xg, state, cfg)
+    h = rms_norm(state[3][:, None].astype(x.dtype), p["gnorm"])
+    u, g = jnp.split(h @ p["ff1"], 2, axis=-1)
+    y = (jax.nn.gelu(g) * u) @ p["ff2"]
+    return y, state

@@ -1,0 +1,104 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh):
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_wire_bytes_per_device / ICI_link_bw
+plus MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference) and the
+useful-compute ratio MODEL_FLOPS / (chips · HLO_FLOPs_per_device).
+
+All per-device quantities come from the HLO static analyzer (while bodies
+scaled by trip count); the raw ``cost_analysis`` numbers are recorded in the
+JSON artifacts for cross-checking.
+
+  PYTHONPATH=src python -m repro.roofline.analysis experiments/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+
+def load(dirpath: str, mesh: str = "pod1"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirpath, f"*.{mesh}.json"))):
+        recs.append(json.load(open(p)))
+    return recs
+
+
+def terms(rec: dict) -> dict:
+    h = rec["hlo_parsed"]
+    chips = rec["chips"]
+    t_c = h["flops"] / PEAK_FLOPS
+    t_m = h["bytes"] / HBM_BW
+    t_x = h["collective_bytes"] / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    useful = rec["model_flops"] / max(1.0, h["flops"] * chips)
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom, "useful_ratio": useful,
+        "step_s": max(t_c, t_m, t_x),
+        "mfu_bound": (rec["model_flops"] / chips / PEAK_FLOPS)
+        / max(t_c, t_m, t_x, 1e-12),
+    }
+
+
+def _fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def table(dirpath: str, mesh: str = "pod1") -> str:
+    rows = ["| arch | shape | status | compute | memory | collective | "
+            "dominant | MODEL/HLO flops | roofline-bound MFU |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for rec in load(dirpath, mesh):
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | "
+                        f"{rec.get('status', '?')} | — | — | — | — | — | — |")
+            continue
+        t = terms(rec)
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | ok | "
+            f"{_fmt_s(t['compute_s'])} | {_fmt_s(t['memory_s'])} | "
+            f"{_fmt_s(t['collective_s'])} | **{t['dominant']}** | "
+            f"{t['useful_ratio']:.2f} | {t['mfu_bound']:.1%} |")
+    return "\n".join(rows)
+
+
+def what_would_help(rec: dict) -> str:
+    t = terms(rec)
+    if t["dominant"] == "collective":
+        return ("reduce wire bytes: fewer/larger fused collectives, "
+                "reduce-scatter instead of all-reduce+slice, keep TP "
+                "activations sharded between ops")
+    if t["dominant"] == "memory":
+        return ("cut HBM traffic: larger fusion blocks, bf16 intermediates, "
+                "less remat recompute, bigger attention KV blocks")
+    return ("raise MXU utilization: larger per-device matmul tiles "
+            "(less model-parallel splitting of small dims), fewer "
+            "low-arithmetic-intensity einsums")
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    for mesh in ("pod1", "pod2"):
+        recs = load(d, mesh)
+        if not recs:
+            continue
+        print(f"\n### Roofline — {mesh} "
+              f"({'256' if mesh == 'pod1' else '512'} chips)\n")
+        print(table(d, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Batched serving engine: prefill + decode loop with KV/recurrent caches.
+
+Continuous-batching-lite: a request batch is prefetched together, decoded in
+lockstep with per-request stop handling (a production engine would rotate
+requests in/out of slots; the step functions here are exactly the ones the
+pod launcher shards — decode_32k / long_500k dry-run lower these).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import kvcache, model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0       # 0 = greedy
+    eos_id: int = -1               # -1 = never stop early
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg_arch, params, *, max_len: int):
+        self.cfg = cfg_arch
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, b, c: model.prefill(p, cfg_arch, b, c))
+        self._decode = jax.jit(
+            lambda p, t, pos, c: model.decode_step(p, cfg_arch, t, pos, c))
+
+    def _sample(self, logits, key, temperature):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, axis=-1) \
+            .astype(jnp.int32)
+
+    def generate(self, batch, scfg: ServeConfig = ServeConfig()):
+        """batch: {tokens: (B, S_prompt) [+ frontend embeds]}.
+        Returns (B, max_new_tokens) generated ids."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        assert S + scfg.max_new_tokens <= self.max_len + 1, \
+            "cache too small for prompt + generation"
+        cache = kvcache.init_cache(self.cfg, B, self.max_len)
+        logits, cache = self._prefill(self.params, batch, cache)
+        key = jax.random.key(scfg.seed)
+        out = []
+        done = jnp.zeros((B,), bool)
+        tok = self._sample(logits, key, scfg.temperature)
+        for i in range(scfg.max_new_tokens):
+            out.append(jnp.where(done, 0, tok))
+            done = done | (tok == scfg.eos_id)
+            pos = jnp.full((B,), S + i, jnp.int32)
+            logits, cache = self._decode(self.params, tok[:, None], pos,
+                                         cache)
+            key = jax.random.fold_in(key, i)
+            tok = self._sample(logits, key, scfg.temperature)
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,80 @@
+"""Checkpointing: flat .npz payload + JSON metadata, atomic rename, retention.
+
+Pure numpy/np.savez (no orbax dependency); pytree structure is recorded as
+flattened key paths so restore round-trips exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[jax.tree_util.keystr(path)] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3, extra: dict = None):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    meta = {
+        "step": int(step),
+        "keys": list(flat.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    tmp = tempfile.mkdtemp(dir=ckpt_dir)
+    np.savez(os.path.join(tmp, "payload.npz"),
+             **{f"a{i}": v for i, v in enumerate(flat.values())})
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _retain(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    return int(steps[-1].split("_")[1]) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, tree_like):
+    """Restore into the structure of ``tree_like`` (validates key paths)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    meta = json.load(open(os.path.join(d, "meta.json")))
+    payload = np.load(os.path.join(d, "payload.npz"))
+    arrays = [payload[f"a{i}"] for i in range(len(meta["keys"]))]
+    by_key = dict(zip(meta["keys"], arrays))
+
+    leaves_paths = jax.tree_util.tree_flatten_with_path(tree_like)[0]
+    restored = []
+    for path, leaf in leaves_paths:
+        k = jax.tree_util.keystr(path)
+        if k not in by_key:
+            raise KeyError(f"checkpoint missing {k}")
+        arr = by_key[k]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {k}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        restored.append(jnp.asarray(arr, leaf.dtype))
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, restored), meta

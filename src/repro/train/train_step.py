@@ -1,0 +1,53 @@
+"""Training step: loss + grad + optimizer update, with optional microbatch
+gradient accumulation.  The step function is what the dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.train import optimizer as opt_mod
+
+
+def make_train_step(cfg, opt_cfg: opt_mod.OptConfig, *, grad_accum: int = 1):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.train_loss(params, cfg, batch)
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                return (jax.tree.map(jnp.add, acc, g), lsum + l), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (grads, lsum), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = lsum / grad_accum
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        params, opt_state, om = opt_mod.update(
+            cfg.optimizer, params, grads, opt_state, opt_cfg)
+        metrics = {**metrics, **om, "loss": loss}
+        return params, opt_state, metrics
+
+    return step
+
+
+def init_state(rng, cfg):
+    params = model.init_params(rng, cfg)
+    opt_state = opt_mod.init(cfg.optimizer, params)
+    return params, opt_state

@@ -1,0 +1,64 @@
+"""Training loop: data -> step -> metrics/checkpoints, resumable."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.train import checkpoint as ckpt_mod
+from repro.train import optimizer as opt_mod, train_step as ts_mod
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0            # 0 = disabled
+    ckpt_dir: str = "checkpoints"
+    seq_len: int = 128
+    global_batch: int = 8
+    grad_accum: int = 1
+    seed: int = 0
+    lr: float = 3e-4
+
+
+def train(cfg_arch, tcfg: TrainConfig, *, resume: bool = False,
+          log_fn=print):
+    """Single-host training driver (CPU-scale; the pod launcher wraps this
+    same step function with pjit shardings)."""
+    opt_cfg = opt_mod.OptConfig(name=cfg_arch.optimizer, lr=tcfg.lr,
+                                warmup_steps=max(1, tcfg.steps // 20),
+                                total_steps=tcfg.steps)
+    params, opt_state = ts_mod.init_state(jax.random.key(tcfg.seed), cfg_arch)
+    step_fn = jax.jit(ts_mod.make_train_step(cfg_arch, opt_cfg,
+                                             grad_accum=tcfg.grad_accum))
+    stream = TokenStream(DataConfig(cfg_arch.vocab_size, tcfg.seq_len,
+                                    tcfg.global_batch, seed=tcfg.seed))
+    start = 0
+    if resume:
+        last = ckpt_mod.latest_step(tcfg.ckpt_dir)
+        if last is not None:
+            (params, opt_state), meta = ckpt_mod.restore(
+                tcfg.ckpt_dir, last, (params, opt_state))
+            start = meta["step"]
+            log_fn(f"resumed from step {start}")
+
+    history = []
+    t0 = time.time()
+    for step in range(start, tcfg.steps):
+        batch = stream.batch(step)
+        batch.update(stream.frontend(step, cfg_arch, tcfg.global_batch))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = round(time.time() - t0, 2)
+            history.append(m)
+            log_fn(f"step {step:5d} loss {m['loss']:.4f} "
+                   f"lr {m['lr']:.2e} gnorm {m['grad_norm']:.2f}")
+        if tcfg.ckpt_every and (step + 1) % tcfg.ckpt_every == 0:
+            ckpt_mod.save(tcfg.ckpt_dir, step + 1, (params, opt_state))
+    return params, opt_state, history

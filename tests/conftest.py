@@ -1,0 +1,24 @@
+"""Test session configuration.
+
+The ring-collective kernels and the comms backends are *multi-PE by nature*,
+so the test session runs with 8 simulated host devices (deliberate, documented
+choice — this is NOT the 512-device dry-run flag, which only
+repro.launch.dryrun sets for itself).  Model smoke tests ignore the extra
+devices (plain jit places on device 0).
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    return jax.make_mesh((8,), ("x",))
+
+
+@pytest.fixture(scope="session")
+def mesh2x4():
+    return jax.make_mesh((2, 4), ("data", "model"))

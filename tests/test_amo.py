@@ -1,0 +1,77 @@
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import amo, context
+
+
+@pytest.fixture()
+def ctxheap():
+    return context.init(npes=4)
+
+
+def test_fetch_add_inc(ctxheap):
+    ctx, heap = ctxheap
+    p = heap.malloc((), "int32")
+    heap, old = amo.fetch_add(ctx, heap, p, 5, 2)
+    assert int(old) == 0
+    heap, old = amo.fetch_inc(ctx, heap, p, 2)
+    assert int(old) == 5
+    assert int(amo.fetch(ctx, heap, p, 2)) == 6
+    assert int(amo.fetch(ctx, heap, p, 1)) == 0   # other PE untouched
+
+
+def test_swap_cswap(ctxheap):
+    ctx, heap = ctxheap
+    p = heap.malloc((), "int32")
+    heap = amo.set_(ctx, heap, p, 7, 0)
+    heap, old = amo.swap(ctx, heap, p, 9, 0)
+    assert int(old) == 7
+    heap, old = amo.compare_swap(ctx, heap, p, 9, 11, 0)
+    assert int(old) == 9 and int(amo.fetch(ctx, heap, p, 0)) == 11
+    heap, old = amo.compare_swap(ctx, heap, p, 999, 0, 0)   # cond fails
+    assert int(amo.fetch(ctx, heap, p, 0)) == 11
+
+
+def test_bitwise(ctxheap):
+    ctx, heap = ctxheap
+    p = heap.malloc((), "uint32")
+    heap = amo.set_(ctx, heap, p, 0b1100, 1)
+    heap, _ = amo.fetch_and(ctx, heap, p, 0b1010, 1)
+    assert int(amo.fetch(ctx, heap, p, 1)) == 0b1000
+    heap, _ = amo.fetch_or(ctx, heap, p, 0b0001, 1)
+    assert int(amo.fetch(ctx, heap, p, 1)) == 0b1001
+    heap, _ = amo.fetch_xor(ctx, heap, p, 0b1111, 1)
+    assert int(amo.fetch(ctx, heap, p, 1)) == 0b0110
+
+
+def test_float_amo(ctxheap):
+    ctx, heap = ctxheap
+    p = heap.malloc((), "float32")
+    heap, _ = amo.fetch_add(ctx, heap, p, 0.5, 3)
+    heap, _ = amo.fetch_add(ctx, heap, p, 0.25, 3)
+    assert float(amo.fetch(ctx, heap, p, 3)) == 0.75
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["add", "cswap", "swap"]),
+                          st.integers(-5, 5)), max_size=15))
+def test_linearizable_against_python_model(ops):
+    """Any sequential schedule of AMOs matches a plain python RMW model."""
+    ctx, heap = context.init(npes=2)
+    p = heap.malloc((), "int32")
+    model = 0
+    for kind, v in ops:
+        if kind == "add":
+            heap, old = amo.fetch_add(ctx, heap, p, v, 0)
+            assert int(old) == model
+            model += v
+        elif kind == "swap":
+            heap, old = amo.swap(ctx, heap, p, v, 0)
+            assert int(old) == model
+            model = v
+        else:
+            heap, old = amo.compare_swap(ctx, heap, p, model, v, 0)
+            assert int(old) == model
+            model = v
+    assert int(amo.fetch(ctx, heap, p, 0)) == model

@@ -1,0 +1,64 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ck
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "a": {"w": jax.random.normal(k, (8, 4)),
+              "b": jnp.arange(5, dtype=jnp.int32)},
+        "scale": jnp.float32(3.5),
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 7, t)
+    restored, meta = ck.restore(str(tmp_path), 7, jax.tree.map(
+        jnp.zeros_like, t))
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_retention(tmp_path):
+    for s in (1, 2, 3, 4, 5):
+        ck.save(str(tmp_path), s, _tree(s), keep=3)
+    assert ck.latest_step(str(tmp_path)) == 5
+    kept = sorted(os.listdir(tmp_path))
+    assert kept == ["step_00000003", "step_00000004", "step_00000005"]
+
+
+def test_shape_mismatch_raises(tmp_path):
+    ck.save(str(tmp_path), 1, _tree())
+    bad = _tree()
+    bad["a"]["w"] = jnp.zeros((9, 4))
+    with pytest.raises(ValueError):
+        ck.restore(str(tmp_path), 1, bad)
+
+
+def test_missing_key_raises(tmp_path):
+    ck.save(str(tmp_path), 1, {"x": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        ck.restore(str(tmp_path), 1, {"y": jnp.zeros(3)})
+
+
+def test_trainer_resume(tmp_path):
+    from repro.configs import base as cfgbase
+    from repro.train import trainer
+    cfg = cfgbase.reduced(cfgbase.get_config("xlstm_125m"))
+    tcfg = trainer.TrainConfig(steps=4, seq_len=32, global_batch=2,
+                               log_every=1, ckpt_every=2,
+                               ckpt_dir=str(tmp_path))
+    trainer.train(cfg, tcfg)
+    assert ck.latest_step(str(tmp_path)) == 4
+    tcfg2 = trainer.TrainConfig(steps=6, seq_len=32, global_batch=2,
+                                log_every=1, ckpt_dir=str(tmp_path))
+    _, _, hist = trainer.train(cfg, tcfg2, resume=True)
+    assert hist[0]["step"] == 4                 # continued, not restarted

@@ -1,0 +1,132 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import collectives as coll, context, signal, teams
+
+
+@pytest.fixture()
+def ctxheap():
+    return context.init(npes=8, node_size=4)
+
+
+def _fill(heap, p, fn):
+    vals = jnp.stack([fn(i) for i in range(heap.npes)])
+    return heap.write_all(p, vals)
+
+
+def test_broadcast_team(ctxheap):
+    ctx, heap = ctxheap
+    p = heap.malloc((8,), "float32")
+    heap = _fill(heap, p, lambda i: jnp.full(8, float(i)))
+    team = teams.Team(2, 1, 4)                  # PEs 2..5
+    heap = coll.broadcast(ctx, heap, p, root=1, team=team)   # root = PE 3
+    for pe in range(8):
+        want = 3.0 if 2 <= pe <= 5 else float(pe)
+        assert float(heap.read(p, pe)[0]) == want
+
+
+def test_fcollect(ctxheap):
+    ctx, heap = ctxheap
+    src = heap.malloc((2,), "float32")
+    dst = heap.malloc((16,), "float32")
+    heap = _fill(heap, src, lambda i: jnp.array([2.0 * i, 2.0 * i + 1]))
+    heap = coll.fcollect(ctx, heap, dst, src, ctx.team_world)
+    for pe in range(8):
+        np.testing.assert_array_equal(np.asarray(heap.read(dst, pe)),
+                                      np.arange(16.0))
+
+
+def test_collect_ragged(ctxheap):
+    ctx, heap = ctxheap
+    src = heap.malloc((4,), "float32")
+    dst = heap.malloc((32,), "float32")
+    team = teams.Team(0, 1, 4)
+    heap = _fill(heap, src, lambda i: jnp.full(4, float(i)))
+    nelems = [1, 2, 0, 3]
+    heap = coll.collect(ctx, heap, dst, src, nelems, team)
+    got = np.asarray(heap.read(dst, 2))[:6]
+    np.testing.assert_array_equal(got, [0, 1, 1, 3, 3, 3])
+
+
+@pytest.mark.parametrize("op,expect", [
+    ("sum", np.sum), ("max", np.max), ("min", np.min), ("prod", np.prod),
+])
+def test_reduce_float_ops(ctxheap, op, expect):
+    ctx, heap = ctxheap
+    p = heap.malloc((6,), "float32")
+    rows = np.random.RandomState(0).uniform(0.5, 1.5, (8, 6)).astype(np.float32)
+    heap = heap.write_all(p, jnp.asarray(rows))
+    heap = coll.reduce(ctx, heap, p, p, op, ctx.team_world)
+    np.testing.assert_allclose(np.asarray(heap.read(p, 3)),
+                               expect(rows, axis=0), rtol=1e-5)
+
+
+@pytest.mark.parametrize("op", ["and", "or", "xor"])
+def test_reduce_bitwise(ctxheap, op):
+    ctx, heap = ctxheap
+    p = heap.malloc((4,), "int32")
+    rows = np.random.RandomState(1).randint(0, 255, (8, 4)).astype(np.int32)
+    heap = heap.write_all(p, jnp.asarray(rows))
+    heap = coll.reduce(ctx, heap, p, p, op, ctx.team_world)
+    want = rows[0]
+    npop = {"and": np.bitwise_and, "or": np.bitwise_or,
+            "xor": np.bitwise_xor}[op]
+    for r in rows[1:]:
+        want = npop(want, r)
+    np.testing.assert_array_equal(np.asarray(heap.read(p, 0)), want)
+
+
+def test_reduce_subteam_only(ctxheap):
+    ctx, heap = ctxheap
+    p = heap.malloc((2,), "float32")
+    heap = _fill(heap, p, lambda i: jnp.full(2, 1.0))
+    team = teams.Team(0, 2, 4)                  # PEs 0,2,4,6
+    heap = coll.reduce(ctx, heap, p, p, "sum", team)
+    assert float(heap.read(p, 0)[0]) == 4.0
+    assert float(heap.read(p, 1)[0]) == 1.0     # non-member untouched
+
+
+def test_alltoall(ctxheap):
+    ctx, heap = ctxheap
+    team = teams.Team(0, 1, 4)
+    src = heap.malloc((8,), "float32")
+    dst = heap.malloc((8,), "float32")
+    vals = jnp.arange(32.0).reshape(4, 8)
+    heap = heap.write_all(src, jnp.concatenate(
+        [vals, jnp.zeros((4, 8))], 0))
+    heap = coll.alltoall(ctx, heap, dst, src, team)
+    # PE j slot i == PE i chunk j
+    got = np.asarray(heap.read(dst, 1))
+    np.testing.assert_array_equal(got.reshape(4, 2),
+                                  np.asarray(vals.reshape(4, 4, 2)[:, 1]))
+
+
+def test_sync_push_counters(ctxheap):
+    ctx, heap = ctxheap
+    ctr = heap.malloc((), "int32")
+    team = ctx.team_shared(4)                   # PEs 4..7
+    heap, sat = coll.sync(ctx, heap, ctr, team)
+    assert bool(sat.all())
+    assert int(heap.read(ctr, 4).reshape(())) == team.size
+    assert int(heap.read(ctr, 0).reshape(())) == 0   # other node untouched
+
+
+def test_barrier_records_quiet(ctxheap):
+    ctx, heap = ctxheap
+    ctr = heap.malloc((), "int32")
+    heap, sat = coll.barrier(ctx, heap, ctr, ctx.team_world)
+    ops = [r.op for r in ctx.ledger]
+    assert "quiet" in ops and "sync" in ops
+
+
+def test_collective_path_cutover(ctxheap):
+    """Paper Fig. 6: small payloads go direct (push stores), large go engine."""
+    ctx, heap = ctxheap
+    small = heap.malloc((128,), "float32")
+    large = heap.malloc((1 << 23,), "float32")   # 32 MB > modeled cutover
+    heap = coll.broadcast(ctx, heap, small, 0, ctx.team_world, work_items=256)
+    p_small = ctx.ledger[-1].path
+    heap = coll.broadcast(ctx, heap, large, 0, ctx.team_world, work_items=256)
+    p_large = ctx.ledger[-1].path
+    assert p_small == "direct" and p_large == "engine"

@@ -1,0 +1,82 @@
+"""Properties of the cutover engine that mirror the paper's measured
+behaviour (Figs. 3-6)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cutover
+
+
+def test_cutover_reference_points():
+    """Paper Fig. 3: single-threaded cutover is a few KB; Fig. 4a/5: at ~1k
+    work-items the direct path stays ahead to ~MB scale."""
+    c1 = cutover.cutover_bytes(work_items=1)
+    c1k = cutover.cutover_bytes(work_items=1024)
+    assert 1 << 10 <= c1 <= 1 << 14          # few KB (paper: ~4 KB)
+    assert c1k >= 1 << 20                    # >= 1 MB
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 1023))
+def test_cutover_monotone_in_work_items(w):
+    assert cutover.cutover_bytes(work_items=w) <= \
+        cutover.cutover_bytes(work_items=w + 1) + 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(6, 26), st.sampled_from([1, 16, 128, 1024]))
+def test_choose_path_consistent_with_times(log2n, w):
+    n = 1 << log2n
+    path = cutover.choose_path(n, work_items=w, tier="ici")
+    hw = cutover.HwParams()
+    td = cutover.t_direct(hw, n, w, "ici")
+    te = cutover.t_engine(hw, n, "ici")
+    assert path == ("direct" if td <= te else "engine")
+
+
+def test_dcn_always_proxy():
+    assert cutover.choose_path(64, tier="dcn") == "proxy"
+    assert cutover.t_direct(cutover.HwParams(), 64, 1024, "dcn") == math.inf
+
+
+def test_forced_and_fixed_cutover():
+    t = cutover.Tuning(force_path="engine")
+    assert cutover.choose_path(8, tuning=t) == "engine"
+    t = cutover.Tuning(cutover_bytes=1000)
+    assert cutover.choose_path(999, tuning=t) == "direct"
+    assert cutover.choose_path(1001, tuning=t) == "engine"
+
+
+def test_collective_cutover_grows_with_pes():
+    """Paper Fig. 6: with more PEs the direct (push) path stays ahead to a
+    larger element count (4 PEs cutover ~4K elems; 12 PEs still direct)."""
+    c4 = cutover.collective_cutover_elems("fcollect", 4, 4, work_items=256)
+    c12 = cutover.collective_cutover_elems("fcollect", 12, 4, work_items=256)
+    assert c12 >= c4
+
+
+def test_engine_flat_in_work_items():
+    """Paper Fig. 4b: copy-engine bandwidth does not depend on work-items."""
+    hw = cutover.HwParams()
+    assert cutover.t_engine(hw, 1 << 20, "ici") == \
+        cutover.t_engine(hw, 1 << 20, "ici")
+    t1 = cutover.op_time(1 << 20, "engine", work_items=1)
+    t2 = cutover.op_time(1 << 20, "engine", work_items=1024)
+    assert t1 == t2
+
+
+def test_op_time_monotone_in_bytes():
+    hw = cutover.HwParams()
+    for path in ("direct", "engine", "proxy"):
+        prev = 0.0
+        for lb in range(6, 24, 2):
+            t = cutover.op_time(1 << lb, path, work_items=64)
+            assert t >= prev
+            prev = t
+
+
+def test_sync_cost_scales_with_pes():
+    t4 = cutover.t_collective("sync", 8, 4)
+    t12 = cutover.t_collective("sync", 8, 12)
+    assert t12 > t4

@@ -1,0 +1,64 @@
+"""The dry-run machinery itself, exercised at test scale: reduced configs on
+a 2x4 mesh of the 8 host devices (the production 512-device sweep is
+repro.launch.dryrun, whose results live in experiments/dryrun)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import base as cfgbase
+from repro.launch import dryrun, mesh as mesh_mod, sharding, shardctx
+
+
+def _small_shape(kind):
+    if kind == "train":
+        return cfgbase.ShapeSpec("t", "train", 64, 8)
+    if kind == "prefill":
+        return cfgbase.ShapeSpec("p", "prefill", 64, 8)
+    return cfgbase.ShapeSpec("d", "decode", 64, 8)
+
+
+@pytest.mark.parametrize("arch", ["qwen3_4b", "llama4_scout_17b_a16e",
+                                  "zamba2_2_7b", "whisper_medium"])
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_build_and_compile_reduced(arch, kind, mesh2x4):
+    cfg = cfgbase.reduced(cfgbase.get_config(arch))
+    shape = _small_shape(kind)
+    with mesh2x4, shardctx.rules(sharding.activation_rules(cfg, mesh2x4)):
+        fn, args = dryrun.build_step(cfg, shape, mesh2x4)
+        compiled = fn.lower(*args).compile()
+    assert compiled.memory_analysis() is not None
+    cost = compiled.cost_analysis()
+    assert cost["flops"] > 0
+
+
+def test_model_flops_formula():
+    cfg = cfgbase.get_config("arctic_480b")
+    tr = cfgbase.SHAPES["train_4k"]
+    de = cfgbase.SHAPES["decode_32k"]
+    # MoE: active < total params; train uses 6ND on active
+    assert cfg.param_count(active_only=True) < cfg.param_count()
+    assert dryrun.model_flops(cfg, tr) == pytest.approx(
+        6.0 * cfg.param_count(active_only=True) * tr.global_batch * tr.seq_len)
+    assert dryrun.model_flops(cfg, de) == pytest.approx(
+        2.0 * cfg.param_count(active_only=True) * de.global_batch)
+
+
+def test_long500k_skip_rule():
+    long = cfgbase.SHAPES["long_500k"]
+    runs = [a for a in cfgbase.ARCH_NAMES
+            if cfgbase.shape_applicable(cfgbase.get_config(a), long)]
+    assert sorted(runs) == sorted(
+        ["h2o_danube_3_4b", "xlstm_125m", "zamba2_2_7b"])
+
+
+def test_production_mesh_shapes():
+    # shape math only (512 devices are only forced inside dryrun's process)
+    import numpy as np
+    assert mesh_mod.batch_axes.__call__  # smoke: function exists
+    # the dryrun artifacts must cover every non-skipped pair
+    import glob, json, os
+    arts = glob.glob("experiments/dryrun/*.pod1.json")
+    if arts:   # present once the sweep has run
+        ok = [json.load(open(a)) for a in arts]
+        assert all(r["status"] == "ok" or r["status"].startswith("skipped")
+                   for r in ok)

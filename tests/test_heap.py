@@ -1,0 +1,74 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import heap as heap_mod
+
+
+def test_malloc_alignment_and_symmetry():
+    h = heap_mod.create(npes=4)
+    a = h.malloc((100,), "float32")
+    b = h.malloc((3, 5), "float32")
+    assert a.offset % heap_mod.ALIGN == 0
+    assert b.offset % heap_mod.ALIGN == 0
+    assert b.offset >= a.offset + 128          # no overlap
+    assert a.shape == (100,) and b.shape == (3, 5)
+    # symmetric: same ptr valid at every PE
+    h = h.write(a, 0, jnp.ones(100))
+    h = h.write(a, 3, jnp.full(100, 2.0))
+    assert float(h.read(a, 0)[0]) == 1.0
+    assert float(h.read(a, 3)[0]) == 2.0
+    assert float(h.read(a, 1)[0]) == 0.0       # other PEs untouched
+
+
+def test_free_reuse():
+    h = heap_mod.create(npes=2)
+    a = h.malloc((256,), "float32")
+    h.free(a)
+    b = h.malloc((128,), "float32")
+    assert b.offset == a.offset                # first-fit reuse
+
+
+def test_pool_growth():
+    h = heap_mod.create(npes=2, words_per_pool=256)
+    ptrs = [h.malloc((128,), "float32") for _ in range(8)]
+    h = h.write(ptrs[-1], 1, jnp.arange(128))
+    assert float(h.read(ptrs[-1], 1)[5]) == 5.0
+
+
+def test_dtype_canonicalization():
+    h = heap_mod.create(npes=2)
+    p = h.malloc((), "int64")                  # narrows without x64
+    assert p.dtype == "int32"
+
+
+def test_read_all_write_all():
+    h = heap_mod.create(npes=3)
+    p = h.malloc((4,), "int32")
+    h = h.write_all(p, jnp.arange(12).reshape(3, 4))
+    np.testing.assert_array_equal(np.asarray(h.read_all(p)),
+                                  np.arange(12).reshape(3, 4))
+
+
+def test_ptr_index_bounds():
+    h = heap_mod.create(npes=2)
+    p = h.malloc((8,), "float32")
+    assert p.index(7).offset == p.offset + 7
+    with pytest.raises(IndexError):
+        p.index(8)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 500),
+                          st.sampled_from(["float32", "int32"])),
+                min_size=1, max_size=20))
+def test_allocations_never_overlap(allocs):
+    h = heap_mod.create(npes=1)
+    spans = {"float32": [], "int32": []}
+    for n, dt in allocs:
+        p = h.malloc((n,), dt)
+        lo, hi = p.offset, p.offset + max(128, -(-n // 128) * 128)
+        for (l2, h2) in spans[dt]:
+            assert hi <= l2 or lo >= h2, "overlapping allocation"
+        spans[dt].append((lo, hi))

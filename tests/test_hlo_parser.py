@@ -1,0 +1,86 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.roofline import hlo_parser as hp
+
+
+def test_scan_flops_scaled_by_trip_count():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def f(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    c = jax.jit(f).lower(x, ws).compile()
+    s = hp.analyze(c.as_text())
+    assert s["flops"] == pytest.approx(2 * 128 * 256 * 256 * 8)
+    # raw cost_analysis undercounts by the trip count
+    assert c.cost_analysis()["flops"] == pytest.approx(2 * 128 * 256 * 256)
+
+
+def test_nested_scan():
+    def inner(x, w):
+        return x @ w, None
+
+    def outer(x, ws):
+        def ob(x, _):
+            return jax.lax.scan(inner, x, ws)[0], None
+        return jax.lax.scan(ob, x, None, length=3)[0]
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 64, 64), jnp.float32)
+    c = jax.jit(outer).lower(x, ws).compile()
+    s = hp.analyze(c.as_text())
+    assert s["flops"] == pytest.approx(2 * 64 * 64 * 64 * 4 * 3)
+
+
+def test_collectives_parsed_with_group_size():
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    x = jax.ShapeDtypeStruct((16, 512), jnp.float32)
+    w = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+
+    def f(x, w):
+        return jnp.sum(x @ w)
+
+    with mesh:
+        c = jax.jit(f, in_shardings=(
+            NamedSharding(mesh, P("data", None)),
+            NamedSharding(mesh, P("model", None)))).lower(x, w).compile()
+    s = hp.analyze(c.as_text(), num_partitions=8)
+    assert s["collective_bytes"] > 0
+    assert "all-reduce" in s["collective_by_kind"]
+
+
+def test_tuple_typed_while_parses():
+    # carries with multiple tensors produce tuple-typed while ops
+    def body(c, _):
+        a, b = c
+        return (jnp.tanh(a @ b), b), None
+
+    def f(a, b):
+        return jax.lax.scan(body, (a, b), None, length=5)[0][0]
+
+    a = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    c = jax.jit(f).lower(a, b).compile()
+    s = hp.analyze(c.as_text())
+    assert s["flops"] == pytest.approx(2 * 32 * 32 * 32 * 5)
+
+
+def test_shape_bytes():
+    assert hp.shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert hp.shape_bytes("bf16[8]{0}") == 16
+    assert hp.shape_bytes("(s32[], f32[4,4]{1,0})") == 4 + 64
+    assert hp.shape_bytes("pred[]") == 1
+
+
+def test_wire_bytes_formulas():
+    assert hp._wire_bytes("all-reduce", 100, 4) == pytest.approx(150.0)
+    assert hp._wire_bytes("all-gather", 100, 4) == pytest.approx(75.0)
+    assert hp._wire_bytes("collective-permute", 100, 4) == 100.0
+    assert hp._wire_bytes("all-reduce", 100, 1) == 0.0

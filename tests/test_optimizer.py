@@ -1,0 +1,64 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import optimizer as opt_mod
+
+
+def _rosenbrockish(params):
+    x = params["w"]
+    return jnp.sum((x - 1.5) ** 2) + jnp.sum(jnp.abs(x[:2]))
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_decreases_loss(name):
+    params = {"w": jnp.zeros((8, 8)), "b": jnp.zeros((8,))}
+    cfg = opt_mod.OptConfig(name=name, lr=0.05, warmup_steps=1,
+                            total_steps=100, weight_decay=0.0)
+    state = opt_mod.init(name, params)
+    loss0 = float(_rosenbrockish(params))
+    for _ in range(60):
+        grads = jax.grad(_rosenbrockish)(params)
+        params, state, m = opt_mod.update(name, params, grads, state, cfg)
+    assert float(_rosenbrockish(params)) < 0.5 * loss0
+
+
+def test_adafactor_state_is_factored():
+    params = {"mat": jnp.zeros((64, 32)), "vec": jnp.zeros((16,))}
+    state = opt_mod.adafactor_init(params)
+    assert state["v"]["mat"]["vr"].shape == (64,)
+    assert state["v"]["mat"]["vc"].shape == (32,)
+    assert state["v"]["vec"]["v"].shape == (16,)
+    # memory win vs adam: factored state << full second moment
+    n_fact = 64 + 32
+    assert n_fact < 64 * 32
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = opt_mod.clip_by_global_norm(g, 1.0)
+    assert float(norm) > 100
+    assert abs(float(opt_mod.global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_schedule_warmup_and_decay():
+    cfg = opt_mod.OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_frac=0.1)
+    lrs = [float(opt_mod.schedule(cfg, jnp.asarray(s)))
+           for s in range(0, 100, 5)]
+    assert lrs[0] < lrs[1]                      # warming up
+    assert lrs[-1] < lrs[3]                     # decayed
+    assert lrs[-1] >= 0.1 * 0.99                # floor
+
+
+def test_weight_decay_pulls_to_zero():
+    params = {"w": jnp.full((4,), 10.0)}
+    cfg = opt_mod.OptConfig(name="adamw", lr=0.1, warmup_steps=1,
+                            total_steps=50, weight_decay=0.5)
+    state = opt_mod.adamw_init(params)
+    zero_grads = {"w": jnp.zeros((4,))}
+    for _ in range(20):
+        params, state, _ = opt_mod.adamw_update(params, zero_grads, state,
+                                                cfg)
+    assert float(jnp.abs(params["w"]).max()) < 10.0

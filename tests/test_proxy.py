@@ -1,0 +1,50 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import context, proxy
+
+
+def test_put_is_deferred_until_drain():
+    ctx, heap = context.init(npes=4, node_size=2)
+    p = heap.malloc((64,), "float32")
+    px = proxy.HostProxy(ctx)
+    px.put(p, jnp.ones(64), 3)
+    assert float(heap.read(p, 3).sum()) == 0.0      # not yet executed
+    heap = px.drain(heap)
+    assert float(heap.read(p, 3).sum()) == 64.0
+    assert len(px.ring.delivered) == 1
+
+
+def test_amo_add_via_ring_with_completion():
+    ctx, heap = context.init(npes=4, node_size=2)
+    p = heap.malloc((), "int32")
+    px = proxy.HostProxy(ctx)
+    pid1, idx1 = px.amo_add(p, 5, 2)
+    pid2, idx2 = px.amo_add(p, 7, 2)
+    heap = px.drain(heap)
+    assert int(heap.read(p, 2).reshape(())) == 12
+    # completions hold fetched old values (out-of-order reply capable)
+    assert int(px.ring.completions[idx1]) == 0
+    assert int(px.ring.completions[idx2]) == 5
+
+
+def test_many_messages_wrap_ring():
+    ctx, heap = context.init(npes=4, node_size=2)
+    p = heap.malloc((256,), "float32")
+    px = proxy.HostProxy(ctx, slots=8)
+    heap0 = heap
+    for i in range(5):                     # submit, drain, repeat (wraps laps)
+        for j in range(6):
+            px.put(p, jnp.full(256, float(i * 6 + j)), 1)
+        heap0 = px.drain(heap0)
+    assert px.ring.overwrite_errors == 0
+    assert len(px.ring.delivered) == 30
+    assert float(heap0.read(p, 1)[0]) == 29.0
+
+
+def test_quiet_message():
+    ctx, heap = context.init(npes=2, node_size=1)
+    px = proxy.HostProxy(ctx)
+    px.quiet()
+    heap = px.drain(heap)
+    assert any(r.op == "proxy_quiet" for r in ctx.ledger)

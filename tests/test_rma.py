@@ -1,0 +1,93 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import context, cutover, rma
+
+
+@pytest.fixture()
+def ctxheap():
+    return context.init(npes=8, node_size=4)
+
+
+def test_put_get_roundtrip(ctxheap):
+    ctx, heap = ctxheap
+    p = heap.malloc((64,), "float32")
+    v = jnp.arange(64, dtype=jnp.float32)
+    heap = rma.put(ctx, heap, p, v, 5)
+    np.testing.assert_array_equal(np.asarray(rma.get(ctx, heap, p, 5)), v)
+    # other PEs untouched (one-sided semantics)
+    assert float(rma.get(ctx, heap, p, 4).sum()) == 0.0
+
+
+def test_scalar_p_g(ctxheap):
+    ctx, heap = ctxheap
+    p = heap.malloc((4,), "int32")
+    heap = rma.p(ctx, heap, p.index(2), 42, 1)
+    assert int(rma.g(ctx, heap, p.index(2), 1)) == 42
+    assert ctx.ledger[-1].path == "direct"      # scalar put = remote store
+
+
+def test_strided_iput_iget(ctxheap):
+    ctx, heap = ctxheap
+    p = heap.malloc((16,), "float32")
+    heap = rma.iput(ctx, heap, p, jnp.arange(8.0), 2, dst_stride=2,
+                    src_stride=1, nelems=8)
+    out = rma.get(ctx, heap, p, 2)
+    np.testing.assert_array_equal(np.asarray(out[::2]), np.arange(8.0))
+    got = rma.iget(ctx, heap, p, 2, src_stride=2, nelems=8)
+    np.testing.assert_array_equal(np.asarray(got), np.arange(8.0))
+
+
+def test_path_selection_small_vs_large(ctxheap):
+    ctx, heap = ctxheap
+    small = heap.malloc((32,), "float32")       # 128 B -> direct
+    large = heap.malloc((1 << 20,), "float32")  # 4 MB -> engine
+    heap = rma.put(ctx, heap, small, jnp.zeros(32), 1, work_items=1)
+    assert ctx.ledger[-1].path == "direct"
+    heap = rma.put(ctx, heap, large, jnp.zeros(1 << 20), 1, work_items=1)
+    assert ctx.ledger[-1].path == "engine"
+
+
+def test_work_group_extends_cutover(ctxheap):
+    """Paper Fig. 4a: more work-items keep the direct path competitive for
+    larger messages."""
+    ctx, heap = ctxheap
+    buf = heap.malloc((1 << 15,), "float32")    # 128 KB
+    heap = rma.put(ctx, heap, buf, jnp.zeros(1 << 15), 1, work_items=1)
+    path_1wi = ctx.ledger[-1].path
+    heap = rma.put(ctx, heap, buf, jnp.zeros(1 << 15), 1, work_items=1024)
+    path_1024wi = ctx.ledger[-1].path
+    assert path_1wi == "engine" and path_1024wi == "direct"
+
+
+def test_cross_node_uses_proxy(ctxheap):
+    ctx, heap = ctxheap                          # node_size=4
+    p = heap.malloc((32,), "float32")
+    heap = rma.put(ctx, heap, p, jnp.ones(32), 7, src_pe=0)
+    assert ctx.ledger[-1].tier == "dcn"
+    assert ctx.ledger[-1].path == "proxy"
+
+
+def test_nbi_quiet(ctxheap):
+    ctx, heap = ctxheap
+    p = heap.malloc((32,), "float32")
+    heap = rma.put_nbi(ctx, heap, p, jnp.ones(32), 3)
+    assert ctx.ledger[-1].op == "put_nbi(pending)"
+    heap = rma.quiet(ctx, heap)
+    assert any(r.op == "put_nbi" for r in ctx.ledger)
+
+
+def test_force_path_tuning():
+    ctx, heap = context.init(npes=4, tuning=cutover.Tuning(force_path="engine"))
+    p = heap.malloc((32,), "float32")
+    heap = rma.put(ctx, heap, p, jnp.ones(32), 1)
+    assert ctx.ledger[-1].path == "engine"
+
+
+def test_kernel_backed_put():
+    ctx, heap = context.init(npes=4, use_kernels=True)
+    p = heap.malloc((256,), "float32")
+    v = jnp.arange(256, dtype=jnp.float32)
+    heap = rma.put(ctx, heap, p, v, 2)
+    np.testing.assert_array_equal(np.asarray(heap.read(p, 2)), v)

@@ -1,0 +1,80 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cfgbase
+from repro.models import model
+from repro.serve.engine import Engine, ServeConfig
+
+
+def _engine(arch, max_len=40):
+    cfg = cfgbase.reduced(cfgbase.get_config(arch))
+    params = model.init_params(jax.random.key(0), cfg)
+    return cfg, params, Engine(cfg, params, max_len=max_len)
+
+
+def test_greedy_is_deterministic():
+    cfg, params, eng = _engine("qwen3_4b")
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (3, 16), 0,
+                                          cfg.vocab_size)}
+    o1 = eng.generate(batch, ServeConfig(max_new_tokens=8))
+    o2 = eng.generate(batch, ServeConfig(max_new_tokens=8))
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    assert o1.shape == (3, 8)
+
+
+def test_greedy_matches_teacher_forcing():
+    """Feeding the greedy continuation back through prefill reproduces the
+    same next-token choices (cache path == full path)."""
+    cfg, params, eng = _engine("h2o_danube_3_4b")
+    B, S, NEW = 2, 12, 6
+    prompt = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab_size)
+    out = eng.generate({"tokens": prompt}, ServeConfig(max_new_tokens=NEW))
+    # teacher-force: prefill(prompt + out[:k]) must predict out[k]
+    from repro.models import kvcache
+    for k in range(1, NEW):
+        full = jnp.concatenate([prompt, out[:, :k]], axis=1)
+        cache = kvcache.init_cache(cfg, B, full.shape[1])
+        logits, _ = model.prefill(params, cfg, {"tokens": full}, cache)
+        np.testing.assert_array_equal(
+            np.asarray(jnp.argmax(logits, -1)), np.asarray(out[:, k]))
+
+
+def test_sampled_generation_with_temperature():
+    cfg, params, eng = _engine("xlstm_125m")
+    batch = {"tokens": jax.random.randint(jax.random.key(3), (2, 10), 0,
+                                          cfg.vocab_size)}
+    out = eng.generate(batch, ServeConfig(max_new_tokens=6, temperature=1.0,
+                                          seed=1))
+    assert out.shape == (2, 6)
+    assert int(out.max()) < cfg.vocab_size
+
+
+def test_eos_stops_output():
+    cfg, params, eng = _engine("qwen3_4b")
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32)}
+    out0 = eng.generate(batch, ServeConfig(max_new_tokens=5))
+    eos = int(out0[0, 0])                       # force first token as EOS
+    out = eng.generate(batch, ServeConfig(max_new_tokens=5, eos_id=eos))
+    assert out.shape == (1, 5)
+    np.testing.assert_array_equal(np.asarray(out[0, 1:]), 0)
+
+
+def test_cache_too_small_raises():
+    cfg, params, eng = _engine("qwen3_4b", max_len=10)
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32)}
+    with pytest.raises(AssertionError):
+        eng.generate(batch, ServeConfig(max_new_tokens=5))
+
+
+def test_hybrid_and_encdec_serve():
+    for arch in ("zamba2_2_7b", "whisper_medium"):
+        cfg, params, eng = _engine(arch)
+        batch = {"tokens": jax.random.randint(jax.random.key(4), (2, 8), 0,
+                                              cfg.vocab_size)}
+        if cfg.family == "audio":
+            batch["audio_embeds"] = 0.1 * jax.random.normal(
+                jax.random.key(5), (2, cfg.encoder_seq, cfg.d_model))
+        out = eng.generate(batch, ServeConfig(max_new_tokens=4))
+        assert out.shape == (2, 4)

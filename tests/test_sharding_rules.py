@@ -1,0 +1,92 @@
+"""Sharding-rule validity for the PRODUCTION meshes (16x16 and 2x16x16) via
+AbstractMesh — no devices needed: every assigned axis must divide its dim."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import base as cfgbase
+from repro.launch import sharding
+from repro.models import model
+from repro.train import optimizer as opt_mod
+
+
+def _abstract_mesh(multi_pod):
+    if multi_pod:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def _check_divisible(spec, shape, sizes, where):
+    for dim, s in zip(shape, spec):
+        if s is None:
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        k = 1
+        for a in axes:
+            k *= sizes[a]
+        assert dim % k == 0, f"{where}: dim {dim} not divisible by {k} ({s})"
+
+
+@pytest.mark.parametrize("arch", cfgbase.ARCH_NAMES)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_and_opt_specs_divide(arch, multi_pod):
+    cfg = cfgbase.get_config(arch)
+    mesh = _abstract_mesh(multi_pod)
+    sizes = _axis_sizes(mesh)
+    params_s = jax.eval_shape(lambda: model.init_params(jax.random.key(0),
+                                                        cfg))
+    opt_s = jax.eval_shape(lambda: opt_mod.init(cfg.optimizer, params_s))
+    for struct, name in ((params_s, "param"), (opt_s, "opt")):
+        def check(path, leaf):
+            pstr = jax.tree_util.keystr(path)
+            spec = sharding.spec_for_param(pstr, leaf.shape, mesh)
+            _check_divisible(spec, leaf.shape, sizes, f"{arch} {name} {pstr}")
+        jax.tree_util.tree_map_with_path(check, struct)
+
+
+@pytest.mark.parametrize("arch", cfgbase.ARCH_NAMES)
+def test_cache_specs_divide(arch):
+    cfg = cfgbase.get_config(arch)
+    mesh = _abstract_mesh(False)
+    sizes = _axis_sizes(mesh)
+    for shape_name in ("decode_32k", "long_500k"):
+        shape = cfgbase.SHAPES[shape_name]
+        if not cfgbase.shape_applicable(cfg, shape):
+            continue
+        cache_s = cfgbase.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        shardings = sharding.cache_shardings(cfg, mesh, cache_s)
+
+        def check(leaf_s, sh):
+            _check_divisible(sh.spec, leaf_s.shape, sizes,
+                             f"{arch} {shape_name}")
+        jax.tree.map(check, cache_s, shardings)
+
+
+def test_moe_experts_on_model_axis():
+    cfg = cfgbase.get_config("arctic_480b")
+    mesh = _abstract_mesh(False)
+    spec = sharding.spec_for_param(
+        "['blocks'][0]['moe']['w_gate']", (35, 128, 7168, 4864), mesh)
+    assert spec[1] == "model"                   # expert parallelism
+
+
+def test_embed_vocab_fallback_when_indivisible():
+    """whisper vocab 51865 is not divisible by 16 -> d_model gets the axis."""
+    mesh = _abstract_mesh(False)
+    spec = sharding.spec_for_param("['embed']", (51865, 1024), mesh)
+    assert spec[0] is None
+    spec = sharding.spec_for_param("['lm_head']", (1024, 51865), mesh)
+    assert spec == P("model", None)
+
+
+def test_batch_sharding_replicates_batch1():
+    cfg = cfgbase.get_config("xlstm_125m")
+    mesh = _abstract_mesh(False)
+    struct = {"token": jax.ShapeDtypeStruct((1, 1), jnp.int32)}
+    sh = sharding.batch_shardings(cfg, mesh, struct)
+    assert sh["token"].spec == P(None, None)

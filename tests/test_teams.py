@@ -1,0 +1,42 @@
+import pytest
+
+from repro.core import teams
+
+
+def test_world_and_translate():
+    t = teams.world(8)
+    assert t.pes() == list(range(8))
+    assert t.translate(3) == 3
+    assert t.rank_of(5) == 5
+
+
+def test_strided_team():
+    t = teams.Team(1, 2, 4)                    # PEs 1,3,5,7
+    assert t.pes() == [1, 3, 5, 7]
+    assert t.translate(2) == 5
+    assert t.rank_of(7) == 3
+    assert t.rank_of(2) == -1
+    assert t.rank_of(9) == -1
+
+
+def test_split_strided():
+    t = teams.world(16)
+    child = t.split_strided(0, 2, 8)
+    assert child.pes() == [0, 2, 4, 6, 8, 10, 12, 14]
+    grand = child.split_strided(1, 2, 4)
+    assert grand.pes() == [2, 6, 10, 14]
+    with pytest.raises(ValueError):
+        child.split_strided(0, 4, 4)
+
+
+def test_shared_team():
+    t = teams.shared(12, node_size=4, node_id=2)
+    assert t.pes() == [8, 9, 10, 11]
+    with pytest.raises(ValueError):
+        teams.shared(12, node_size=4, node_id=3)
+
+
+def test_translate_bounds():
+    t = teams.Team(0, 1, 4)
+    with pytest.raises(ValueError):
+        t.translate(4)
