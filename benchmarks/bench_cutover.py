@@ -2,16 +2,28 @@
 message size at varying work-items.  Below the (work-item-dependent) cutover
 the direct path is used; above it the engine path; the tuned curve tracks the
 max of both (which is exactly what Fig. 5 shows).
+
+``profile()`` is the autotuner's profile mode (``benchmarks.run --json``): it
+runs a full (path x tier x work_items x size) tuning sweep through the
+telemetry sink, fits measured transport profiles + cutovers with
+``repro.tune.estimator``, and emits ``BENCH_cutover.json`` — the artifact
+``ISHMEM_TUNING_FILE`` warm-starts later sessions from.
 """
 from __future__ import annotations
 
+import json
+
 from benchmarks.common import emit
 from repro.core import cutover
+from repro.tune import estimator
+from repro.tune.estimator import (DEFAULT_TIERS as TIERS,
+                                  DEFAULT_WORK_ITEMS as WORK_ITEMS)
+from repro.tune.table import INF_CUTOVER
 
 
 def run():
     hw = cutover.HwParams()
-    for wi in (1, 16, 128, 1024):
+    for wi in WORK_ITEMS:
         co = cutover.cutover_bytes(work_items=wi, tier="ici", hw=hw)
         for lb in range(7, 25):
             n = 1 << lb
@@ -20,6 +32,36 @@ def run():
             emit("fig5_tuned_put", f"wi={wi},{n}B", t * 1e6,
                  GBps=f"{n / t / 1e9:.2f}", path=path,
                  cutover_B=min(co, 1 << 40))
+
+
+def profile(json_path: str = "BENCH_cutover.json",
+            hw: cutover.HwParams | None = None) -> dict:
+    """Tuning sweep -> fitted table -> ``BENCH_cutover.json``.  Returns the
+    written document (also used by the CI regression gate)."""
+    hw = hw or cutover.HwParams()
+    sink = estimator.synthetic_sweep(hw, work_items=WORK_ITEMS)
+    tbl = estimator.build_table(sink, source="bench_cutover.profile")
+    agree = estimator.agreement(tbl, hw, work_items=WORK_ITEMS)
+    analytic = {
+        f"{tier}/{wi}": min(cutover.cutover_bytes(work_items=wi, tier=tier,
+                                                  hw=hw), INF_CUTOVER)
+        for tier in TIERS for wi in WORK_ITEMS
+    }
+    doc = {
+        "bench": "cutover_profile",
+        "samples": sink.total_count(),
+        "agreement_vs_analytic": agree,
+        "analytic_cutovers": {k: (None if v >= INF_CUTOVER else v)
+                              for k, v in analytic.items()},
+        "table": tbl.to_json(),
+        "telemetry": sink.snapshot(),
+    }
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("cutover_profile", f"{json_path}", 0.0,
+         samples=sink.total_count(), agreement=f"{agree:.3f}")
+    return doc
 
 
 if __name__ == "__main__":

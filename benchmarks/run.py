@@ -18,7 +18,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated substring filters")
+    ap.add_argument("--json", nargs="?", const="BENCH_cutover.json",
+                    default=None, metavar="PATH",
+                    help="profile mode: run the cutover tuning sweep and emit "
+                         "a persisted TuningTable (default BENCH_cutover.json)")
     args = ap.parse_args()
+
+    if args.json is not None:
+        from benchmarks import bench_cutover
+        print("bench,config,us_per_call,derived")
+        doc = bench_cutover.profile(args.json)
+        print(f"# wrote {args.json}: {doc['samples']} samples, "
+              f"agreement={doc['agreement_vs_analytic']:.3f}")
+        return
 
     from benchmarks import (bench_broadcast, bench_cutover, bench_fcollect,
                             bench_kernels, bench_ring, bench_rma,

@@ -1,0 +1,68 @@
+"""CI gate: fail when measured cutover points regress >2x vs the baseline.
+
+Usage: python scripts/check_cutover.py BENCH_cutover.json baseline.json
+
+Compares the per-(tier, work_items) cutover bytes emitted by the tuning
+profiler (``benchmarks.run --json``) against the checked-in baseline.  A
+finite cutover moving by more than 2x in either direction, a flip between
+finite and "never switch" (null), a key present on only one side, or a
+learned/analytic agreement below 0.95 fails the gate — any of these means
+the cost model, the estimator, or the sweep changed behaviour (if the change
+is intentional, regenerate the baseline with ``benchmarks.run --json``).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+MAX_RATIO = 2.0
+
+
+def _cutovers(doc: dict) -> dict:
+    # accept either a bare TuningTable dump or the full profiler document
+    table = doc.get("table", doc)
+    return table.get("cutovers", {})
+
+
+def main(argv) -> int:
+    if len(argv) != 3:
+        print(__doc__.strip().splitlines()[2])
+        return 2
+    current = _cutovers(json.load(open(argv[1])))
+    baseline = _cutovers(json.load(open(argv[2])))
+    if not baseline:
+        print("check_cutover: baseline has no cutovers — refusing to pass")
+        return 2
+    failures = []
+    for key in sorted(set(baseline) | set(current)):
+        base = baseline.get(key, "missing")
+        cur = current.get(key, "missing")
+        if cur == "missing":
+            failures.append(f"{key}: missing from current profile")
+        elif base == "missing":
+            failures.append(f"{key}: new cutover key not in baseline "
+                            "(regenerate the baseline if intentional)")
+        elif (base is None) != (cur is None):
+            failures.append(f"{key}: finite/infinite flip "
+                            f"(baseline={base}, current={cur})")
+        elif base is not None and cur is not None:
+            lo, hi = sorted((max(1, base), max(1, cur)))
+            if hi / lo > MAX_RATIO:
+                failures.append(f"{key}: {base} -> {cur} "
+                                f"({hi / lo:.2f}x > {MAX_RATIO}x)")
+    agree = json.load(open(argv[1])).get("agreement_vs_analytic")
+    if agree is not None and agree < 0.95:
+        failures.append(f"learned/analytic agreement {agree:.3f} < 0.95")
+    if failures:
+        print("check_cutover: FAIL")
+        for f in failures:
+            print("  " + f)
+        return 1
+    print(f"check_cutover: OK ({len(baseline)} cutover points within "
+          f"{MAX_RATIO}x of baseline"
+          + (f", agreement={agree:.3f})" if agree is not None else ")"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

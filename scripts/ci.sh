@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Tier-1 CI: test suite + cutover-regression gate.
+#
+#   scripts/ci.sh            # run everything
+#
+# The cutover gate re-runs the tuning profiler (benchmarks.run --json) and
+# fails if any emitted (tier, work_items) cutover point moved by more than
+# 2x against the checked-in benchmarks/baseline_cutover.json.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+# The --ignore list is the jax-version-drift set documented in ROADMAP.md
+# ("Open items"): these modules fail on the pinned jax 0.4.37 for reasons
+# unrelated to repo logic.  Drop entries as the toolchain catches up.
+python -m pytest -x -q \
+    --ignore=tests/test_comms_equiv.py \
+    --ignore=tests/test_dryrun_small.py \
+    --ignore=tests/test_ring_kernels.py \
+    --deselect=tests/test_hlo_parser.py::test_scan_flops_scaled_by_trip_count \
+    --deselect=tests/test_ishmem_api.py::test_hierarchical_psum_matches_flat \
+    --deselect=tests/test_system.py::test_dp_gradient_allreduce_via_shmem_backend
+
+echo "== cutover tuning profile =="
+python -m benchmarks.run --only cutover --json BENCH_cutover.json
+
+echo "== cutover regression gate =="
+python scripts/check_cutover.py BENCH_cutover.json benchmarks/baseline_cutover.json

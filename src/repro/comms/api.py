@@ -20,16 +20,18 @@ import jax.numpy as jnp
 
 from repro.core import cutover
 from repro.kernels import ops as kops
+from repro.tune import telemetry as telemetry_mod
 
 
 def get_ops(backend: str, *, npes: int = None,
             hw: cutover.HwParams = cutover.HwParams(),
-            tuning: cutover.Tuning = cutover.Tuning()):
+            tuning: cutover.Tuning = cutover.Tuning(),
+            telemetry: telemetry_mod.Sink | None = None):
     if backend == "xla":
         return XlaOps()
     if backend == "shmem":
         assert npes is not None, "shmem backend needs the axis size"
-        return ShmemOps(npes=npes, hw=hw, tuning=tuning)
+        return ShmemOps(npes=npes, hw=hw, tuning=tuning, telemetry=telemetry)
     raise ValueError(backend)
 
 
@@ -64,6 +66,7 @@ class ShmemOps:
     npes: int
     hw: cutover.HwParams = cutover.HwParams()
     tuning: cutover.Tuning = cutover.Tuning()
+    telemetry: telemetry_mod.Sink | None = None
     name: str = "shmem"
 
     # -- helpers -------------------------------------------------------------
@@ -76,12 +79,36 @@ class ShmemOps:
             flat = jnp.pad(flat, (0, pad))
         return flat.reshape(self.npes, -1), x.shape, pad
 
+    def _choose(self, nbytes):
+        """Per-collective transport pick: work-group context flows from the
+        tuning (ISHMEM_WORK_GROUP_SIZE), learned tables via tuning.table."""
+        return cutover.choose_path(nbytes, work_items=self.tuning.work_group_size,
+                                   tier="ici", hw=self.hw, tuning=self.tuning)
+
+    def _note(self, op, x, path=None):
+        if self.telemetry is None:
+            return
+        nbytes = int(x.size * x.dtype.itemsize)
+        if path is None:                   # only price the decision when a
+            path = self._choose(nbytes)    # sink is actually listening
+        wi = self.tuning.work_group_size
+        priced_path = path if path in ("direct", "engine") else "direct"
+        if op == "ppermute":               # one neighbor put, not a collective
+            t = cutover.op_time(nbytes, priced_path, work_items=wi,
+                                tier="ici", hw=self.hw)
+        else:
+            kind = "fcollect" if op in ("all_gather", "broadcast") else "reduce"
+            t = cutover.t_collective(kind, nbytes, self.npes, work_items=wi,
+                                     path=priced_path, hw=self.hw)
+        self.telemetry.record(telemetry_mod.OpRecord(op, nbytes, path, "ici",
+                                                     t, wi))
+
     # -- collectives ---------------------------------------------------------
     def psum(self, x, axis_name):
         rows, shape, pad = self._rows(x)
         nbytes = int(x.size * x.dtype.itemsize)
-        path = cutover.choose_path(nbytes, work_items=self.tuning.work_group_size,
-                                   tier="ici", hw=self.hw, tuning=self.tuning)
+        path = self._choose(nbytes)
+        self._note("psum", x, path)
         if path == "direct" and nbytes <= 1 << 16:
             # paper §III-G2 small reduce: fcollect + duplicated local compute
             gathered = kops.ring_allgather(x, axis_name=axis_name,
@@ -94,13 +121,16 @@ class ShmemOps:
         return flat.reshape(shape)
 
     def all_gather(self, x, axis_name):
+        self._note("all_gather", x)
         return kops.ring_allgather(x, axis_name=axis_name, npes=self.npes)
 
     def reduce_scatter(self, x, axis_name):
+        self._note("reduce_scatter", x)
         return kops.ring_reduce_scatter(x, axis_name=axis_name,
                                         npes=self.npes)
 
     def broadcast(self, x, axis_name, root=0):
+        self._note("broadcast", x)
         return kops.push_broadcast(x, axis_name=axis_name, npes=self.npes,
                                    root=root)
 
@@ -108,6 +138,7 @@ class ShmemOps:
         # ring permutation == neighbor put (device-initiated)
         offsets = {s: (d - s) % self.npes for s, d in perm}
         off = offsets.get(0, 1)
+        self._note("ppermute", x)
         return kops.remote_put(x, axis_name=axis_name, npes=self.npes,
                                target_offset=off,
                                work_items=self.tuning.work_group_size)

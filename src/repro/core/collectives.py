@@ -52,6 +52,15 @@ def _scatter_team(heap, ptr: SymPtr, team: Team, values):
 def _path(ctx, kind, nbytes, npes, work_items):
     if ctx.tuning.force_path:
         return ctx.tuning.force_path
+    if ctx.tuning.cutover_bytes is not None or (
+            ctx.tuning.table is not None
+            and ctx.tuning.table.lookup("ici", work_items) is not None):
+        # explicit/learned per-message cutover (ISHMEM_CUTOVER_BYTES or a
+        # measured TuningTable with ici coverage) overrides the analytic
+        # collective model; an armed table WITHOUT coverage for this tier
+        # must not reroute collectives through the point-to-point model
+        return cutover.choose_path(nbytes, work_items=work_items, tier="ici",
+                                   hw=ctx.hw, tuning=ctx.tuning)
     td = cutover.t_collective(kind, nbytes, npes, work_items=work_items,
                               path="direct", hw=ctx.hw)
     te = cutover.t_collective(kind, nbytes, npes, path="engine", hw=ctx.hw)
@@ -62,8 +71,7 @@ def _record(ctx, kind, nbytes, team, path, work_items):
     base_kind = kind.split("[")[0]
     t = cutover.t_collective(base_kind, nbytes, team.size,
                              work_items=work_items, path=path, hw=ctx.hw)
-    from repro.core.context import OpRecord
-    ctx.ledger.append(OpRecord(kind, nbytes, path, "ici", t, work_items))
+    ctx.record(kind, nbytes, path, "ici", work_items, t_sec=t)
 
 
 # ---------------------------------------------------------------------------

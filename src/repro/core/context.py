@@ -2,7 +2,15 @@
 
 Holds everything the paper's runtime sets up host-side: the device-resident
 symmetric heap, PE topology (which PEs share a fabric tier), transport tuning,
-and an operation ledger used by the benchmarks for the analytic cost curves.
+and the telemetry sink that feeds the online autotuner (``repro.tune``).
+
+The old flat write-only ``ledger`` list is now a bounded view over the
+telemetry trace: every ``record`` both appends an :class:`OpRecord` (so tests
+and examples can inspect recent ops) and aggregates into per-(op, path, tier,
+work_items) buckets that ``repro.tune.estimator`` fits measured transport
+profiles from.  ``init`` reads the ``ISHMEM_*`` environment variables (see
+``repro.tune.env``) when no explicit tuning is given — including warm-starting
+a learned cutover table from ``ISHMEM_TUNING_FILE``.
 """
 from __future__ import annotations
 
@@ -10,16 +18,11 @@ import dataclasses
 from typing import Optional
 
 from repro.core import cutover, heap as heap_mod, teams
+from repro.tune import env as env_mod, telemetry as telemetry_mod
 
-
-@dataclasses.dataclass
-class OpRecord:
-    op: str
-    nbytes: int
-    path: str
-    tier: str
-    t_sec: float
-    work_items: int = 1
+# canonical definition lives in the telemetry module; re-exported here for
+# backward compatibility (collectives/tests used to import it from context)
+OpRecord = telemetry_mod.OpRecord
 
 
 @dataclasses.dataclass
@@ -29,7 +32,8 @@ class ShmemContext:
     hw: cutover.HwParams
     tuning: cutover.Tuning
     use_kernels: bool = False           # route direct-path copies via Pallas
-    ledger: list = dataclasses.field(default_factory=list)
+    telemetry: telemetry_mod.TelemetrySink = dataclasses.field(
+        default_factory=telemetry_mod.TelemetrySink)
 
     # ------------------------------------------------------------ topology
     def node_of(self, pe: int) -> int:
@@ -49,32 +53,62 @@ class ShmemContext:
     def team_shared(self, pe: int = 0) -> teams.Team:
         return teams.shared(self.npes, self.node_size, self.node_of(pe))
 
-    # ------------------------------------------------------------ ledger
+    # ----------------------------------------------------------- telemetry
+    @property
+    def ledger(self) -> list:
+        """Recent-ops view (bounded trace) — back-compat with the old flat
+        ledger list; long-run aggregates live in ``self.telemetry``."""
+        return self.telemetry.trace
+
     def record(self, op: str, nbytes: int, path: str, tier: str,
-               work_items: int = 1) -> None:
-        t = cutover.op_time(nbytes, path, work_items=work_items,
-                            tier=tier if path != "proxy" else "dcn",
-                            hw=self.hw)
-        self.ledger.append(OpRecord(op, nbytes, path, tier, t, work_items))
+               work_items: int = 1, t_sec: Optional[float] = None) -> None:
+        """Record one op into the sink.  ``t_sec`` carries a measured (or
+        pre-modeled collective) time; when omitted the analytic RMA cost
+        model prices the op — so cold runs still populate the tuner."""
+        if t_sec is None:
+            t_sec = cutover.op_time(nbytes, path, work_items=work_items,
+                                    tier=tier if path != "proxy" else "dcn",
+                                    hw=self.hw)
+        self.telemetry.record(OpRecord(op, nbytes, path, tier, t_sec,
+                                       work_items))
 
     def total_time(self) -> float:
-        return sum(r.t_sec for r in self.ledger)
+        return self.telemetry.total_time()
 
     def reset_ledger(self) -> None:
-        self.ledger = []
+        self.telemetry.clear()
+
+    def fit_tuning_table(self, *, arm: bool = True):
+        """Fit a measured cutover table from everything recorded so far
+        (``repro.tune.estimator``); when ``arm`` is set the table is installed
+        on ``self.tuning`` so subsequent ``choose_path`` calls use it."""
+        from repro.tune import estimator, table as table_mod
+        if not isinstance(self.telemetry, telemetry_mod.TelemetrySink):
+            return table_mod.TuningTable(source="empty")  # e.g. NullSink
+        tbl = estimator.build_table(self.telemetry)
+        if arm and (tbl.cutovers or tbl.profiles):
+            self.tuning = dataclasses.replace(self.tuning, table=tbl)
+        return tbl
 
 
 def init(npes: int, node_size: Optional[int] = None,
          hw: Optional[cutover.HwParams] = None,
          tuning: Optional[cutover.Tuning] = None,
          heap_words: int = 1 << 20,
-         use_kernels: bool = False):
-    """ishmem_init: returns (ctx, heap).  1 PE : 1 device (paper §III-E)."""
+         use_kernels: bool = False,
+         telemetry: Optional[telemetry_mod.TelemetrySink] = None):
+    """ishmem_init: returns (ctx, heap).  1 PE : 1 device (paper §III-E).
+
+    When ``tuning`` is not given, the ``ISHMEM_*`` environment variables are
+    consulted (mirroring the real library's init-time knob parsing), which may
+    also arm a persisted tuning table via ``ISHMEM_TUNING_FILE``.
+    """
     ctx = ShmemContext(
         npes=npes,
         node_size=node_size or npes,
         hw=hw or cutover.HwParams(),
-        tuning=tuning or cutover.Tuning(),
+        tuning=tuning if tuning is not None else env_mod.tuning_from_env(),
         use_kernels=use_kernels,
+        telemetry=telemetry or telemetry_mod.TelemetrySink(),
     )
     return ctx, heap_mod.create(npes, heap_words)

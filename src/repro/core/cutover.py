@@ -42,10 +42,15 @@ class HwParams:
 
 @dataclasses.dataclass(frozen=True)
 class Tuning:
-    """User-tunable cutover policy (ISHMEM_* env-vars in the real library)."""
+    """User-tunable cutover policy (ISHMEM_* env-vars in the real library;
+    parsed by ``repro.tune.env``)."""
     cutover_bytes: int | None = None   # None -> model-derived
     force_path: str | None = None      # "direct" | "engine" | "proxy"
     work_group_size: int = 128
+    # A learned ``repro.tune.table.TuningTable`` (duck-typed via .lookup so
+    # core has no import edge into the tuner).  When armed, measured cutovers
+    # override the analytic model wherever the table has coverage.
+    table: object | None = None
 
 
 TIERS = ("local", "ici", "dcn")
@@ -83,6 +88,10 @@ def choose_path(nbytes: int, *, work_items: int = 128, tier: str = "ici",
         return "proxy"
     if tuning.cutover_bytes is not None:
         return "direct" if nbytes <= tuning.cutover_bytes else "engine"
+    if tuning.table is not None:
+        learned = tuning.table.lookup(tier, work_items)
+        if learned is not None:
+            return "direct" if nbytes <= learned else "engine"
     td = t_direct(hw, nbytes, work_items, tier)
     te = t_engine(hw, nbytes, tier)
     return "direct" if td <= te else "engine"

@@ -42,11 +42,15 @@ class HostProxy:
         self._pid += 1
         msg = ring_mod.Message(op=str(op), payload=hdr)
         self.ring.start(pid, msg)
-        # drive this producer's micro-steps until the message is visible
+        # drive this producer's micro-steps until the message is visible;
+        # wedge detection is relative to THIS submit (the shared spin counter
+        # is cumulative — an earlier wedge must not poison later submits)
         idx = None
+        spins_at_start = self.ring.spin_count
         while idx is None:
             idx = self.ring.producer_step(pid)
-            if idx is None and self.ring.spin_count > 10_000:
+            if idx is None and self.ring.spin_count - spins_at_start > 10_000:
+                self.ring._prod.pop(pid, None)   # abandon, don't leak the pid
                 raise RuntimeError("ring wedged: no consumer progress")
         if data is not None:
             # payloads beyond the inline 56 B ride in registered device

@@ -23,8 +23,10 @@ NEG_INF = -1e30
 
 
 def _interpret():
-    return (pltpu.InterpretParams()
-            if jax.default_backend() != "tpu" else False)
+    if jax.default_backend() == "tpu":
+        return False
+    params = getattr(pltpu, "InterpretParams", None)  # absent pre-jax-0.5
+    return params() if params is not None else True
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, scale):

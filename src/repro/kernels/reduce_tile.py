@@ -21,8 +21,10 @@ LANE = 128
 
 
 def _interpret():
-    return (pltpu.InterpretParams()
-            if jax.default_backend() != "tpu" else False)
+    if jax.default_backend() == "tpu":
+        return False
+    params = getattr(pltpu, "InterpretParams", None)  # absent pre-jax-0.5
+    return params() if params is not None else True
 
 
 def _reduce_kernel(rows_ref, o_ref, *, op):

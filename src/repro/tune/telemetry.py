@@ -1,0 +1,224 @@
+"""Telemetry sink: bounded per-(op, path, tier, work_items) sample aggregation.
+
+Replaces the flat write-only ``ledger`` list that used to live on
+``ShmemContext``.  Every recorded op updates
+
+- a bounded *trace* of recent :class:`OpRecord`\\ s (back-compat: the context's
+  ``ledger`` property is a view of it, so tests can still inspect the last
+  recorded op), and
+- an aggregate :class:`StatBucket` keyed by ``(op, path, tier, work_items)``
+  holding count / byte / time totals, a log2 message-size histogram, and a
+  bounded (nbytes, t_sec) sample reservoir that the estimator fits.
+
+Memory is bounded in both dimensions: the trace drops its oldest half when it
+exceeds ``max_trace``, and each bucket's reservoir decimates (keep every other
+sample, double the stride) when it reaches ``max_samples`` — so long runs keep
+a spread of samples across time instead of only the newest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Tuple
+
+Key = Tuple[str, str, str, int]          # (op, path, tier, work_items)
+
+
+@dataclasses.dataclass
+class OpRecord:
+    """One recorded operation (canonical definition; re-exported by
+    ``core.context`` for backward compatibility)."""
+    op: str
+    nbytes: int
+    path: str
+    tier: str
+    t_sec: float
+    work_items: int = 1
+
+
+def _log2_bucket(nbytes: int) -> int:
+    return max(0, int(nbytes).bit_length() - 1) if nbytes > 0 else 0
+
+
+@dataclasses.dataclass
+class StatBucket:
+    """Aggregate stats for one (op, path, tier, work_items) key."""
+    count: int = 0
+    bytes_total: int = 0
+    time_total: float = 0.0
+    t_min: float = float("inf")
+    t_max: float = 0.0
+    size_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    samples: List[Tuple[int, float]] = dataclasses.field(default_factory=list)
+    max_samples: int = 256
+    _stride: int = 1
+    _seen: int = 0
+
+    def add(self, nbytes: int, t_sec: float) -> None:
+        self.count += 1
+        self.bytes_total += nbytes
+        self.time_total += t_sec
+        self.t_min = min(self.t_min, t_sec)
+        self.t_max = max(self.t_max, t_sec)
+        b = _log2_bucket(nbytes)
+        self.size_hist[b] = self.size_hist.get(b, 0) + 1
+        if self._seen % self._stride == 0:
+            self.samples.append((nbytes, t_sec))
+            if len(self.samples) >= self.max_samples:
+                self.samples = self.samples[::2]     # decimate, keep spread
+                self._stride *= 2
+        self._seen += 1
+
+    def mean_time(self) -> float:
+        return self.time_total / self.count if self.count else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "count": self.count,
+            "bytes_total": self.bytes_total,
+            "time_total": self.time_total,
+            "t_min": self.t_min if self.count else 0.0,
+            "t_max": self.t_max,
+            "size_hist": {str(k): v for k, v in sorted(self.size_hist.items())},
+            "samples_kept": len(self.samples),
+        }
+
+
+class Sink:
+    """Pluggable sink interface consumed by ``ShmemContext.record``."""
+
+    def record(self, rec: OpRecord) -> None:          # pragma: no cover
+        raise NotImplementedError
+
+
+class NullSink(Sink):
+    """Discards everything (zero-overhead mode for production serving)."""
+
+    buckets: Dict[Key, StatBucket] = {}
+
+    def __init__(self):
+        self.trace: List[OpRecord] = []    # per-instance: callers may index it
+
+    def record(self, rec: OpRecord) -> None:
+        pass
+
+    def total_time(self) -> float:
+        return 0.0
+
+    def clear(self) -> None:
+        pass
+
+
+class TelemetrySink(Sink):
+    def __init__(self, max_trace: int = 65536,
+                 max_samples_per_bucket: int = 256):
+        self.max_trace = max_trace
+        self.max_samples_per_bucket = max_samples_per_bucket
+        self.trace: List[OpRecord] = []
+        self.buckets: Dict[Key, StatBucket] = {}
+
+    # -------------------------------------------------------------- record
+    def record(self, rec: OpRecord) -> None:
+        self.trace.append(rec)
+        if len(self.trace) > self.max_trace:
+            # amortized drop-oldest — preferring to keep pending nbi markers
+            # (rma.quiet() completes them later), but the bound always wins:
+            # if pending ops alone overflow it, the oldest are dropped too
+            half = len(self.trace) // 2
+            pending = [r for r in self.trace[:half]
+                       if r.op.endswith("(pending)")]
+            self.trace[:half] = pending
+            if len(self.trace) > self.max_trace:
+                del self.trace[: len(self.trace) - self.max_trace]
+        key = (rec.op, rec.path, rec.tier, rec.work_items)
+        bucket = self.buckets.get(key)
+        if bucket is None:
+            bucket = self.buckets[key] = StatBucket(
+                max_samples=self.max_samples_per_bucket)
+        bucket.add(rec.nbytes, rec.t_sec)
+
+    # --------------------------------------------------------------- query
+    def total_time(self) -> float:
+        """Total modeled/measured time over ALL recorded ops (stable even
+        after the bounded trace has dropped old records)."""
+        return sum(b.time_total for b in self.buckets.values())
+
+    def total_count(self) -> int:
+        return sum(b.count for b in self.buckets.values())
+
+    def samples(self, *, path: str, tier: str,
+                work_items: Optional[int] = None,
+                op: Optional[str] = None,
+                op_ok=None) -> List[Tuple[int, float]]:
+        """All retained (nbytes, t_sec) samples matching the filter.
+        ``op_ok`` is an optional predicate over the op name (e.g. to keep
+        collective timings out of a point-to-point fit)."""
+        out: List[Tuple[int, float]] = []
+        for (k_op, k_path, k_tier, k_wi), b in self.buckets.items():
+            if k_path != path or k_tier != tier:
+                continue
+            if work_items is not None and k_wi != work_items:
+                continue
+            if op is not None and k_op != op:
+                continue
+            if op_ok is not None and not op_ok(k_op):
+                continue
+            out.extend(b.samples)
+        return out
+
+    def work_item_keys(self, *, path: str, tier: str) -> List[int]:
+        """Distinct work-group sizes observed for (path, tier)."""
+        keys = {k_wi for (_, k_path, k_tier, k_wi) in self.buckets
+                if k_path == path and k_tier == tier}
+        return sorted(keys)
+
+    def tiers(self) -> List[str]:
+        return sorted({k_tier for (_, _, k_tier, _) in self.buckets})
+
+    # ------------------------------------------------------------ maintain
+    def clear(self) -> None:
+        self.trace = []
+        self.buckets = {}
+
+    def merge(self, other: "TelemetrySink") -> None:
+        """Fold another sink's aggregates into this one (trace not merged)."""
+        for key, b in other.buckets.items():
+            mine = self.buckets.get(key)
+            if mine is None:
+                mine = self.buckets[key] = StatBucket(
+                    max_samples=self.max_samples_per_bucket)
+            mine.count += b.count
+            mine.bytes_total += b.bytes_total
+            mine.time_total += b.time_total
+            mine.t_min = min(mine.t_min, b.t_min)
+            mine.t_max = max(mine.t_max, b.t_max)
+            for h, c in b.size_hist.items():
+                mine.size_hist[h] = mine.size_hist.get(h, 0) + c
+            # combine reservoirs, decimating like add() so both runs stay
+            # represented when the union exceeds the bound
+            combined = mine.samples + b.samples
+            while len(combined) >= mine.max_samples:
+                combined = combined[::2]
+            mine.samples = combined
+            mine._stride = max(mine._stride, b._stride)
+            mine._seen += b._seen
+
+    def snapshot(self) -> dict:
+        """JSON-able aggregate view (no raw trace)."""
+        return {
+            "total_count": self.total_count(),
+            "total_time": self.total_time(),
+            "buckets": {
+                f"{op}/{path}/{tier}/{wi}": b.snapshot()
+                for (op, path, tier, wi), b in sorted(self.buckets.items())
+            },
+        }
+
+
+def replay(records: Iterable[OpRecord],
+           sink: Optional[TelemetrySink] = None) -> TelemetrySink:
+    """Feed an iterable of records through a (new) sink — used to rebuild
+    aggregates from a saved trace."""
+    sink = sink or TelemetrySink()
+    for rec in records:
+        sink.record(rec)
+    return sink

@@ -1,0 +1,88 @@
+"""Deterministic fallback for ``hypothesis`` on clean interpreters.
+
+The property tests prefer real hypothesis when it is installed (see
+``requirements.txt``); when it is missing this shim supplies the tiny subset
+of the API they use — ``given``, ``settings`` and the ``integers`` /
+``sampled_from`` / ``lists`` / ``tuples`` strategies — driven by a fixed-seed
+PRNG plus boundary-value examples, so the suite still exercises the
+properties instead of skipping six whole modules.  No shrinking, no database:
+failures report the generated arguments in the assertion traceback.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_SEED = 0x15836  # stable across runs: failures are reproducible
+
+
+class _Strategy:
+    def __init__(self, sample, corners=()):
+        self._sample = sample
+        self.corners = list(corners)
+
+    def example(self, rnd):
+        return self._sample(rnd)
+
+
+class strategies:                                     # mirrors `hypothesis.strategies as st`
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value),
+                         corners=[min_value, max_value])
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda r: r.choice(seq), corners=[seq[0], seq[-1]])
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=10):
+        def sample(r):
+            k = r.randint(min_size, max_size)
+            return [elem.example(r) for _ in range(k)]
+        corners = [[]] if min_size == 0 else []
+        return _Strategy(sample, corners=corners)
+
+    @staticmethod
+    def tuples(*elems):
+        return _Strategy(lambda r: tuple(e.example(r) for e in elems))
+
+
+st = strategies
+
+
+class settings:
+    def __init__(self, max_examples=25, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        # decorator order is @settings above @given: fn is given()'s wrapper
+        fn._minihyp_max_examples = self.max_examples
+        return fn
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*fixture_args, **fixture_kwargs):
+            rnd = random.Random(_SEED)
+            n = getattr(wrapper, "_minihyp_max_examples", 25)
+            for i in range(n):
+                vals = []
+                for s in strats:
+                    if i < len(s.corners):             # boundary values first
+                        vals.append(s.corners[i])
+                    else:
+                        vals.append(s.example(rnd))
+                fn(*fixture_args, *vals, **fixture_kwargs)
+        # hide the strategy-filled trailing params from pytest's fixture
+        # resolution (hypothesis fills positional args right-to-left)
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        visible = params[: len(params) - len(strats)] if strats else params
+        wrapper.__signature__ = sig.replace(parameters=visible)
+        del wrapper.__wrapped__                        # signature wins
+        return wrapper
+    return deco

@@ -13,6 +13,33 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax  # noqa: E402
 import pytest  # noqa: E402
 
+# --- jax API compat ---------------------------------------------------------
+# The tests target the current jax surface; older installs (e.g. 0.4.x) spell
+# these differently.  Shim only what is missing so new jax runs untouched.
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map  # noqa: E402
+
+    def _compat_shard_map(f, **kwargs):
+        if "check_vma" in kwargs:                 # renamed from check_rep
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(f, **kwargs)
+
+    jax.shard_map = _compat_shard_map
+
+try:
+    _am = jax.sharding.AbstractMesh((1,), ("_probe",))
+    del _am
+except TypeError:                                 # old ctor: ((name, size), ...)
+    _OldAbstractMesh = jax.sharding.AbstractMesh
+
+    def _compat_abstract_mesh(axis_sizes, axis_names=None, **kwargs):
+        if axis_names is None:
+            return _OldAbstractMesh(axis_sizes, **kwargs)
+        return _OldAbstractMesh(tuple(zip(axis_names, axis_sizes)), **kwargs)
+
+    jax.sharding.AbstractMesh = _compat_abstract_mesh
+
 
 @pytest.fixture(scope="session")
 def mesh8():

@@ -1,6 +1,9 @@
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # clean interpreter: deterministic fallback
+    from _minihyp import given, settings, strategies as st
 
 from repro.core import amo, context
 

@@ -3,7 +3,10 @@ behaviour (Figs. 3-6)."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # clean interpreter: deterministic fallback
+    from _minihyp import given, settings, strategies as st
 
 from repro.core import cutover
 

@@ -1,5 +1,6 @@
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import context, proxy
 
@@ -48,3 +49,79 @@ def test_quiet_message():
     px.quiet()
     heap = px.drain(heap)
     assert any(r.op == "proxy_quiet" for r in ctx.ledger)
+
+
+# ---------------------------------------------------------------------------
+# drain edge cases: ring wedge, multi-producer reaping, AMO pre-images
+# ---------------------------------------------------------------------------
+
+
+def test_submit_wedges_when_ring_full_and_no_consumer():
+    ctx, heap = context.init(npes=4, node_size=2)
+    px = proxy.HostProxy(ctx, slots=4)
+    p = heap.malloc((8,), "float32")
+    for i in range(4):                       # fill every slot, never drain
+        px.put(p, jnp.full(8, float(i)), 1)
+    spins_before = px.ring.spin_count
+    with pytest.raises(RuntimeError, match="ring wedged"):
+        px.put(p, jnp.zeros(8), 1)
+    assert px.ring.spin_count > 10_000       # detected via the spin counter
+    assert px.ring.spin_count > spins_before
+    # the abandoned producer must not leak in the ring's registry
+    assert len(px.ring._prod) == 4
+    # no slot was reserved by the wedged producer: backlog drains cleanly...
+    heap = px.drain(heap)
+    assert len(px.ring.delivered) == 4
+    assert px.ring.overwrite_errors == 0
+    # ...and the ring accepts new traffic afterwards
+    px.put(p, jnp.full(8, 9.0), 2)
+    heap = px.drain(heap)
+    assert float(heap.read(p, 2)[0]) == 9.0
+
+
+def test_drain_reaps_multiple_outstanding_producers():
+    ctx, heap = context.init(npes=4, node_size=2)
+    px = proxy.HostProxy(ctx, slots=16)
+    p = heap.malloc((4,), "float32")
+    ids = [px.put(p, jnp.full(4, float(i)), i % 4) for i in range(10)]
+    # all ten producers are outstanding (visible, uncompleted) before drain
+    assert len(px.ring._prod) == 10
+    assert not px.ring.completions
+    heap = px.drain(heap)
+    # one drain executes every message AND reaps every completed producer
+    assert len(px.ring.delivered) == 10
+    assert len(px.ring._prod) == 0
+    assert set(px.ring.completions) == {idx for _, idx in ids}
+    # last writer per PE wins (FIFO ring order)
+    for pe in range(4):
+        last = max(i for i in range(10) if i % 4 == pe)
+        assert float(heap.read(p, pe)[0]) == float(last)
+
+
+def test_amo_add_returns_pre_image_per_message():
+    ctx, heap = context.init(npes=4, node_size=2)
+    px = proxy.HostProxy(ctx)
+    p = heap.malloc((), "int32")
+    adds = [3, 11, -4, 7]
+    idxs = [px.amo_add(p, v, 1)[1] for v in adds]
+    heap = px.drain(heap)
+    # completion i carries the value *before* add i (the AMO fetch semantics),
+    # even though all adds were outstanding together
+    running = 0
+    for v, idx in zip(adds, idxs):
+        assert int(px.ring.completions[idx]) == running
+        running += v
+    assert int(heap.read(p, 1).reshape(())) == running
+
+
+def test_amo_add_pre_image_interleaved_with_puts():
+    ctx, heap = context.init(npes=2, node_size=1)
+    px = proxy.HostProxy(ctx)
+    p = heap.malloc((), "int32")
+    _, i1 = px.amo_add(p, 5, 1)
+    px.put(p, jnp.asarray(100, "int32"), 1)  # FIFO: executes after the add
+    _, i2 = px.amo_add(p, 2, 1)
+    heap = px.drain(heap)
+    assert int(px.ring.completions[i1]) == 0     # pre-image of first add
+    assert int(px.ring.completions[i2]) == 100   # put landed in between
+    assert int(heap.read(p, 1).reshape(())) == 102

@@ -1,6 +1,9 @@
 """Property tests for the lock-free reverse-offload ring (paper §III-D)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # clean interpreter: deterministic fallback
+    from _minihyp import given, settings, strategies as st
 
 from repro.core.ring import Message, RingBuffer
 

@@ -1,0 +1,304 @@
+"""Acceptance tests for the online autotuning subsystem (repro.tune):
+
+- telemetry aggregation + bounded memory,
+- estimator recovery of alpha/bw from synthetic op_time samples (<=10% error),
+- learned-table vs analytic choose_path agreement (>=95% of the grid),
+- TuningTable JSON round-trip + merge,
+- ISHMEM_* env-var surface feeding cutover.Tuning / context.init,
+- benchmarks profile mode emitting a valid BENCH_cutover.json.
+"""
+import json
+import math
+
+import pytest
+
+from repro.core import context, cutover
+from repro.tune import env as env_mod, estimator, table as table_mod, telemetry
+
+HW = cutover.HwParams()
+WORK_ITEMS = (1, 16, 128, 1024)
+
+
+def _fitted_table(noise=0.0):
+    sink = estimator.synthetic_sweep(HW, work_items=WORK_ITEMS, noise=noise)
+    return estimator.build_table(sink)
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_sink_aggregates_by_key():
+    sink = telemetry.TelemetrySink()
+    for i in range(10):
+        sink.record(telemetry.OpRecord("put", 1024, "direct", "ici", 1e-6, 16))
+    sink.record(telemetry.OpRecord("put", 2048, "engine", "ici", 2e-6, 16))
+    b = sink.buckets[("put", "direct", "ici", 16)]
+    assert b.count == 10 and b.bytes_total == 10240
+    assert sink.total_count() == 11
+    assert sink.total_time() == pytest.approx(10 * 1e-6 + 2e-6)
+    assert sink.samples(path="engine", tier="ici") == [(2048, 2e-6)]
+
+
+def test_sink_bounded_memory():
+    sink = telemetry.TelemetrySink(max_trace=128, max_samples_per_bucket=32)
+    for i in range(10_000):
+        sink.record(telemetry.OpRecord("put", i + 1, "direct", "ici",
+                                       1e-6 * (i + 1), 1))
+    assert len(sink.trace) <= 128
+    b = sink.buckets[("put", "direct", "ici", 1)]
+    assert len(b.samples) <= 32
+    assert b.count == 10_000                      # aggregates never dropped
+    # decimation keeps spread: both early and late samples survive
+    xs = [x for x, _ in b.samples]
+    assert min(xs) < 2_000 and max(xs) > 8_000
+
+
+def test_context_records_through_sink():
+    ctx, heap = context.init(npes=4, node_size=2)
+    ctx.record("put", 4096, "direct", "ici", 16)
+    assert ctx.ledger[-1].op == "put"             # back-compat trace view
+    assert ("put", "direct", "ici", 16) in ctx.telemetry.buckets
+    assert ctx.total_time() > 0
+    ctx.reset_ledger()
+    assert not ctx.ledger and not ctx.telemetry.buckets
+
+
+# ---------------------------------------------------------------------------
+# estimator: recovery + agreement (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+
+def test_estimator_recovers_alpha_and_bw():
+    tbl = _fitted_table()
+    for wi in WORK_ITEMS:
+        d = tbl.profiles[("direct", "ici", wi)]
+        e = tbl.profiles[("engine", "ici", table_mod.ANY_WI)]
+        true_gap = HW.alpha_engine - HW.alpha_direct
+        assert (e.alpha - d.alpha) == pytest.approx(true_gap, rel=0.10)
+        assert d.bw == pytest.approx(cutover.direct_bw(HW, wi), rel=0.10)
+        assert e.bw == pytest.approx(HW.ici_bw, rel=0.10)
+
+
+def test_estimator_robust_to_noise():
+    tbl = _fitted_table(noise=0.05)
+    d = tbl.profiles[("direct", "ici", 16)]
+    e = tbl.profiles[("engine", "ici", table_mod.ANY_WI)]
+    assert d.bw == pytest.approx(cutover.direct_bw(HW, 16), rel=0.10)
+    assert e.bw == pytest.approx(HW.ici_bw, rel=0.10)
+
+
+def test_learned_table_agrees_with_analytic_model():
+    tbl = _fitted_table()
+    frac = estimator.agreement(tbl, HW, work_items=WORK_ITEMS)
+    assert frac >= 0.95
+
+
+def test_choose_path_consults_learned_table():
+    # absurd learned cutover flips the decision away from the analytic model
+    tbl = table_mod.TuningTable(cutovers={("ici", 1): 1 << 30})
+    armed = cutover.Tuning(table=tbl)
+    n = 1 << 20                                   # analytic: engine at wi=1
+    assert cutover.choose_path(n, work_items=1, tier="ici", hw=HW) == "engine"
+    assert cutover.choose_path(n, work_items=1, tier="ici", hw=HW,
+                               tuning=armed) == "direct"
+    # uncovered tier falls back to the analytic model
+    assert cutover.choose_path(n, work_items=1, tier="local", hw=HW,
+                               tuning=armed) == \
+        cutover.choose_path(n, work_items=1, tier="local", hw=HW)
+
+
+def test_lookup_nearest_work_items():
+    tbl = table_mod.TuningTable(cutovers={("ici", 1): 100, ("ici", 1024): 900})
+    assert tbl.lookup("ici", 1) == 100
+    assert tbl.lookup("ici", 2) == 100            # nearest in log space
+    assert tbl.lookup("ici", 512) == 900
+    assert tbl.lookup("dcn", 1) is None
+
+
+def test_fit_linear_degenerate_inputs():
+    assert estimator.fit_linear([(64, 1e-6)]) is None           # too few
+    assert estimator.fit_linear([(64, 1e-6)] * 5) is None       # no spread
+    flat = estimator.fit_linear([(1 << b, 2e-6) for b in range(6, 12)])
+    assert flat is not None and math.isinf(flat.bw)             # pure latency
+    assert flat.alpha == pytest.approx(2e-6)
+
+
+# ---------------------------------------------------------------------------
+# table persistence
+# ---------------------------------------------------------------------------
+
+
+def test_table_json_roundtrip(tmp_path):
+    tbl = _fitted_table()
+    path = tmp_path / "tuning.json"
+    tbl.save(str(path))
+    back = table_mod.TuningTable.load(str(path))
+    assert back.cutovers == tbl.cutovers
+    assert set(back.profiles) == set(tbl.profiles)
+    for k, p in tbl.profiles.items():
+        assert back.profiles[k].alpha == pytest.approx(p.alpha)
+        assert back.profiles[k].bw == pytest.approx(p.bw) or \
+            (math.isinf(back.profiles[k].bw) and math.isinf(p.bw))
+    # infinite cutovers survive as null
+    doc = json.loads(path.read_text())
+    assert any(v is None for v in doc["cutovers"].values())
+
+
+def test_table_merge_weighted():
+    a = table_mod.TuningTable(
+        profiles={("direct", "ici", 1): table_mod.PathProfile(1e-6, 1e9, 10)},
+        cutovers={("ici", 1): 1000})
+    b = table_mod.TuningTable(
+        profiles={("direct", "ici", 1): table_mod.PathProfile(3e-6, 3e9, 30),
+                  ("engine", "ici", 0): table_mod.PathProfile(5e-6, 50e9, 20)},
+        cutovers={("ici", 16): 2000})
+    m = a.merge(b)
+    p = m.profiles[("direct", "ici", 1)]
+    assert p.nsamples == 40
+    assert p.alpha == pytest.approx(0.25 * 1e-6 + 0.75 * 3e-6)
+    assert m.cutovers[("ici", 16)] == 2000        # union preserved
+    # (ici,1) recomputed from merged direct+engine fits
+    assert m.cutovers[("ici", 1)] == table_mod.cutover_from_profiles(
+        p, m.profiles[("engine", "ici", 0)])
+
+
+# ---------------------------------------------------------------------------
+# env-var surface
+# ---------------------------------------------------------------------------
+
+
+def test_env_defaults_empty():
+    cfg = env_mod.load_env({})
+    assert cfg == env_mod.EnvConfig()
+    t = env_mod.tuning_from_env({})
+    assert t == cutover.Tuning()
+
+
+def test_env_parsing():
+    cfg = env_mod.load_env({
+        "ISHMEM_ENABLE_CUTOVER": "1",
+        "ISHMEM_CUTOVER_BYTES": "16K",
+        "ISHMEM_FORCE_PATH": "engine",
+        "ISHMEM_WORK_GROUP_SIZE": "256",
+    })
+    assert cfg.cutover_bytes == 16384
+    assert cfg.force_path == "engine"
+    assert cfg.work_group_size == 256
+    assert env_mod.parse_bytes("2M") == 2 << 20
+    assert env_mod.parse_bytes("1G") == 1 << 30
+    with pytest.raises(ValueError):
+        env_mod.load_env({"ISHMEM_FORCE_PATH": "warp"})
+    with pytest.raises(ValueError):
+        env_mod.load_env({"ISHMEM_ENABLE_CUTOVER": "maybe"})
+
+
+def test_env_disable_cutover_pins_direct():
+    t = env_mod.tuning_from_env({"ISHMEM_ENABLE_CUTOVER": "0"})
+    assert t.force_path is None                   # dcn must keep its proxy
+    assert cutover.choose_path(1 << 24, tier="ici", tuning=t) == "direct"
+    assert cutover.choose_path(1 << 24, tier="dcn", tuning=t) == "proxy"
+    # an explicit force path survives the disable
+    t2 = env_mod.tuning_from_env({"ISHMEM_ENABLE_CUTOVER": "0",
+                                  "ISHMEM_FORCE_PATH": "engine"})
+    assert t2.force_path == "engine"
+
+
+def test_estimator_ignores_collective_samples():
+    # collective timings scale with npes; mixing them into the p2p fit used
+    # to skew bandwidth by >4x (review finding) — they must be excluded
+    sink = estimator.synthetic_sweep(HW, work_items=(128,))
+    for lb in range(7, 25):
+        n = 1 << lb
+        t = cutover.t_collective("fcollect", n, 8, work_items=128,
+                                 path="direct", hw=HW)
+        sink.record(telemetry.OpRecord("fcollect", n, "direct", "ici", t, 128))
+    tbl = estimator.build_table(sink)
+    d = tbl.profiles[("direct", "ici", 128)]
+    assert d.bw == pytest.approx(cutover.direct_bw(HW, 128), rel=0.10)
+
+
+def test_uncovered_table_leaves_collective_model_alone():
+    from repro.core import collectives
+    ctx, heap = context.init(npes=2, node_size=2, tuning=cutover.Tuning())
+    want = collectives._path(ctx, "alltoall", 8192, 2, 1)
+    # armed table with NO ici coverage must not reroute collectives through
+    # the point-to-point model (review finding)
+    ctx.tuning = cutover.Tuning(table=table_mod.TuningTable(
+        cutovers={("local", 1): 123}))
+    assert collectives._path(ctx, "alltoall", 8192, 2, 1) == want
+
+
+def test_null_sink_safe_for_nbi():
+    import jax.numpy as jnp
+    from repro.core import rma
+    ctx, heap = context.init(npes=2, node_size=2,
+                             telemetry=telemetry.NullSink())
+    p = heap.malloc((8,), "float32")
+    heap = rma.put_nbi(ctx, heap, p, jnp.ones(8), 1)   # used to IndexError
+    heap = rma.quiet(ctx, heap)
+    assert float(heap.read(p, 1).sum()) == 8.0
+    assert ctx.ledger == [] and ctx.total_time() == 0.0
+
+
+def test_trace_trim_preserves_pending_nbi():
+    sink = telemetry.TelemetrySink(max_trace=64)
+    sink.record(telemetry.OpRecord("put_nbi(pending)", 64, "engine", "ici",
+                                   1e-6, 1))
+    for i in range(500):
+        sink.record(telemetry.OpRecord("put", 64, "direct", "ici", 1e-6, 1))
+    assert any(r.op == "put_nbi(pending)" for r in sink.trace)
+
+
+def test_trace_bound_wins_over_pending_flood():
+    # pathological: more pending markers than the bound — the bound holds
+    # (oldest pending drop) rather than degrading to unbounded growth
+    sink = telemetry.TelemetrySink(max_trace=64)
+    for i in range(1000):
+        sink.record(telemetry.OpRecord("put_nbi(pending)", 64, "engine",
+                                       "ici", 1e-6, 1))
+    assert len(sink.trace) <= 64
+
+
+def test_env_tuning_file_warm_start(tmp_path, monkeypatch):
+    tbl = _fitted_table()
+    path = tmp_path / "warm.json"
+    tbl.save(str(path))
+    t = env_mod.tuning_from_env({"ISHMEM_TUNING_FILE": str(path)})
+    assert t.table is not None
+    assert t.table.cutovers == tbl.cutovers
+    # and through ishmem_init via the process environment
+    monkeypatch.setenv("ISHMEM_TUNING_FILE", str(path))
+    monkeypatch.setenv("ISHMEM_WORK_GROUP_SIZE", "64")
+    ctx, _ = context.init(npes=2)
+    assert ctx.tuning.work_group_size == 64
+    assert ctx.tuning.table.cutovers == tbl.cutovers
+    monkeypatch.setenv("ISHMEM_TUNING_FILE", str(tmp_path / "missing.json"))
+    with pytest.raises(FileNotFoundError):
+        context.init(npes=2)
+
+
+# ---------------------------------------------------------------------------
+# profile -> persist -> warm-start pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_context_fit_tuning_table_online():
+    ctx, _ = context.init(npes=4, node_size=4, tuning=cutover.Tuning())
+    estimator.synthetic_sweep(ctx.hw, sink=ctx.telemetry)
+    tbl = ctx.fit_tuning_table()
+    assert ctx.tuning.table is tbl
+    assert estimator.agreement(tbl, ctx.hw) >= 0.95
+
+
+def test_bench_profile_emits_valid_json(tmp_path):
+    from benchmarks import bench_cutover
+    out = tmp_path / "BENCH_cutover.json"
+    doc = bench_cutover.profile(str(out))
+    loaded = json.loads(out.read_text())
+    assert loaded["bench"] == "cutover_profile"
+    assert loaded["agreement_vs_analytic"] >= 0.95
+    assert loaded["samples"] == doc["samples"] > 0
+    back = table_mod.TuningTable.from_json(loaded["table"])
+    assert back.cutovers                           # usable for warm-start
