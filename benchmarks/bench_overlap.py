@@ -1,0 +1,112 @@
+"""Comm-compute overlap: the completion engine's headline number.
+
+Two experiments, both against the blocking baseline:
+
+1. **nbi ring allreduce** — modeled time of a ring allreduce whose per-step
+   neighbor transfer is in flight while the previous chunk's tile-add
+   computes (``cutover.t_ring_allreduce(overlap=True)``) vs the blocking
+   schedule.  Overlap efficiency = t_blocking / t_nbi (> 1.0 whenever there
+   is compute to hide — the paper's §III-F promise).
+
+2. **write combining** — a real :class:`~repro.core.pending.CompletionQueue`
+   run: many small contiguous ``put_nbi`` calls, one ``quiet``.  The flush
+   coalesces them into few wire transfers; the coalescing ratio
+   (ops/transfers) and the modeled flush-time gain are reported, with the
+   same workload re-run under ``nbi_coalesce=False`` as the control.
+
+``smoke(json_path)`` is the CI entry point: one small instance of each,
+written to ``BENCH_overlap.json`` next to the cutover profile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import context, cutover, rma
+
+NPES = 8
+SIZES = tuple(1 << b for b in range(12, 25, 2))          # 4 KB .. 16 MB
+
+
+def _overlap_row(nbytes, *, work_items=128, hw=None):
+    """Ring allreduce where each arriving chunk feeds the next tile's
+    compute (consumer tile = 4 chunks: the chunk read against resident
+    weights) — the §III-F scenario the nbi ring step exists for."""
+    hw = hw or cutover.HwParams()
+    kw = dict(work_items=work_items, hw=hw,
+              step_compute_bytes=4 * nbytes / NPES)
+    tb = cutover.t_ring_allreduce(nbytes, NPES, overlap=False, **kw)
+    tn = cutover.t_ring_allreduce(nbytes, NPES, overlap=True, **kw)
+    return tb, tn, tb / tn
+
+
+def _coalesce_run(n_puts: int, elems_per_put: int, *, coalesce: bool):
+    """Issue ``n_puts`` contiguous small nbi puts + one quiet through a real
+    context; returns (queue stats, modeled flush seconds)."""
+    ctx, heap = context.init(npes=2, node_size=2)
+    ctx.tuning = dataclasses.replace(ctx.tuning, nbi_coalesce=coalesce)
+    buf = heap.malloc((n_puts * elems_per_put,), "float32")
+    t0 = ctx.total_time()
+    for i in range(n_puts):
+        piece = rma.SymPtr("float32", buf.offset + i * elems_per_put,
+                           (elems_per_put,))
+        heap = rma.put_nbi(ctx, heap, piece,
+                           jnp.full(elems_per_put, float(i)), 1)
+    heap = rma.quiet(ctx, heap)
+    assert float(heap.read(buf, 1)[-1]) == float(n_puts - 1)
+    return ctx.pending.stats, ctx.total_time() - t0
+
+
+def run():
+    hw = cutover.HwParams()
+    for wi in (1, 128, 1024):
+        for nbytes in SIZES:
+            tb, tn, eff = _overlap_row(nbytes, work_items=wi, hw=hw)
+            emit("overlap_ring", f"wi={wi},{nbytes}B", tn * 1e6,
+                 blocking_us=f"{tb * 1e6:.3f}", efficiency=f"{eff:.3f}")
+
+    for n_puts in (16, 128):
+        stats, t_co = _coalesce_run(n_puts, 128, coalesce=True)
+        _, t_un = _coalesce_run(n_puts, 128, coalesce=False)
+        emit("overlap_coalesce", f"puts={n_puts}x512B", t_co * 1e6,
+             transfers=stats.transfers,
+             ratio=f"{stats.coalescing_ratio():.1f}",
+             uncoalesced_us=f"{t_un * 1e6:.3f}",
+             gain=f"{t_un / t_co:.2f}")
+
+
+def smoke(json_path: str = "BENCH_overlap.json") -> dict:
+    """CI smoke: one overlap point + one coalescing run -> JSON artifact."""
+    nbytes = 1 << 20
+    tb, tn, eff = _overlap_row(nbytes)
+    stats, t_co = _coalesce_run(64, 128, coalesce=True)
+    _, t_un = _coalesce_run(64, 128, coalesce=False)
+    doc = {
+        "bench": "overlap_smoke",
+        "ring_allreduce": {
+            "nbytes": nbytes, "npes": NPES,
+            "t_blocking_s": tb, "t_nbi_s": tn,
+            "overlap_efficiency": eff,
+        },
+        "write_combining": {
+            "puts": 64, "bytes_per_put": 512,
+            "transfers": stats.transfers,
+            "coalescing_ratio": stats.coalescing_ratio(),
+            "t_coalesced_s": t_co, "t_uncoalesced_s": t_un,
+            "flush_gain": t_un / t_co if t_co else 1.0,
+        },
+    }
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("overlap_smoke", json_path, tn * 1e6,
+         efficiency=f"{eff:.3f}",
+         coalescing_ratio=f"{stats.coalescing_ratio():.1f}")
+    return doc
+
+
+if __name__ == "__main__":
+    run()

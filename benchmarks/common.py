@@ -9,15 +9,33 @@ Two kinds of numbers appear:
               reproduction of the paper's figures), and
   - measured: wall-clock of the interpret-mode kernels / protocol machines on
               CPU (relative trends only; absolute CPU time is not TPU time).
+
+Measured timings feed the autotuner: pass ``record=(op, nbytes, path, tier,
+work_items)`` to :func:`best_of` and the best wall-clock lands in
+:data:`MEASURED` — a process-wide ``TelemetrySink`` that ``benchmarks.run``
+fits after a suite pass, so fitted tables can reflect wall clock instead of
+the analytic model replayed (on real TPU hardware this IS the paper's tuning
+loop; on CPU the fits are tagged ``measured-wall-clock`` and kept out of the
+CI cutover gate, which compares modeled numbers only).
 """
 from __future__ import annotations
 
 import time
 
+from repro.tune import telemetry as telemetry_mod
 
-def best_of(fn, *, trials: int = 10, min_warm_s: float = 0.002):
+# wall-clock samples from every best_of(..., record=...) call in this process
+MEASURED = telemetry_mod.TelemetrySink()
+
+
+# single shared shim — tests/conftest.py applies the same one
+from repro._jaxcompat import ensure_jax_compat  # noqa: F401
+
+
+def best_of(fn, *, trials: int = 10, min_warm_s: float = 0.002, record=None):
     """Paper methodology: double warm-up iterations until >2 ms, then best
-    of ``trials``."""
+    of ``trials``.  ``record=(op, nbytes, path, tier, work_items)`` routes
+    the resulting best time into the :data:`MEASURED` telemetry sink."""
     iters = 1
     while True:
         t0 = time.perf_counter()
@@ -32,6 +50,10 @@ def best_of(fn, *, trials: int = 10, min_warm_s: float = 0.002):
         t0 = time.perf_counter()
         fn()
         best = min(best, time.perf_counter() - t0)
+    if record is not None:
+        op, nbytes, path, tier, work_items = record
+        MEASURED.record(telemetry_mod.OpRecord(op, int(nbytes), path, tier,
+                                               best, int(work_items)))
     return best
 
 

@@ -15,6 +15,8 @@ import argparse
 
 
 def main() -> None:
+    from benchmarks import common
+    common.ensure_jax_compat()
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated substring filters")
@@ -33,8 +35,8 @@ def main() -> None:
         return
 
     from benchmarks import (bench_broadcast, bench_cutover, bench_fcollect,
-                            bench_kernels, bench_ring, bench_rma,
-                            bench_workgroup)
+                            bench_kernels, bench_overlap, bench_ring,
+                            bench_rma, bench_workgroup, common)
     suites = [
         ("fig3_rma", bench_rma.run),
         ("fig4_workgroup", bench_workgroup.run),
@@ -43,6 +45,7 @@ def main() -> None:
         ("fig7_broadcast", bench_broadcast.run),
         ("ring_buffer", bench_ring.run),
         ("kernels", bench_kernels.run),
+        ("overlap", bench_overlap.run),
     ]
     only = args.only.split(",") if args.only else None
     print("bench,config,us_per_call,derived")
@@ -50,6 +53,21 @@ def main() -> None:
         if only and not any(o in name for o in only):
             continue
         fn()
+
+    # fit whatever wall-clock samples the suites recorded (benchmarks pass
+    # record= to best_of) — the measured half of the tuning loop.  On CPU the
+    # fits are interpreter wall clock (relative trends only), so the table is
+    # written to a separate artifact and never fed to the CI cutover gate;
+    # on TPU this file IS a hardware-truth ISHMEM_TUNING_FILE.
+    if common.MEASURED.total_count():
+        from repro.tune import estimator
+        tbl = estimator.build_table(common.MEASURED,
+                                    source="measured-wall-clock")
+        if tbl.profiles or tbl.cutovers:
+            tbl.save("BENCH_measured.json")
+            print(f"# wrote BENCH_measured.json: "
+                  f"{common.MEASURED.total_count()} wall-clock samples, "
+                  f"{len(tbl.profiles)} fitted profiles")
 
 
 if __name__ == "__main__":

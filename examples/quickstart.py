@@ -33,8 +33,15 @@ print("wg put path          =", ctx.ledger[-1].path,
 heap, old = amo.fetch_add(ctx, heap, ctr, 5, pe=2)
 heap = signal.put_signal(ctx, heap, buf, data, sig, 1,
                          signal.SIGNAL_ADD, dst_pe=2, src_pe=0)
-cur, ok = signal.signal_wait_until(ctx, heap, sig, 2, "ge", 1)
+heap, cur, ok = signal.signal_wait_until(ctx, heap, sig, 2, "ge", 1)
 print("signal at PE2        =", int(cur), "satisfied:", bool(ok))
+
+# --- non-blocking ops: deferred until quiet (completion engine) -------------
+heap = rma.put_nbi(ctx, heap, buf, data * 3, dst_pe=2, src_pe=0)
+print("before quiet [1]     =", float(heap.read(buf, 2)[1]), "(old value)")
+heap = rma.quiet(ctx, heap)                 # completes + coalesces the queue
+print("after  quiet [1]     =", float(heap.read(buf, 2)[1]),
+      f"(coalescing ratio {ctx.pending.stats.coalescing_ratio():.1f})")
 
 # --- collectives on the shared-fabric team (paper Figs. 6-7) ---------------
 team = ctx.team_shared(0)                                   # PEs 0..3

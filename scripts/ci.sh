@@ -1,30 +1,37 @@
 #!/usr/bin/env bash
-# Tier-1 CI: test suite + cutover-regression gate.
+# Tier-1 CI: test suite + cutover-regression gate + overlap smoke.
 #
 #   scripts/ci.sh            # run everything
 #
 # The cutover gate re-runs the tuning profiler (benchmarks.run --json) and
 # fails if any emitted (tier, work_items) cutover point moved by more than
-# 2x against the checked-in benchmarks/baseline_cutover.json.
+# 2x against the checked-in benchmarks/baseline_cutover.json.  The overlap
+# smoke emits BENCH_overlap.json (modeled nbi overlap efficiency + the
+# completion queue's write-combining ratio) alongside the cutover profile.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
-# The --ignore list is the jax-version-drift set documented in ROADMAP.md
-# ("Open items"): these modules fail on the pinned jax 0.4.37 for reasons
-# unrelated to repo logic.  Drop entries as the toolchain catches up.
-python -m pytest -x -q \
-    --ignore=tests/test_comms_equiv.py \
-    --ignore=tests/test_dryrun_small.py \
-    --ignore=tests/test_ring_kernels.py \
-    --deselect=tests/test_hlo_parser.py::test_scan_flops_scaled_by_trip_count \
-    --deselect=tests/test_ishmem_api.py::test_hierarchical_psum_matches_flat \
-    --deselect=tests/test_system.py::test_dp_gradient_allreduce_via_shmem_backend
+# jax-version drift is marked in-tree (version-keyed xfail/skip, see
+# tests/conftest.py and ROADMAP.md "Open items"), so the plain suite is
+# clean signal — no ignore/deselect lists to keep in sync here.
+python -m pytest -q
 
 echo "== cutover tuning profile =="
 python -m benchmarks.run --only cutover --json BENCH_cutover.json
 
 echo "== cutover regression gate =="
 python scripts/check_cutover.py BENCH_cutover.json benchmarks/baseline_cutover.json
+
+echo "== overlap smoke (completion engine) =="
+python - <<'EOF'
+from benchmarks import bench_overlap
+doc = bench_overlap.smoke("BENCH_overlap.json")
+eff = doc["ring_allreduce"]["overlap_efficiency"]
+ratio = doc["write_combining"]["coalescing_ratio"]
+assert eff > 1.0, f"nbi overlap efficiency regressed to {eff:.3f} (<= 1.0)"
+assert ratio > 1.0, f"write combining inactive (ratio {ratio:.1f})"
+print(f"overlap efficiency {eff:.3f}, coalescing ratio {ratio:.1f} -> OK")
+EOF

@@ -103,9 +103,45 @@ class ShmemOps:
         self.telemetry.record(telemetry_mod.OpRecord(op, nbytes, path, "ici",
                                                      t, wi))
 
+    def _note_overlap(self, op, x, *, overlap: bool):
+        """Record the modeled cost of a ring allreduce under the nbi
+        (overlapped) or blocking schedule — the completion-engine pricing of
+        the same data movement (cutover.t_ring_allreduce)."""
+        if self.telemetry is None:
+            return
+        nbytes = int(x.size * x.dtype.itemsize)
+        wi = self.tuning.work_group_size
+        t = cutover.t_ring_allreduce(nbytes, self.npes, work_items=wi,
+                                     tier="ici", hw=self.hw,
+                                     tuning=self.tuning, overlap=overlap)
+        self.telemetry.record(telemetry_mod.OpRecord(op, nbytes, "direct",
+                                                     "ici", t, wi))
+
+    def modeled_overlap_efficiency(self, nbytes: int, *,
+                                   step_compute_bytes: float = None) -> float:
+        """Blocking-over-nbi modeled time ratio for one ring allreduce of
+        ``nbytes``.  ``step_compute_bytes`` is the application tile compute
+        each arriving chunk feeds (default: a consumer tile the size of four
+        chunks — the next layer reading the chunk against resident weights);
+        > 1.0 whenever that compute can hide under the in-flight transfer."""
+        if step_compute_bytes is None:
+            step_compute_bytes = 4 * nbytes / max(1, self.npes)
+        return cutover.overlap_efficiency(
+            nbytes, self.npes, work_items=self.tuning.work_group_size,
+            tier="ici", hw=self.hw, tuning=self.tuning,
+            step_compute_bytes=step_compute_bytes)
+
     # -- collectives ---------------------------------------------------------
-    def psum(self, x, axis_name):
+    def _psum_rs_ag(self, x, axis_name):
+        """Chunked RS+AG allreduce over padded (npes, k) rows."""
         rows, shape, pad = self._rows(x)
+        full = kops.ring_allreduce(rows, axis_name=axis_name, npes=self.npes)
+        flat = full.reshape(-1)
+        if pad:
+            flat = flat[:-pad]
+        return flat.reshape(shape)
+
+    def psum(self, x, axis_name):
         nbytes = int(x.size * x.dtype.itemsize)
         path = self._choose(nbytes)
         self._note("psum", x, path)
@@ -114,11 +150,22 @@ class ShmemOps:
             gathered = kops.ring_allgather(x, axis_name=axis_name,
                                            npes=self.npes)
             return gathered.sum(axis=0)
-        full = kops.ring_allreduce(rows, axis_name=axis_name, npes=self.npes)
-        flat = full.reshape(-1)
-        if pad:
-            flat = flat[:-pad]
-        return flat.reshape(shape)
+        return self._psum_rs_ag(x, axis_name)
+
+    def psum_overlap(self, x, axis_name):
+        """Allreduce via the nbi ring step (paper §III-F overlap): every
+        step's neighbor transfer is in flight while the previous chunk's
+        tile-add computes — the adds are off the transfer chain's critical
+        path, so comm and compute genuinely overlap in the dataflow graph.
+        The pass-around schedule moves npes*n bytes (vs 2n for RS+AG), so
+        large messages fall back to the chunked RS+AG path, whose overlap is
+        the modeled double-buffered schedule."""
+        nbytes = int(x.size * x.dtype.itemsize)
+        self._note_overlap("psum_nbi", x, overlap=True)
+        if nbytes * self.npes <= 2 * (1 << 20):      # wire-cost break-even
+            return kops.ring_allreduce_nbi(x, axis_name=axis_name,
+                                           npes=self.npes)
+        return self._psum_rs_ag(x, axis_name)
 
     def all_gather(self, x, axis_name):
         self._note("all_gather", x)

@@ -12,16 +12,35 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import pending as pending_mod
 from repro.core.heap import SymPtr, SymmetricHeap
 
 
 def _rmw(ctx, heap, ptr: SymPtr, pe, fn, opname, src_pe=0):
+    # a blocking atomic linearizes after everything already queued on this
+    # element: complete pending ops first (RMW reads, so nothing may drop)
+    heap = ctx.pending.resolve_store_conflicts(ctx, heap, ptr, pe,
+                                               covers=False)
     old = heap.read(ptr, pe).reshape(())
     new = fn(old)
     tier = ctx.tier(src_pe, pe)
     path = "proxy" if tier == "dcn" else "direct"
     ctx.record(f"amo_{opname}", jnp.dtype(ptr.dtype).itemsize, path, tier, 1)
     return heap.write(ptr, pe, new), old
+
+
+def _rmw_nbi(ctx, heap, ptr: SymPtr, pe, fn, opname, src_pe=0, delta=None):
+    """Deferred (non-fetching) AMO: the read-modify-write is queued and runs
+    at the next completion point.  Fetching AMOs cannot defer — their return
+    value is the pre-image — which mirrors the OpenSHMEM 1.5 nbi AMO set.
+    Adjacent queued adds on the same element merge (delta sums compose)."""
+    tier = ctx.tier(src_pe, pe)
+    ctx.record(f"amo_{opname}(pending)", jnp.dtype(ptr.dtype).itemsize,
+               "proxy" if tier == "dcn" else "direct", tier, 1, t_sec=0.0)
+    ctx.pending.submit(pending_mod.AMO, f"amo_{opname}", ptr, pe, tier,
+                       apply=fn, delta=delta,
+                       marker=ctx.ledger[-1] if ctx.ledger else None)
+    return heap
 
 
 def fetch(ctx, heap, ptr, pe, *, src_pe=0):
@@ -63,6 +82,26 @@ def fetch_inc(ctx, heap, ptr, pe, *, src_pe=0):
 
 def inc(ctx, heap, ptr, pe, *, src_pe=0):
     return add(ctx, heap, ptr, 1, pe, src_pe=src_pe)
+
+
+# ------------------------------------------------------------------ nbi AMOs
+
+
+def add_nbi(ctx, heap, ptr, value, pe, *, src_pe=0):
+    """Deferred shmem_atomic_add: lands at quiet/barrier; queue-adjacent adds
+    to the same element coalesce into one wire atomic."""
+    return _rmw_nbi(ctx, heap, ptr, pe,
+                    lambda o: o + jnp.asarray(value, o.dtype), "add_nbi",
+                    src_pe, delta=value)
+
+
+def inc_nbi(ctx, heap, ptr, pe, *, src_pe=0):
+    return add_nbi(ctx, heap, ptr, 1, pe, src_pe=src_pe)
+
+
+def set_nbi(ctx, heap, ptr, value, pe, *, src_pe=0):
+    return _rmw_nbi(ctx, heap, ptr, pe,
+                    lambda o: jnp.asarray(value, o.dtype), "set_nbi", src_pe)
 
 
 def fetch_and(ctx, heap, ptr, value, pe, *, src_pe=0):

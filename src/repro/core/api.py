@@ -60,11 +60,18 @@ class Ishmem:
     def ishmem_put_nbi(self, dest, value, pe, **kw):
         self.heap = rma.put_nbi(self.ctx, self.heap, dest, value, pe, **kw)
 
-    def ishmem_quiet(self):
-        self.heap = rma.quiet(self.ctx, self.heap)
+    def ishmem_get_nbi(self, src, pe, **kw):
+        return rma.get_nbi(self.ctx, self.heap, src, pe, **kw)
+
+    def ishmem_quiet(self, proxy=None):
+        self.heap = rma.quiet(self.ctx, self.heap, proxy=proxy)
 
     def ishmem_fence(self):
         self.heap = rma.fence(self.ctx, self.heap)
+
+    def ishmem_pending_ops(self) -> int:
+        """Deferred (not yet completed) op count — 0 right after quiet."""
+        return len(self.ctx.pending)
 
     # device extensions (§III-F)
     def ishmemx_put_work_group(self, dest, value, pe, work_group_size=128):
@@ -94,14 +101,22 @@ class Ishmem:
     def ishmem_atomic_set(self, ptr, value, pe):
         self.heap = amo.set_(self.ctx, self.heap, ptr, value, pe)
 
+    def ishmem_atomic_add_nbi(self, ptr, value, pe):
+        self.heap = amo.add_nbi(self.ctx, self.heap, ptr, value, pe)
+
     # ------------------------------------------------------------ signal
     def ishmem_put_signal(self, dest, value, sig, signal_val, sig_op, pe):
         self.heap = signal.put_signal(self.ctx, self.heap, dest, value, sig,
                                       signal_val, sig_op, pe)
 
+    def ishmem_put_signal_nbi(self, dest, value, sig, signal_val, sig_op, pe):
+        self.heap = signal.put_signal_nbi(self.ctx, self.heap, dest, value,
+                                          sig, signal_val, sig_op, pe)
+
     def ishmem_signal_wait_until(self, sig, pe, cmp, value):
-        return signal.signal_wait_until(self.ctx, self.heap, sig, pe, cmp,
-                                        value)
+        self.heap, cur, ok = signal.signal_wait_until(
+            self.ctx, self.heap, sig, pe, cmp, value)
+        return cur, ok
 
     # ------------------------------------------------------------ collectives
     def _team(self, team):

@@ -50,21 +50,10 @@ def _scatter_team(heap, ptr: SymPtr, team: Team, values):
 
 
 def _path(ctx, kind, nbytes, npes, work_items):
-    if ctx.tuning.force_path:
-        return ctx.tuning.force_path
-    if ctx.tuning.cutover_bytes is not None or (
-            ctx.tuning.table is not None
-            and ctx.tuning.table.lookup("ici", work_items) is not None):
-        # explicit/learned per-message cutover (ISHMEM_CUTOVER_BYTES or a
-        # measured TuningTable with ici coverage) overrides the analytic
-        # collective model; an armed table WITHOUT coverage for this tier
-        # must not reroute collectives through the point-to-point model
-        return cutover.choose_path(nbytes, work_items=work_items, tier="ici",
-                                   hw=ctx.hw, tuning=ctx.tuning)
-    td = cutover.t_collective(kind, nbytes, npes, work_items=work_items,
-                              path="direct", hw=ctx.hw)
-    te = cutover.t_collective(kind, nbytes, npes, path="engine", hw=ctx.hw)
-    return "direct" if td <= te else "engine"
+    # thin context adapter over the single chooser in core.cutover
+    return cutover.choose_collective_path(kind, nbytes, npes,
+                                          work_items=work_items, tier="ici",
+                                          hw=ctx.hw, tuning=ctx.tuning)
 
 
 def _record(ctx, kind, nbytes, team, path, work_items):

@@ -17,7 +17,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.core import cutover, heap as heap_mod, teams
+from repro.core import cutover, heap as heap_mod, pending as pending_mod, \
+    teams
 from repro.tune import env as env_mod, telemetry as telemetry_mod
 
 # canonical definition lives in the telemetry module; re-exported here for
@@ -34,6 +35,10 @@ class ShmemContext:
     use_kernels: bool = False           # route direct-path copies via Pallas
     telemetry: telemetry_mod.TelemetrySink = dataclasses.field(
         default_factory=telemetry_mod.TelemetrySink)
+    # deferred-completion queue: every *_nbi op parks here until a completion
+    # point (quiet/barrier/dependent signal_wait) flushes it — see pending.py
+    pending: pending_mod.CompletionQueue = dataclasses.field(
+        default_factory=pending_mod.CompletionQueue)
 
     # ------------------------------------------------------------ topology
     def node_of(self, pe: int) -> int:

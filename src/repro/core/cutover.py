@@ -38,6 +38,10 @@ class HwParams:
     alpha_proxy: float = 8.0e-6      # s — ring-buffer RTT + NIC doorbell
     ring_msg_bytes: int = 64         # reverse-offload message size (§III-D)
     ring_rate: float = 20e6          # msgs/s through one host proxy thread
+    reduce_bw: float = 200e9         # B/s — effective tile-compute throughput
+                                     # (3-stream elementwise on the VPU;
+                                     # prices the compute half of the
+                                     # comm/compute overlap model)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +55,9 @@ class Tuning:
     # core has no import edge into the tuner).  When armed, measured cutovers
     # override the analytic model wherever the table has coverage.
     table: object | None = None
+    # Write-combine queued nbi puts at flush (ISHMEM_NBI_COALESCE; see
+    # core/pending.py — off gives one wire transfer per application call)
+    nbi_coalesce: bool = True
 
 
 TIERS = ("local", "ici", "dcn")
@@ -94,6 +101,33 @@ def choose_path(nbytes: int, *, work_items: int = 128, tier: str = "ici",
             return "direct" if nbytes <= learned else "engine"
     td = t_direct(hw, nbytes, work_items, tier)
     te = t_engine(hw, nbytes, tier)
+    return "direct" if td <= te else "engine"
+
+
+def choose_collective_path(kind: str, nbytes: int, npes: int, *,
+                           work_items: int = 128, tier: str = "ici",
+                           hw: HwParams = HwParams(),
+                           tuning: Tuning = Tuning()) -> str:
+    """The single chooser for collectives — same precedence as
+    :func:`choose_path` (FORCE_PATH > CUTOVER_BYTES > learned table >
+    analytic), but the analytic fallback compares the *collective* cost
+    models (Fig. 6 crossovers), not the point-to-point ones.
+
+    An explicit/learned per-message cutover (ISHMEM_CUTOVER_BYTES or a
+    measured TuningTable with coverage for this tier) overrides the analytic
+    collective model; an armed table WITHOUT coverage for this tier must not
+    reroute collectives through the point-to-point model.
+    """
+    if tuning.force_path:
+        return tuning.force_path
+    if tuning.cutover_bytes is not None or (
+            tuning.table is not None
+            and tuning.table.lookup(tier, work_items) is not None):
+        return choose_path(nbytes, work_items=work_items, tier=tier, hw=hw,
+                           tuning=tuning)
+    td = t_collective(kind, nbytes, npes, work_items=work_items,
+                      path="direct", hw=hw)
+    te = t_collective(kind, nbytes, npes, path="engine", hw=hw)
     return "direct" if td <= te else "engine"
 
 
@@ -163,6 +197,76 @@ def t_collective(kind: str, nbytes_per_pe: int, npes: int, *,
             return hw.alpha_direct + loads / direct_bw(hw, work_items)
         return hw.alpha_engine * npes + loads / hw.ici_bw
     raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Comm-compute overlap model (§III-F / §IV: "overlap communications and
+# computation") — prices a ring allreduce whose per-step neighbor transfer is
+# issued nbi and completed one step later, so the tile-add of step k runs
+# while step k+1's chunk is on the wire.  Used by comms.ShmemOps' nbi ring
+# step, the trainer's gradient-reduce/optimizer-update pipeline, and
+# benchmarks/bench_overlap.py.
+# ---------------------------------------------------------------------------
+
+
+def t_ring_step(chunk_bytes: float, *, work_items: int = 128,
+                tier: str = "ici", hw: HwParams = HwParams(),
+                tuning: Tuning = Tuning()) -> float:
+    """One neighbor transfer of the ring (path picked per chunk size)."""
+    path = choose_path(max(1, int(chunk_bytes)), work_items=work_items,
+                       tier=tier, hw=hw, tuning=tuning)
+    if path == "proxy":
+        return t_proxy(hw, int(chunk_bytes), tier)
+    return op_time(int(chunk_bytes), path, work_items=work_items, tier=tier,
+                   hw=hw)
+
+
+def t_ring_allreduce(nbytes: int, npes: int, *, work_items: int = 128,
+                     tier: str = "ici", hw: HwParams = HwParams(),
+                     tuning: Tuning = Tuning(), overlap: bool = False,
+                     step_compute_bytes: float = 0.0) -> float:
+    """Ring allreduce = (npes-1) reduce-scatter steps (transfer + tile-add)
+    then (npes-1) all-gather steps (transfer + consumer compute).
+
+    ``step_compute_bytes`` is the application tile compute consuming each
+    arriving chunk (the "next tile" of the nbi ring step — a GEMM tile, an
+    optimizer-update shard, a flash-decode block), priced at ``reduce_bw``.
+
+    blocking : each step serializes its transfer and its compute.
+    overlap  : the nbi schedule — step k's compute runs under step k+1's
+               in-flight transfer, so a step costs max(t_xfer, t_compute);
+               the pipeline pays one fill (first transfer) and one drain
+               (last compute), plus the quiet that closes each phase.
+    """
+    if npes <= 1:
+        return 0.0
+    chunk = nbytes / npes
+    t_x = t_ring_step(chunk, work_items=work_items, tier=tier, hw=hw,
+                      tuning=tuning)
+    t_rs_c = (chunk + step_compute_bytes) / hw.reduce_bw   # add + app tile
+    t_ag_c = step_compute_bytes / hw.reduce_bw             # app tile only
+    steps = npes - 1
+
+    def phase(t_c):
+        if not overlap:
+            return steps * (t_x + t_c)
+        return t_x + max(0, steps - 1) * max(t_x, t_c) + t_c
+
+    quiet = 0.0 if not overlap else 2 * hw.alpha_direct
+    return phase(t_rs_c) + phase(t_ag_c) + quiet
+
+
+def overlap_efficiency(nbytes: int, npes: int, *, work_items: int = 128,
+                       tier: str = "ici", hw: HwParams = HwParams(),
+                       tuning: Tuning = Tuning(),
+                       step_compute_bytes: float = 0.0) -> float:
+    """Modeled speedup of the nbi ring schedule over the blocking one
+    (> 1.0 whenever there is compute to hide)."""
+    kw = dict(work_items=work_items, tier=tier, hw=hw, tuning=tuning,
+              step_compute_bytes=step_compute_bytes)
+    tb = t_ring_allreduce(nbytes, npes, overlap=False, **kw)
+    tn = t_ring_allreduce(nbytes, npes, overlap=True, **kw)
+    return tb / tn if tn > 0 else 1.0
 
 
 def collective_cutover_elems(kind: str, npes: int, elem_bytes: int, *,

@@ -1,0 +1,322 @@
+"""Deferred-completion engine: the queue behind every non-blocking op.
+
+This is the part of the runtime the paper's overlap story lives in (§III-F,
+§IV): ``put_nbi``/``get_nbi``/``put_signal_nbi``/deferred AMOs do *not* touch
+the target heap row at call time.  They append a :class:`PendingOp` to the
+per-context :class:`CompletionQueue`, and the row changes only when a
+completion point flushes the queue:
+
+- ``quiet``  — flushes everything (full completion + memory ordering);
+- ``barrier``— quiet + sync (``collectives.barrier``);
+- ``signal_wait_until`` — flushes the queue *prefix* up to the op the waited
+  signal word depends on (put_signal orders data before flag);
+- a blocking ``put`` to the same (ptr, pe) supersedes pending nbi puts there
+  (the simulator linearizes the unordered race as program order).
+
+``fence`` does not flush: it closes the current *epoch*.  Ops in different
+epochs may never coalesce or reorder past each other — exactly the OpenSHMEM
+fence contract (ordering without completion).
+
+Write combining happens at flush time: runs of queue-adjacent puts with the
+same (pe, dtype, epoch) whose offset ranges are contiguous (or identical —
+last writer wins) merge into ONE transfer, and only then does the cutover
+engine pick a path for the *coalesced* size.  The telemetry the autotuner
+fits therefore sees the transfer sizes the wire would see, not the
+application's call sizes.  ``ISHMEM_NBI_COALESCE=0`` (``Tuning.nbi_coalesce``)
+turns combining off for A/B runs.
+
+Proxy unification: dcn-tier pending ops are the same :class:`PendingOp`
+records; at flush they are either submitted through a caller-provided
+:class:`~repro.core.proxy.HostProxy` (ring messages + one drain — the real
+reverse-offload machinery) or executed via the modeled proxy path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax.numpy as jnp
+
+from repro.core import cutover
+from repro.core.heap import SymPtr
+
+# PendingOp kinds
+PUT, GET, AMO, SIGNAL = "put", "get", "amo", "signal"
+
+
+@dataclasses.dataclass
+class PendingOp:
+    """One deferred operation, unified across RMA/AMO/signal/proxy layers."""
+    kind: str                      # PUT | GET | AMO | SIGNAL
+    op: str                        # ledger name ("put_nbi", "amo_add_nbi", ...)
+    ptr: SymPtr
+    pe: int
+    tier: str
+    epoch: int
+    seq: int
+    work_items: int = 1
+    value: Optional[object] = None          # PUT: flat payload row
+    apply: Optional[Callable] = None        # AMO/SIGNAL: old -> new
+    delta: Optional[object] = None          # AMO add: mergeable increment
+    marker: Optional[object] = None         # the "(pending)" trace OpRecord
+
+    @property
+    def end(self) -> int:
+        return self.ptr.offset + self.ptr.size
+
+
+def write_row(ctx, heap, ptr: SymPtr, pe, flat_value):
+    """Direct-path row store; routes through the Pallas work-group copy
+    kernel when the context asks for kernel-backed copies."""
+    if ctx.use_kernels:
+        from repro.kernels import ops as kops
+        pool = heap.pools[ptr.dtype]
+        row = kops.copy_into(pool[pe], flat_value, ptr.offset)
+        return heap.replace_pool(ptr.dtype, pool.at[pe].set(row))
+    return heap.write(ptr, pe, flat_value)
+
+
+@dataclasses.dataclass
+class FlushStats:
+    """Per-queue lifetime counters (coalescing ratio = ops / transfers)."""
+    submitted: int = 0
+    flushed_ops: int = 0
+    transfers: int = 0
+    flushed_bytes: int = 0         # sum of op sizes completed
+    transfer_bytes: int = 0        # sum of wire transfer sizes issued
+    flushes: int = 0
+
+    def coalescing_ratio(self) -> float:
+        return self.flushed_ops / self.transfers if self.transfers else 1.0
+
+
+class CompletionQueue:
+    """Per-context FIFO of deferred ops with epoch-scoped write combining."""
+
+    def __init__(self):
+        self.ops: List[PendingOp] = []
+        self.epoch: int = 0
+        self._seq: int = 0
+        self.stats = FlushStats()
+
+    # ------------------------------------------------------------- submit
+    def submit(self, kind: str, op: str, ptr: SymPtr, pe: int, tier: str, *,
+               work_items: int = 1, value=None, apply=None, delta=None,
+               marker=None) -> PendingOp:
+        rec = PendingOp(kind=kind, op=op, ptr=ptr, pe=int(pe), tier=tier,
+                        epoch=self.epoch, seq=self._seq,
+                        work_items=work_items, value=value, apply=apply,
+                        delta=delta, marker=marker)
+        self._seq += 1
+        self.ops.append(rec)
+        self.stats.submitted += 1
+        return rec
+
+    def fence(self) -> None:
+        """Close the current epoch: later ops may not coalesce with or
+        reorder past anything already queued."""
+        if any(o.epoch == self.epoch for o in self.ops):
+            self.epoch += 1
+
+    def supersede(self, ptr: SymPtr, pe: int) -> int:
+        """A blocking store to (ptr, pe) wins the unordered race against
+        pending nbi puts it fully covers: drop them.  Returns the number of
+        ops dropped."""
+        pe = int(pe)
+        lo, hi = ptr.offset, ptr.offset + ptr.size
+        keep, dropped = [], 0
+        for o in self.ops:
+            if (o.kind == PUT and o.pe == pe and o.ptr.dtype == ptr.dtype
+                    and lo <= o.ptr.offset and o.end <= hi):
+                _retag_marker(o, "dropped")
+                dropped += 1
+            else:
+                keep.append(o)
+        self.ops = keep
+        return dropped
+
+    def resolve_store_conflicts(self, ctx, heap, ptr: SymPtr, pe: int, *,
+                                covers: bool = True):
+        """Linearize a blocking store to (ptr, pe) as program order: pending
+        puts it fully covers are superseded (dropped), and pending ops that
+        only *partially* overlap the range are completed first (completing a
+        queue prefix early is always legal), so the blocking store lands
+        last either way.  ``covers=False`` is for read-modify-write stores
+        (iput): nothing may be dropped, every overlapping op completes
+        first.  Returns the (possibly flushed) heap."""
+        pe = int(pe)
+        lo, hi = ptr.offset, ptr.offset + max(1, ptr.size)
+        last_flush = None
+        for i, o in enumerate(self.ops):
+            if (o.pe == pe and o.ptr.dtype == ptr.dtype
+                    and o.ptr.offset < hi and lo < o.end
+                    and not (covers and o.kind == PUT
+                             and lo <= o.ptr.offset and o.end <= hi)):
+                last_flush = i
+        if last_flush is not None:
+            heap = self.flush_prefix(ctx, heap, last_flush)
+        if covers:
+            self.supersede(ptr, pe)
+        return heap
+
+    # -------------------------------------------------------------- query
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    def pending_for(self, ptr: SymPtr, pe: int) -> Optional[int]:
+        """Index (into ops) of the LAST pending op whose target overlaps one
+        element at (ptr, pe) — the dependency ``signal_wait_until`` forces."""
+        pe = int(pe)
+        last = None
+        for i, o in enumerate(self.ops):
+            if (o.pe == pe and o.ptr.dtype == ptr.dtype
+                    and o.ptr.offset < ptr.offset + max(1, ptr.size)
+                    and ptr.offset < o.end):
+                last = i
+        return last
+
+    # -------------------------------------------------------------- flush
+    def flush(self, ctx, heap, *, proxy=None):
+        """Complete every pending op, in order, coalescing within epochs.
+        Returns the new heap."""
+        return self._flush_ops(ctx, heap, self.ops, proxy=proxy,
+                               keep_from=len(self.ops))
+
+    def flush_prefix(self, ctx, heap, upto: int, *, proxy=None):
+        """Complete ops[0..upto] (inclusive), keep the rest pending.
+        Flushing a queue prefix in order is always a legal completion
+        schedule, so partial completion never violates fence epochs."""
+        return self._flush_ops(ctx, heap, self.ops[:upto + 1], proxy=proxy,
+                               keep_from=upto + 1)
+
+    def _flush_ops(self, ctx, heap, ops, *, proxy, keep_from):
+        if not ops:
+            return heap
+        remainder = self.ops[keep_from:]
+        coalesce = getattr(ctx.tuning, "nbi_coalesce", True)
+        transfers = _combine(ops) if coalesce else [[o] for o in ops]
+        undrained = False
+        for group in transfers:
+            if undrained and not self._routes_to_proxy(group, proxy):
+                # a directly-applied op must observe every ring message
+                # submitted before it — drain before leaving the proxy run
+                heap = proxy.drain(heap)
+                undrained = False
+            heap, used_proxy = self._issue(ctx, heap, group, proxy)
+            undrained = undrained or used_proxy
+        if undrained:
+            heap = proxy.drain(heap)
+        self.stats.flushed_ops += len(ops)
+        self.stats.flushed_bytes += sum(o.ptr.nbytes for o in ops)
+        self.stats.transfers += len(transfers)
+        self.stats.transfer_bytes += sum(
+            _group_nbytes(g) for g in transfers)
+        self.stats.flushes += 1
+        self.ops = remainder
+        for o in ops:
+            _retag_marker(o, "done")
+        return heap
+
+    @staticmethod
+    def _routes_to_proxy(group, proxy) -> bool:
+        return (proxy is not None and group[0].kind == PUT
+                and group[0].tier == "dcn")
+
+    # one coalesced transfer (or a single non-put op)
+    def _issue(self, ctx, heap, group, proxy):
+        head = group[0]
+        if head.kind == GET:
+            # the fetch completes now; cost accrues at the completion point
+            path = "proxy" if head.tier == "dcn" else "engine"
+            ctx.record(head.op, head.ptr.nbytes, path, head.tier,
+                       head.work_items)
+            return heap, False
+        if head.kind in (AMO, SIGNAL):
+            old = heap.read(head.ptr, head.pe).reshape(())
+            new = old
+            for o in group:                   # merged adds compose in order
+                new = o.apply(new)
+            path = "proxy" if head.tier == "dcn" else "direct"
+            ctx.record(head.op, jnp.dtype(head.ptr.dtype).itemsize, path,
+                       head.tier, head.work_items)
+            return heap.write(head.ptr, head.pe, new), False
+        # PUT: materialize the coalesced payload
+        ptr, value = _merge_puts(group)
+        if head.tier == "dcn" and proxy is not None:
+            proxy.put(ptr, value, head.pe)    # ring message; drained once
+            return heap, True
+        wi = max(o.work_items for o in group)
+        if head.tier == "dcn":
+            path = "proxy"
+        else:
+            path = cutover.choose_path(ptr.nbytes, work_items=wi,
+                                       tier=head.tier, hw=ctx.hw,
+                                       tuning=ctx.tuning)
+        ctx.record(head.op, ptr.nbytes, path, head.tier, wi)
+        return write_row(ctx, heap, ptr, head.pe, value), False
+
+
+# ---------------------------------------------------------------------------
+# write combining
+# ---------------------------------------------------------------------------
+
+
+def _combinable(a: PendingOp, b: PendingOp) -> bool:
+    """b may join a's transfer: queue-adjacent puts, same destination row and
+    epoch, and byte ranges that abut or coincide."""
+    return (a.kind == PUT and b.kind == PUT
+            and a.pe == b.pe and a.epoch == b.epoch
+            and a.ptr.dtype == b.ptr.dtype
+            and (b.ptr.offset == a.end                      # contiguous
+                 or (b.ptr.offset == a.ptr.offset           # identical range:
+                     and b.ptr.size == a.ptr.size)))        # last write wins
+
+
+def _amo_mergeable(a: PendingOp, b: PendingOp) -> bool:
+    return (a.kind == AMO and b.kind == AMO
+            and a.delta is not None and b.delta is not None
+            and a.pe == b.pe and a.epoch == b.epoch and a.ptr == b.ptr)
+
+
+def _combine(ops: List[PendingOp]) -> List[List[PendingOp]]:
+    groups: List[List[PendingOp]] = []
+    for o in ops:
+        if groups and (_combinable(groups[-1][-1], o)
+                       or _amo_mergeable(groups[-1][-1], o)):
+            groups[-1].append(o)
+        else:
+            groups.append([o])
+    return groups
+
+
+def _merge_puts(group: List[PendingOp]):
+    """Fold a combinable run into one (ptr, flat_value) transfer."""
+    head = group[0]
+    if len(group) == 1:
+        return head.ptr, head.value
+    lo = min(o.ptr.offset for o in group)
+    hi = max(o.end for o in group)
+    dtype = head.ptr.dtype
+    buf = jnp.zeros((hi - lo,), jnp.dtype(dtype))
+    for o in group:                            # queue order: last write wins
+        s = o.ptr.offset - lo
+        buf = buf.at[s:s + o.ptr.size].set(
+            jnp.asarray(o.value, jnp.dtype(dtype)).reshape((o.ptr.size,)))
+    return SymPtr(dtype, lo, (hi - lo,)), buf
+
+
+def _group_nbytes(group: List[PendingOp]) -> int:
+    head = group[0]
+    if head.kind != PUT:
+        return head.ptr.nbytes
+    lo = min(o.ptr.offset for o in group)
+    hi = max(o.end for o in group)
+    return (hi - lo) * jnp.dtype(head.ptr.dtype).itemsize
+
+
+def _retag_marker(op: PendingOp, state: str) -> None:
+    """Retag the op's own "(pending)" trace marker (debugging view only —
+    aggregates are keyed by the flush-time records)."""
+    rec = op.marker
+    if rec is not None and rec.op.endswith("(pending)"):
+        rec.op = rec.op[: -len("(pending)")] + f"({state})"

@@ -62,6 +62,20 @@ class HostProxy:
         value = jnp.asarray(value, jnp.dtype(ptr.dtype)).reshape((ptr.size,))
         return self._submit(OP_PUT, ptr, pe, data=value)
 
+    def put_nbi(self, ptr: SymPtr, value, pe):
+        """Deferred reverse-offload put: parks on the context's
+        CompletionQueue as the same PendingOp record every other nbi op uses
+        (tier pinned to dcn); ``quiet(ctx, heap, proxy=self)`` routes it
+        through the ring and drains — completion exactly at quiet, like the
+        paper's proxy-mediated nbi ops."""
+        from repro.core import pending as pending_mod
+        value = jnp.asarray(value, jnp.dtype(ptr.dtype)).reshape((ptr.size,))
+        self.ctx.record("put_nbi(pending)", ptr.nbytes, "proxy", "dcn", 1,
+                        t_sec=0.0)
+        self.ctx.pending.submit(
+            pending_mod.PUT, "put_nbi", ptr, pe, "dcn", value=value,
+            marker=self.ctx.ledger[-1] if self.ctx.ledger else None)
+
     def amo_add(self, ptr: SymPtr, value, pe):
         return self._submit(OP_AMO_ADD, ptr, pe,
                             data=jnp.asarray(value, jnp.dtype(ptr.dtype)))

@@ -6,27 +6,29 @@ symmetric heap; ``get`` loads from the source PE's row.  Every op picks a
 transport via the cutover engine and records it on the context ledger; when
 ``ctx.use_kernels`` is set, direct-path copies run through the Pallas
 work-group copy kernel (interpret mode on CPU, RDMA on TPU).
+
+Non-blocking ops (``*_nbi``) go through the context's
+:class:`~repro.core.pending.CompletionQueue`: the target row is untouched
+until ``quiet``/``barrier`` flushes, ``fence`` closes an ordering epoch, and
+a blocking ``put`` supersedes pending nbi puts to the same buffer.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import cutover
+from repro.core import cutover, pending as pending_mod
 from repro.core.heap import SymPtr, SymmetricHeap
+from repro.core.pending import write_row as _kernel_write_row
 
 
 def _pick(ctx, nbytes, work_items, tier):
+    # the single chooser: FORCE_PATH > CUTOVER_BYTES > table > analytic
     return cutover.choose_path(nbytes, work_items=work_items, tier=tier,
                                hw=ctx.hw, tuning=ctx.tuning)
 
 
 def _write_row(ctx, heap, ptr, pe, flat_value):
-    if ctx.use_kernels:
-        from repro.kernels import ops as kops
-        pool = heap.pools[ptr.dtype]
-        row = kops.copy_into(pool[pe], flat_value, ptr.offset)
-        return heap.replace_pool(ptr.dtype, pool.at[pe].set(row))
-    return heap.write(ptr, pe, flat_value)
+    return _kernel_write_row(ctx, heap, ptr, pe, flat_value)
 
 
 # ---------------------------------------------------------------------------
@@ -41,6 +43,11 @@ def put(ctx, heap: SymmetricHeap, dest: SymPtr, value, dst_pe, *,
     tier = ctx.tier(src_pe, dst_pe)
     path = _pick(ctx, dest.nbytes, work_items, tier)
     ctx.record("put", dest.nbytes, path, tier, work_items)
+    # blocking store vs pending nbi ops on the same bytes is an unordered
+    # race; the simulator linearizes it as program order (fully-covered
+    # deferred stores are dropped, partial overlaps complete first, the
+    # blocking store always lands last)
+    heap = ctx.pending.resolve_store_conflicts(ctx, heap, dest, dst_pe)
     return _write_row(ctx, heap, dest, dst_pe, value)
 
 
@@ -59,6 +66,7 @@ def p(ctx, heap, dest: SymPtr, scalar, dst_pe, *, src_pe: int = 0):
     tier = ctx.tier(src_pe, dst_pe)
     path = "proxy" if tier == "dcn" else "direct"
     ctx.record("p", jnp.dtype(dest.dtype).itemsize, path, tier, 1)
+    heap = ctx.pending.resolve_store_conflicts(ctx, heap, dest, dst_pe)
     return heap.write(dest, dst_pe, jnp.asarray(scalar))
 
 
@@ -81,6 +89,8 @@ def iput(ctx, heap, dest: SymPtr, value, dst_pe, *, dst_stride: int = 1,
     value = jnp.asarray(value, jnp.dtype(dest.dtype)).reshape((-1,))
     n = nelems if nelems is not None else (value.size + src_stride - 1) // src_stride
     picked = value[::src_stride][:n]
+    heap = ctx.pending.resolve_store_conflicts(ctx, heap, dest, dst_pe,
+                                               covers=False)
     cur = heap.read(dest, dst_pe).reshape((-1,))
     idx = jnp.arange(n) * dst_stride
     newv = cur.at[idx].set(picked)
@@ -108,36 +118,53 @@ def iget(ctx, heap, src: SymPtr, src_pe_remote, *, src_stride: int = 1,
 
 def put_nbi(ctx, heap, dest, value, dst_pe, *, src_pe: int = 0,
             work_items: int = 1):
-    """ishmem_put_nbi: non-blocking put.  NBI ops always prefer the engine
-    path (the paper: copy engines overlap with compute; completion at quiet)."""
+    """ishmem_put_nbi: non-blocking put.  The destination row is NOT written
+    here — the op is deferred onto the context's CompletionQueue and lands at
+    the next completion point (``quiet``/``barrier``/a dependent
+    ``signal_wait_until``).  The transport is chosen at flush time on the
+    *coalesced* transfer size (the paper: copy engines overlap with compute;
+    completion at quiet)."""
     value = jnp.asarray(value, jnp.dtype(dest.dtype)).reshape((dest.size,))
     tier = ctx.tier(src_pe, dst_pe)
     path = "proxy" if tier == "dcn" else "engine"
-    ctx.record("put_nbi", dest.nbytes, path, tier, work_items)
-    heap = _write_row(ctx, heap, dest, dst_pe, value)
-    if ctx.ledger:                       # a NullSink keeps no trace to mark
-        ctx.ledger[-1].op = "put_nbi(pending)"
+    # trace marker only (t=0): the completed transfer is priced at flush
+    ctx.record("put_nbi(pending)", dest.nbytes, path, tier, work_items,
+               t_sec=0.0)
+    ctx.pending.submit(pending_mod.PUT, "put_nbi", dest, dst_pe, tier,
+                       work_items=work_items, value=value,
+                       marker=ctx.ledger[-1] if ctx.ledger else None)
     return heap
 
 
 def get_nbi(ctx, heap, src, src_pe_remote, *, src_pe: int = 0,
             work_items: int = 1):
+    """ishmem_get_nbi: non-blocking get.  The returned buffer is undefined
+    until ``quiet``; the simulator linearizes the fetch at submission (any
+    point in [call, quiet] is a legal read), while the completion cost is
+    accounted when the queue flushes."""
     tier = ctx.tier(src_pe, src_pe_remote)
     path = "proxy" if tier == "dcn" else "engine"
-    ctx.record("get_nbi", src.nbytes, path, tier, work_items)
+    ctx.record("get_nbi(pending)", src.nbytes, path, tier, work_items,
+               t_sec=0.0)
+    ctx.pending.submit(pending_mod.GET, "get_nbi", src, src_pe_remote, tier,
+                       work_items=work_items,
+                       marker=ctx.ledger[-1] if ctx.ledger else None)
     return heap.read(src, src_pe_remote)
 
 
-def quiet(ctx, heap):
-    """ishmem_quiet: completes all pending nbi ops (memory ordering)."""
-    for r in ctx.ledger:
-        if r.op == "put_nbi(pending)":
-            r.op = "put_nbi"
+def quiet(ctx, heap, *, proxy=None):
+    """ishmem_quiet: completes all pending nbi ops (memory ordering).  When a
+    ``HostProxy`` is given, dcn-tier pending ops travel through its ring and
+    one drain; otherwise the modeled proxy path executes them directly.
+    Idempotent: a second quiet with an empty queue flushes nothing."""
+    heap = ctx.pending.flush(ctx, heap, proxy=proxy)
     ctx.record("quiet", 0, "direct", "local", 1)
     return heap
 
 
 def fence(ctx, heap):
-    """ishmem_fence: orders (but does not complete) pending ops."""
+    """ishmem_fence: orders (but does not complete) pending ops — closes the
+    queue's coalescing epoch, so ops across the fence never merge or reorder."""
+    ctx.pending.fence()
     ctx.record("fence", 0, "direct", "local", 1)
     return heap

@@ -1,14 +1,21 @@
-"""Signaling ops: put_signal (+work_group) and signal_wait_until.
+"""Signaling ops: put_signal (+work_group, +nbi) and signal_wait_until.
 
 ``put_signal`` is the paper's ordered "data then flag" primitive: the data put
 completes at the target before the signal word updates (on TPU: the remote DMA
 completion semaphore gates the signal store).
+
+``put_signal_nbi`` defers BOTH halves onto the completion queue as an ordered
+pair: within a flush the data transfer executes before the signal update (the
+signal op is a non-coalescible queue entry submitted immediately after its
+data put, so write combining can never lift a later put across it).
+``signal_wait_until`` is the completion point that makes the pair observable:
+it forces the queue prefix the waited signal word depends on.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import rma
+from repro.core import pending as pending_mod, rma
 
 SIGNAL_SET = 0
 SIGNAL_ADD = 1
@@ -23,17 +30,41 @@ _CMP = {
 }
 
 
+def _sig_apply(signal, sig_op):
+    def apply(old):
+        sv = jnp.asarray(signal, old.dtype)
+        return sv if sig_op == SIGNAL_SET else old + sv
+    return apply
+
+
 def put_signal(ctx, heap, dest, value, sig_ptr, signal, sig_op, dst_pe, *,
                src_pe: int = 0, work_items: int = 1):
     """ishmem_put_signal / ishmemx_put_signal_work_group."""
     heap = rma.put(ctx, heap, dest, value, dst_pe, src_pe=src_pe,
                    work_items=work_items)
+    # the blocking flag update linearizes after queued ops on the flag word
+    heap = ctx.pending.resolve_store_conflicts(ctx, heap, sig_ptr, dst_pe,
+                                               covers=False)
     old = heap.read(sig_ptr, dst_pe).reshape(())
-    new = (jnp.asarray(signal, old.dtype) if sig_op == SIGNAL_SET
-           else old + jnp.asarray(signal, old.dtype))
+    new = _sig_apply(signal, sig_op)(old)
     ctx.record("signal", jnp.dtype(sig_ptr.dtype).itemsize, "direct",
                ctx.tier(src_pe, dst_pe), 1)
     return heap.write(sig_ptr, dst_pe, new)
+
+
+def put_signal_nbi(ctx, heap, dest, value, sig_ptr, signal, sig_op, dst_pe, *,
+                   src_pe: int = 0, work_items: int = 1):
+    """ishmem_put_signal_nbi: deferred data put + deferred signal update,
+    ordered data-before-flag inside the flush."""
+    heap = rma.put_nbi(ctx, heap, dest, value, dst_pe, src_pe=src_pe,
+                       work_items=work_items)
+    tier = ctx.tier(src_pe, dst_pe)
+    ctx.record("signal(pending)", jnp.dtype(sig_ptr.dtype).itemsize,
+               "direct", tier, 1, t_sec=0.0)
+    ctx.pending.submit(pending_mod.SIGNAL, "signal", sig_ptr, dst_pe, tier,
+                       apply=_sig_apply(signal, sig_op),
+                       marker=ctx.ledger[-1] if ctx.ledger else None)
+    return heap
 
 
 def signal_fetch(ctx, heap, sig_ptr, pe):
@@ -42,8 +73,14 @@ def signal_fetch(ctx, heap, sig_ptr, pe):
 
 def signal_wait_until(ctx, heap, sig_ptr, pe, cmp: str, value):
     """Local wait; in the sequential simulation this is a satisfiability check
-    (the caller drives progress).  Returns the satisfied signal value."""
+    (the caller drives progress).  Completion forcing: any pending op the
+    waited word depends on — the last queued update of (sig_ptr, pe) and
+    everything submitted before it, which covers the data half of a
+    put_signal_nbi — is flushed first.  Returns (heap, value, satisfied)."""
+    dep = ctx.pending.pending_for(sig_ptr, pe)
+    if dep is not None:
+        heap = ctx.pending.flush_prefix(ctx, heap, dep)
     cur = heap.read(sig_ptr, pe).reshape(())
     ok = _CMP[cmp](cur, jnp.asarray(value, cur.dtype))
     ctx.record("signal_wait", 0, "direct", "local", 1)
-    return cur, ok
+    return heap, cur, ok

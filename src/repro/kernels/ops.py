@@ -68,3 +68,33 @@ def ring_allreduce(x, *, axis_name: str, npes: int):
     device-initiated end to end).  x: (npes, chunk...) addend rows."""
     mine = ring_reduce_scatter(x, axis_name=axis_name, npes=npes)
     return ring_allgather(mine, axis_name=axis_name, npes=npes)
+
+
+def ring_step_nbi(x, *, axis_name: str, npes: int, work_items: int = 8):
+    """One nbi ring step: put the local buffer to the right neighbor, return
+    the buffer received from the left.  The building block of the overlapped
+    allreduce — the returned value depends only on the *previous transfer*,
+    never on local accumulation, so chained steps form a pure transfer chain
+    the compiler can run concurrently with the compute hanging off it."""
+    return remote_put(x, axis_name=axis_name, npes=npes, target_offset=1,
+                      work_items=work_items)
+
+
+def ring_allreduce_nbi(x, *, axis_name: str, npes: int, work_items: int = 8):
+    """Pass-around ring allreduce with comm-compute overlap (paper §III-F).
+
+    Each step issues the next neighbor transfer non-blocking and adds the
+    chunk that just arrived: ``cur`` only ever flows transfer -> transfer
+    (the critical path), while the adds accumulate off to the side.  The
+    dependence graph therefore exposes every tile-add for execution UNDER the
+    in-flight DMA of the next step — unlike RS+AG, where step k+1's send
+    needs step k's reduced value.  Wire cost is npes*n vs RS+AG's 2n, so the
+    cutover engine only routes small/medium messages here (see
+    ``comms.ShmemOps.psum_overlap``)."""
+    acc = x
+    cur = x
+    for _ in range(npes - 1):
+        cur = ring_step_nbi(cur, axis_name=axis_name, npes=npes,
+                            work_items=work_items)   # in flight...
+        acc = acc + cur                              # ...while this computes
+    return acc

@@ -65,6 +65,10 @@ class PerfPolicy:
                                         # seq-sharded cache  [collective]
     decode_replicate_small_cache: bool = False
     small_cache_bytes: int = 1 << 30
+    overlap_grad_reduce: bool = True    # pipeline per-leaf gradient reduce
+                                        # (nbi ring step) under the previous
+                                        # leaf's optimizer update; off =
+                                        # reduce-all-then-update  [collective]
 
 
 _CURRENT = PerfPolicy()

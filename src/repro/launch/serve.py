@@ -14,6 +14,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--overlap-report", action="store_true",
+                    help="model the decode-step collectives under the nbi "
+                         "(completion-engine) schedule vs blocking")
+    ap.add_argument("--comms-npes", type=int, default=8)
     args = ap.parse_args()
 
     import jax
@@ -37,6 +41,21 @@ def main():
                                           temperature=args.temperature))
     print(f"[serve] arch={cfg.name} generated {out.shape}:")
     print(out)
+
+    if args.overlap_report:
+        # decode is latency-bound: each step all-reduces the TP-sharded
+        # logits/hidden.  Under the completion engine the step's collective
+        # is issued nbi and completes while sampling/embedding of the
+        # previous token computes — report the modeled gain per step.
+        from repro.comms import api as comms_api
+        ops = comms_api.get_ops("shmem", npes=args.comms_npes)
+        for name, nbytes in (
+                ("hidden", args.batch * cfg.d_model * 4),
+                ("logits", args.batch * cfg.vocab_size * 4)):
+            eff = ops.modeled_overlap_efficiency(nbytes)
+            verdict = "use nbi" if eff > 1.0 else "stay blocking (alpha-bound)"
+            print(f"[serve] decode {name} allreduce ({nbytes} B): "
+                  f"modeled nbi overlap x{eff:.2f} vs blocking -> {verdict}")
 
 
 if __name__ == "__main__":

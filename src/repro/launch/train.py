@@ -8,6 +8,7 @@ Pod-scale (--dryrun): lowers/compiles the same step for the production mesh.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 
 def main():
@@ -23,9 +24,18 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--full-size", action="store_true",
                     help="use the full architecture (pods); default reduced")
+    ap.add_argument("--comms-backend", default="none",
+                    choices=["none", "shmem"],
+                    help="shmem: model device-initiated gradient reduction "
+                         "(nbi ring steps overlapping optimizer updates)")
+    ap.add_argument("--comms-npes", type=int, default=8)
+    ap.add_argument("--no-overlap-reduce", action="store_true",
+                    help="disable the reduce/update pipeline "
+                         "(PerfPolicy.overlap_grad_reduce=False)")
     args = ap.parse_args()
 
     from repro.configs import base as cfgbase
+    from repro.launch import policy as policy_mod
     from repro.train import trainer
 
     cfg = cfgbase.get_config(args.arch)
@@ -34,8 +44,12 @@ def main():
     tcfg = trainer.TrainConfig(
         steps=args.steps, seq_len=args.seq_len,
         global_batch=args.global_batch, grad_accum=args.grad_accum,
-        lr=args.lr, ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
-    trainer.train(cfg, tcfg, resume=args.resume)
+        lr=args.lr, ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+        comms_backend=args.comms_backend, comms_npes=args.comms_npes)
+    pol = dataclasses.replace(policy_mod.get(),
+                              overlap_grad_reduce=not args.no_overlap_reduce)
+    with policy_mod.use(pol):
+        trainer.train(cfg, tcfg, resume=args.resume)
 
 
 if __name__ == "__main__":

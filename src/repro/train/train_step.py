@@ -51,3 +51,58 @@ def init_state(rng, cfg):
     params = model.init_params(rng, cfg)
     opt_state = opt_mod.init(cfg.optimizer, params)
     return params, opt_state
+
+
+# ---------------------------------------------------------------------------
+# Gradient-reduce <-> optimizer-update overlap (completion-engine schedule)
+# ---------------------------------------------------------------------------
+
+# optimizer bytes touched per gradient byte (read p/m/v + write p/m/v ~ adamw)
+_OPT_TRAFFIC = 6.0
+
+
+def grad_reduce_schedule(params, ops, *, policy=None):
+    """Model the step's tail: per-leaf gradient reduction pipelined against
+    optimizer updates.
+
+    Leaves reduce in traversal order.  With ``policy.overlap_grad_reduce``
+    the (k+1)-th leaf's ring allreduce is issued nbi and flies while the
+    k-th leaf's optimizer update computes — the trainer's analogue of the
+    nbi ring step in ``comms.ShmemOps``.  The sharding policy gates the wire
+    cost per leaf: under the default ZeRO rules (DESIGN.md §5) matrix leaves
+    are data-sharded, so each PE reduce-scatters only its 1/npes gradient
+    shard and the update is shard-local; ``param_tp_only`` turns that off
+    (weights replicate over "data") and every leaf pays the full allreduce.
+
+    Returns ``(t_blocking, t_overlapped, nleaves)`` in modeled seconds.
+    """
+    import jax
+
+    from repro.launch import policy as policy_mod
+    pol = policy or policy_mod.get()
+    hw = ops.hw
+    times = []                                 # (t_reduce, t_update) per leaf
+    for leaf in jax.tree.leaves(params):
+        nbytes = int(leaf.size * jnp.dtype(leaf.dtype).itemsize)
+        zero_sharded = leaf.ndim >= 2 and not pol.param_tp_only
+        frac = 1.0 / ops.npes if zero_sharded else 1.0
+        t_r = _ring_time(ops, int(nbytes * frac))
+        t_u = nbytes * frac * _OPT_TRAFFIC / hw.reduce_bw
+        times.append((t_r, t_u))
+    t_blocking = sum(t_r + t_u for t_r, t_u in times)
+    if not pol.overlap_grad_reduce or len(times) <= 1:
+        return t_blocking, t_blocking, len(times)
+    # software pipeline: reduce(k+1) in flight during update(k)
+    t = times[0][0]
+    for i in range(1, len(times)):
+        t += max(times[i][0], times[i - 1][1])
+    t += times[-1][1]
+    return t_blocking, t, len(times)
+
+
+def _ring_time(ops, nbytes):
+    from repro.core import cutover
+    return cutover.t_ring_allreduce(nbytes, ops.npes,
+                                    work_items=ops.tuning.work_group_size,
+                                    tier="ici", hw=ops.hw, tuning=ops.tuning,
+                                    overlap=True)

@@ -13,6 +13,10 @@ Mirrors the knobs the real Intel SHMEM library reads at ``ishmem_init``:
 ``ISHMEM_WORK_GROUP_SIZE`` default work-group size for ``ishmemx_*_work_group``
 ``ISHMEM_TUNING_FILE``    JSON :class:`TuningTable` from a profiling run
                           (``benchmarks.run --json``) — arms measured cutovers
+``ISHMEM_NBI_COALESCE``   ``1``/``0`` — write-combine queued nbi ops at
+                          quiet/barrier flush (default on; off issues one
+                          wire transfer per application call — see
+                          ``core/pending.py``)
 ========================  ====================================================
 
 ``context.init`` calls :func:`tuning_from_env` when no explicit ``Tuning`` is
@@ -56,6 +60,7 @@ class EnvConfig:
     force_path: Optional[str] = None
     work_group_size: int = 128
     tuning_file: Optional[str] = None
+    nbi_coalesce: bool = True
 
 
 def load_env(environ: Optional[Mapping[str, str]] = None) -> EnvConfig:
@@ -89,6 +94,7 @@ def load_env(environ: Optional[Mapping[str, str]] = None) -> EnvConfig:
             raise ValueError(
                 f"ISHMEM_WORK_GROUP_SIZE: expected an integer, "
                 f"got {wgs!r}") from None
+    coalesce = get("NBI_COALESCE")
     return EnvConfig(
         enable_cutover=(True if enable is None
                         else _parse_bool(enable, var="ISHMEM_ENABLE_CUTOVER")),
@@ -96,6 +102,8 @@ def load_env(environ: Optional[Mapping[str, str]] = None) -> EnvConfig:
         force_path=force,
         work_group_size=128 if wgs is None else wgs,
         tuning_file=get("TUNING_FILE"),
+        nbi_coalesce=(True if coalesce is None
+                      else _parse_bool(coalesce, var="ISHMEM_NBI_COALESCE")),
     )
 
 
@@ -122,4 +130,5 @@ def tuning_from_env(environ: Optional[Mapping[str, str]] = None,
         cutover_bytes = INF_CUTOVER
     return cutover.Tuning(cutover_bytes=cutover_bytes,
                           force_path=cfg.force_path,
-                          work_group_size=cfg.work_group_size, table=table)
+                          work_group_size=cfg.work_group_size, table=table,
+                          nbi_coalesce=cfg.nbi_coalesce)

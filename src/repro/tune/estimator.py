@@ -27,12 +27,14 @@ MIN_SAMPLES = 3          # below this a fit is too unconstrained to trust
 # ONE p2p transfer; collective records are excluded by op name.
 COLLECTIVE_OPS = frozenset({
     "sync", "barrier", "broadcast", "fcollect", "collect", "alltoall",
-    "reduce", "psum", "all_gather", "reduce_scatter", "ppermute",
+    "reduce", "psum", "psum_nbi", "all_gather", "reduce_scatter", "ppermute",
     "psum_hierarchical",
 })
 
 
 def _is_p2p(op: str) -> bool:
+    if op.endswith("(pending)") or op.endswith("(done)"):
+        return False              # zero-cost queue markers, not transfers
     return op.split("[")[0] not in COLLECTIVE_OPS
 
 

@@ -16,16 +16,11 @@ import pytest  # noqa: E402
 # --- jax API compat ---------------------------------------------------------
 # The tests target the current jax surface; older installs (e.g. 0.4.x) spell
 # these differently.  Shim only what is missing so new jax runs untouched.
+# The shard_map shim is shared with the benchmark harness (one copy).
 
-if not hasattr(jax, "shard_map"):
-    from jax.experimental.shard_map import shard_map as _shard_map  # noqa: E402
+from repro._jaxcompat import ensure_jax_compat  # noqa: E402
 
-    def _compat_shard_map(f, **kwargs):
-        if "check_vma" in kwargs:                 # renamed from check_rep
-            kwargs["check_rep"] = kwargs.pop("check_vma")
-        return _shard_map(f, **kwargs)
-
-    jax.shard_map = _compat_shard_map
+ensure_jax_compat()
 
 try:
     _am = jax.sharding.AbstractMesh((1,), ("_probe",))

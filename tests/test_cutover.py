@@ -83,3 +83,59 @@ def test_sync_cost_scales_with_pes():
     t4 = cutover.t_collective("sync", 8, 4)
     t12 = cutover.t_collective("sync", 8, 12)
     assert t12 > t4
+
+
+# ---------------------------------------------------------------------------
+# comm-compute overlap model (completion engine)
+# ---------------------------------------------------------------------------
+
+
+def test_ring_overlap_never_slower_when_compute_bound():
+    """With app tile compute to hide, the nbi schedule beats blocking."""
+    hw = cutover.HwParams()
+    for lb in (18, 20, 22, 24):
+        n = 1 << lb
+        eff = cutover.overlap_efficiency(n, 8, hw=hw,
+                                         step_compute_bytes=4 * n / 8)
+        assert eff > 1.0, (lb, eff)
+
+
+def test_ring_overlap_bounded_by_two():
+    """Perfect overlap can at most halve a transfer+compute step."""
+    hw = cutover.HwParams()
+    for lb in (12, 16, 20, 24):
+        for c in (0.0, 1.0, 8.0):
+            eff = cutover.overlap_efficiency(1 << lb, 8, hw=hw,
+                                             step_compute_bytes=c * (1 << lb))
+            assert eff < 2.0
+
+
+def test_ring_blocking_matches_sum_of_steps():
+    hw = cutover.HwParams()
+    n, npes = 1 << 20, 8
+    chunk = n / npes
+    tx = cutover.t_ring_step(chunk, hw=hw)
+    ta = chunk / hw.reduce_bw
+    expect = (npes - 1) * (tx + ta) + (npes - 1) * tx
+    got = cutover.t_ring_allreduce(n, npes, hw=hw, overlap=False)
+    assert got == pytest.approx(expect)
+
+
+def test_choose_collective_path_precedence():
+    """The single chooser honors FORCE_PATH > CUTOVER_BYTES > table >
+    analytic for collectives too (the dedup of collectives._path)."""
+    assert cutover.choose_collective_path(
+        "broadcast", 1 << 20, 8,
+        tuning=cutover.Tuning(force_path="proxy")) == "proxy"
+    assert cutover.choose_collective_path(
+        "broadcast", 1 << 20, 8,
+        tuning=cutover.Tuning(cutover_bytes=1 << 10)) == "engine"
+    assert cutover.choose_collective_path(
+        "broadcast", 64, 8,
+        tuning=cutover.Tuning(cutover_bytes=1 << 10)) == "direct"
+    # analytic fallback: identical to the old collectives._path comparison
+    td = cutover.t_collective("reduce", 4096, 8, work_items=16, path="direct")
+    te = cutover.t_collective("reduce", 4096, 8, path="engine")
+    want = "direct" if td <= te else "engine"
+    assert cutover.choose_collective_path("reduce", 4096, 8,
+                                          work_items=16) == want

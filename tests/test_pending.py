@@ -1,0 +1,319 @@
+"""Completion-engine ordering laws (paper §III-F: nbi ops complete at quiet).
+
+Property tests over the deferred-op queue: no visibility before quiet, fence
+epochs block coalescing/reordering, quiet idempotence, and convergence of
+interleaved proxy + nbi drains under permuted schedules.
+"""
+import jax.numpy as jnp
+import numpy as np
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # clean interpreter: deterministic fallback
+    from _minihyp import given, settings, strategies as st
+
+from repro.core import amo, context, proxy, rma, signal
+from repro.core.heap import SymPtr
+
+
+def _ctx(npes=4, node_size=2, **kw):
+    return context.init(npes=npes, node_size=node_size, **kw)
+
+
+# ---------------------------------------------------------------------------
+# law 1: no visibility before quiet (the acceptance-criterion test)
+# ---------------------------------------------------------------------------
+
+
+def test_put_nbi_defers_until_quiet():
+    ctx, heap = _ctx()
+    p = heap.malloc((32,), "float32")
+    heap = rma.put(ctx, heap, p, jnp.full(32, 7.0), 1)      # old value
+    heap = rma.put_nbi(ctx, heap, p, jnp.full(32, 9.0), 1)
+    # destination row is UNTOUCHED between put_nbi and quiet
+    np.testing.assert_array_equal(np.asarray(heap.read(p, 1)),
+                                  np.full(32, 7.0))
+    assert len(ctx.pending) == 1
+    heap = rma.quiet(ctx, heap)
+    np.testing.assert_array_equal(np.asarray(heap.read(p, 1)),
+                                  np.full(32, 9.0))
+    assert len(ctx.pending) == 0
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(1, 100)),
+                min_size=1, max_size=12))
+def test_deferred_queue_matches_sequential_oracle(writes):
+    """Any mix of slotted nbi puts == the same stores applied in program
+    order (write combining must be invisible to memory semantics)."""
+    ctx, heap = _ctx()
+    p = heap.malloc((8 * 16,), "float32")
+    oracle = np.zeros(8 * 16, np.float32)
+    for slot, val in writes:
+        piece = SymPtr("float32", p.offset + slot * 16, (16,))
+        heap = rma.put_nbi(ctx, heap, piece, jnp.full(16, float(val)), 2)
+        oracle[slot * 16:(slot + 1) * 16] = val
+    heap = rma.quiet(ctx, heap)
+    np.testing.assert_array_equal(np.asarray(heap.read(p, 2)), oracle)
+
+
+def test_contiguous_nbi_puts_coalesce_and_tuner_sees_wire_size():
+    ctx, heap = _ctx()
+    p = heap.malloc((128,), "float32")
+    t0 = ctx.pending.stats.transfers
+    for i in range(4):                                   # 4 x 128 B, abutting
+        piece = SymPtr("float32", p.offset + i * 32, (32,))
+        heap = rma.put_nbi(ctx, heap, piece, jnp.full(32, float(i)), 1)
+    heap = rma.quiet(ctx, heap)
+    assert ctx.pending.stats.transfers - t0 == 1          # one wire transfer
+    done = [r for r in ctx.ledger if r.op == "put_nbi"]
+    assert done and done[-1].nbytes == 4 * 32 * 4         # coalesced size
+    np.testing.assert_array_equal(
+        np.asarray(heap.read(p, 1)),
+        np.repeat(np.arange(4, dtype=np.float32), 32))
+
+
+def test_coalesce_knob_off_issues_per_call_transfers():
+    from repro.core import cutover
+    ctx, heap = _ctx(tuning=cutover.Tuning(nbi_coalesce=False))
+    p = heap.malloc((128,), "float32")
+    for i in range(4):
+        piece = SymPtr("float32", p.offset + i * 32, (32,))
+        heap = rma.put_nbi(ctx, heap, piece, jnp.ones(32), 1)
+    heap = rma.quiet(ctx, heap)
+    assert ctx.pending.stats.transfers == 4
+    assert ctx.pending.stats.coalescing_ratio() == 1.0
+
+
+# ---------------------------------------------------------------------------
+# law 2: fence = ordering epoch (no cross-epoch coalescing/reordering)
+# ---------------------------------------------------------------------------
+
+
+def test_fence_prevents_cross_epoch_coalescing():
+    ctx, heap = _ctx()
+    p = heap.malloc((128,), "float32")
+    a = SymPtr("float32", p.offset, (32,))
+    b = SymPtr("float32", p.offset + 32, (32,))
+    heap = rma.put_nbi(ctx, heap, a, jnp.ones(32), 1)
+    heap = rma.fence(ctx, heap)                      # epoch boundary
+    heap = rma.put_nbi(ctx, heap, b, jnp.full(32, 2.0), 1)
+    heap = rma.quiet(ctx, heap)
+    # contiguous ranges, but the fence forbids merging them
+    assert ctx.pending.stats.transfers == 2
+    assert ctx.pending.stats.coalescing_ratio() == 1.0
+
+
+def test_fence_orders_same_target_overwrites():
+    """put A; fence; put A' — A' must win even though within one epoch the
+    squash would also pick the later value; across the fence the first write
+    must still be *issued* (two transfers, last lands second)."""
+    ctx, heap = _ctx()
+    p = heap.malloc((32,), "float32")
+    heap = rma.put_nbi(ctx, heap, p, jnp.full(32, 1.0), 1)
+    heap = rma.fence(ctx, heap)
+    heap = rma.put_nbi(ctx, heap, p, jnp.full(32, 2.0), 1)
+    heap = rma.quiet(ctx, heap)
+    assert ctx.pending.stats.transfers == 2
+    np.testing.assert_array_equal(np.asarray(heap.read(p, 1)),
+                                  np.full(32, 2.0))
+
+
+def test_fence_without_pending_is_free():
+    ctx, heap = _ctx()
+    e0 = ctx.pending.epoch
+    heap = rma.fence(ctx, heap)
+    assert ctx.pending.epoch == e0              # no ops -> no new epoch
+
+
+# ---------------------------------------------------------------------------
+# law 3: quiet idempotence
+# ---------------------------------------------------------------------------
+
+
+def test_quiet_idempotent():
+    ctx, heap = _ctx()
+    p = heap.malloc((32,), "float32")
+    heap = rma.put_nbi(ctx, heap, p, jnp.full(32, 3.0), 1)
+    heap = rma.quiet(ctx, heap)
+    snap = np.asarray(heap.read(p, 1)).copy()
+    transfers = ctx.pending.stats.transfers
+    heap = rma.quiet(ctx, heap)                 # second quiet: no-op
+    heap = rma.quiet(ctx, heap)
+    np.testing.assert_array_equal(np.asarray(heap.read(p, 1)), snap)
+    assert ctx.pending.stats.transfers == transfers
+
+
+# ---------------------------------------------------------------------------
+# law 4: interleaved proxy + nbi drains converge under permuted schedules
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(["fd", "df", "fdf", "dfd"]),
+       st.integers(1, 50))
+def test_proxy_and_nbi_drain_order_converges(schedule, val):
+    """The nbi queue and the reverse-offload ring are independent channels
+    to disjoint targets: any order of (f)lush and (d)rain yields the same
+    final heap."""
+    results = []
+    for order in (schedule, schedule[::-1]):
+        ctx, heap = _ctx()
+        a = heap.malloc((16,), "float32")
+        b = heap.malloc((16,), "float32")
+        px = proxy.HostProxy(ctx)
+        heap = rma.put_nbi(ctx, heap, a, jnp.full(16, float(val)), 1)
+        px.put(b, jnp.full(16, float(val + 1)), 3)
+        for step in order:
+            heap = (rma.quiet(ctx, heap) if step == "f"
+                    else px.drain(heap))
+        results.append(np.concatenate([
+            np.asarray(heap.read(a, 1)), np.asarray(heap.read(b, 3))]))
+    np.testing.assert_array_equal(results[0], results[1])
+
+
+def test_proxy_put_nbi_rides_queue_and_completes_at_quiet():
+    ctx, heap = _ctx()
+    p = heap.malloc((16,), "float32")
+    px = proxy.HostProxy(ctx)
+    px.put_nbi(p, jnp.full(16, 5.0), 3)              # cross-pod, deferred
+    assert float(heap.read(p, 3).sum()) == 0.0       # not yet on the ring
+    assert len(px.ring.delivered) == 0
+    heap = rma.quiet(ctx, heap, proxy=px)            # ring + drain at quiet
+    assert float(heap.read(p, 3)[0]) == 5.0
+    assert len(px.ring.delivered) == 1               # traveled the real ring
+
+
+# ---------------------------------------------------------------------------
+# blocking ops vs the queue
+# ---------------------------------------------------------------------------
+
+
+def test_blocking_put_supersedes_pending_nbi():
+    ctx, heap = _ctx()
+    p = heap.malloc((32,), "float32")
+    heap = rma.put_nbi(ctx, heap, p, jnp.full(32, 1.0), 1)
+    heap = rma.put(ctx, heap, p, jnp.full(32, 2.0), 1)   # program order wins
+    heap = rma.quiet(ctx, heap)                          # stale op dropped
+    np.testing.assert_array_equal(np.asarray(heap.read(p, 1)),
+                                  np.full(32, 2.0))
+
+
+def test_blocking_put_wins_over_covered_sub_range_nbi():
+    """A pending nbi put to a SUB-range of the blocking put's target is
+    fully covered -> dropped; the blocking value must survive quiet."""
+    ctx, heap = _ctx()
+    p = heap.malloc((32,), "float32")
+    sub = SymPtr("float32", p.offset, (16,))
+    heap = rma.put_nbi(ctx, heap, sub, jnp.full(16, 1.0), 1)
+    heap = rma.put(ctx, heap, p, jnp.full(32, 2.0), 1)   # covers sub
+    heap = rma.quiet(ctx, heap)
+    np.testing.assert_array_equal(np.asarray(heap.read(p, 1)),
+                                  np.full(32, 2.0))
+
+
+def test_blocking_put_completes_partial_overlap_first():
+    """A pending nbi put only partially overlapped by the blocking put
+    completes BEFORE the blocking store (program order), so the overlap
+    bytes read the blocking value and the rest the nbi value."""
+    ctx, heap = _ctx()
+    p = heap.malloc((64,), "float32")
+    wide = SymPtr("float32", p.offset, (48,))            # 0..48 deferred
+    head = SymPtr("float32", p.offset, (32,))            # 0..32 blocking
+    heap = rma.put_nbi(ctx, heap, wide, jnp.full(48, 1.0), 1)
+    heap = rma.put(ctx, heap, head, jnp.full(32, 2.0), 1)
+    heap = rma.quiet(ctx, heap)
+    got = np.asarray(heap.read(p, 1))
+    np.testing.assert_array_equal(got[:32], np.full(32, 2.0))
+    np.testing.assert_array_equal(got[32:48], np.full(16, 1.0))
+
+
+def test_proxy_flush_orders_ring_puts_before_later_amos():
+    """A dcn nbi put followed by a deferred AMO on the same element: the
+    quiet-with-proxy flush must drain the ring BEFORE applying the AMO, so
+    the AMO reads the put's value (FIFO program order)."""
+    ctx, heap = _ctx()
+    p = heap.malloc((), "int32")
+    px = proxy.HostProxy(ctx)
+    px.put_nbi(p, jnp.asarray(10, "int32"), 3)           # pe 3 = other pod
+    heap = amo.add_nbi(ctx, heap, p, 5, 3)
+    heap = rma.quiet(ctx, heap, proxy=px)
+    assert int(heap.read(p, 3).reshape(())) == 15
+
+
+def test_signal_wait_forces_dependent_completion():
+    ctx, heap = _ctx()
+    buf = heap.malloc((16,), "float32")
+    sig = heap.malloc((), "uint32")
+    heap = signal.put_signal_nbi(ctx, heap, buf, jnp.full(16, 4.0), sig, 1,
+                                 signal.SIGNAL_ADD, 1)
+    assert float(heap.read(buf, 1).sum()) == 0.0     # both halves deferred
+    heap, cur, ok = signal.signal_wait_until(ctx, heap, sig, 1, "ge", 1)
+    assert bool(ok) and int(cur) == 1
+    # the data half landed BEFORE the observed signal (data-then-flag)
+    np.testing.assert_array_equal(np.asarray(heap.read(buf, 1)),
+                                  np.full(16, 4.0))
+
+
+def test_blocking_amo_linearizes_after_pending_nbi_put():
+    """put_nbi then a blocking fetch_add on the same element: the atomic
+    must observe the deferred put (program order), not lose its increment
+    to a stale flush."""
+    ctx, heap = _ctx()
+    p = heap.malloc((), "int32")
+    heap = rma.put_nbi(ctx, heap, p, jnp.asarray(10, "int32"), 1)
+    heap, old = amo.fetch_add(ctx, heap, p, 5, 1)
+    assert int(old) == 10                            # saw the completed put
+    heap = rma.quiet(ctx, heap)
+    assert int(heap.read(p, 1).reshape(())) == 15
+
+
+def test_blocking_put_signal_wins_over_pending_signal_set():
+    """put_signal_nbi(SET 7) then blocking put_signal(SET 99): the later
+    blocking flag write is the one a waiter observes after quiet."""
+    ctx, heap = _ctx()
+    buf = heap.malloc((8,), "float32")
+    sig = heap.malloc((), "uint32")
+    heap = signal.put_signal_nbi(ctx, heap, buf, jnp.ones(8), sig, 7,
+                                 signal.SIGNAL_SET, 1)
+    heap = signal.put_signal(ctx, heap, buf, jnp.ones(8), sig, 99,
+                             signal.SIGNAL_SET, 1)
+    heap = rma.quiet(ctx, heap)
+    assert int(heap.read(sig, 1).reshape(())) == 99
+
+
+def test_trace_markers_track_dropped_vs_done():
+    """Superseded ops read "(dropped)", flushed ops "(done)" — the debug
+    trace never claims a never-executed op completed."""
+    ctx, heap = _ctx()
+    p = heap.malloc((32,), "float32")
+    q = heap.malloc((32,), "float32")
+    heap = rma.put_nbi(ctx, heap, p, jnp.ones(32), 1)    # will be dropped
+    heap = rma.put(ctx, heap, p, jnp.full(32, 2.0), 1)   # covers it
+    heap = rma.put_nbi(ctx, heap, q, jnp.ones(32), 1)    # will flush
+    heap = rma.quiet(ctx, heap)
+    tags = [r.op for r in ctx.ledger if r.op.startswith("put_nbi(")]
+    assert tags == ["put_nbi(dropped)", "put_nbi(done)"]
+
+
+def test_amo_add_nbi_defers_and_merges():
+    ctx, heap = _ctx()
+    p = heap.malloc((), "int32")
+    heap = amo.add_nbi(ctx, heap, p, 5, 1)
+    heap = amo.add_nbi(ctx, heap, p, 7, 1)
+    assert int(heap.read(p, 1).reshape(())) == 0     # deferred
+    t0 = ctx.pending.stats.transfers
+    heap = rma.quiet(ctx, heap)
+    assert int(heap.read(p, 1).reshape(())) == 12
+    assert ctx.pending.stats.transfers - t0 == 1     # adds merged
+
+
+def test_get_nbi_costs_accrue_at_quiet():
+    ctx, heap = _ctx()
+    p = heap.malloc((32,), "float32")
+    heap = rma.put(ctx, heap, p, jnp.arange(32.0), 1)
+    out = rma.get_nbi(ctx, heap, p, 1)
+    np.testing.assert_array_equal(np.asarray(out), np.arange(32.0))
+    assert len(ctx.pending) == 1
+    heap = rma.quiet(ctx, heap)
+    assert any(r.op == "get_nbi" for r in ctx.ledger)
+    assert len(ctx.pending) == 0

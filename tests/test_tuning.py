@@ -302,3 +302,26 @@ def test_bench_profile_emits_valid_json(tmp_path):
     assert loaded["samples"] == doc["samples"] > 0
     back = table_mod.TuningTable.from_json(loaded["table"])
     assert back.cutovers                           # usable for warm-start
+
+
+def test_best_of_records_measured_wall_clock():
+    """Satellite of the completion-engine PR: benchmark wall clock flows
+    into a TelemetrySink (benchmarks.common.MEASURED) that the estimator can
+    fit, instead of the analytic model replayed."""
+    from benchmarks import common as bench_common
+    sink = telemetry.TelemetrySink()
+    orig = bench_common.MEASURED
+    bench_common.MEASURED = sink
+    try:
+        for lg in (10, 12, 14):          # spread so the fit is constrained
+            bench_common.best_of(lambda: None, trials=2, min_warm_s=0.0,
+                                 record=("put", 1 << lg, "direct", "local",
+                                         4))
+    finally:
+        bench_common.MEASURED = orig
+    assert sink.total_count() == 3
+    samples = sink.samples(path="direct", tier="local", work_items=4)
+    assert len(samples) == 3
+    assert all(t >= 0.0 for _, t in samples)
+    prof = estimator.fit_linear(samples)
+    assert prof is not None and prof.nsamples == 3
