@@ -27,16 +27,23 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.json is not None:
-        from benchmarks import bench_cutover
+        import os
+        from benchmarks import bench_cutover, bench_kvxfer
         print("bench,config,us_per_call,derived")
         doc = bench_cutover.profile(args.json)
         print(f"# wrote {args.json}: {doc['samples']} samples, "
               f"agreement={doc['agreement_vs_analytic']:.3f}")
+        kv_path = os.path.join(os.path.dirname(args.json) or ".",
+                               "BENCH_kvxfer.json")
+        kv = bench_kvxfer.smoke(kv_path)
+        print(f"# wrote {kv_path}: overlap "
+              f"{kv['overlap']['overlap_ratio']:.2f}x, coalescing "
+              f"{kv['migration']['coalescing_ratio']:.1f}")
         return
 
     from benchmarks import (bench_broadcast, bench_cutover, bench_fcollect,
-                            bench_kernels, bench_overlap, bench_ring,
-                            bench_rma, bench_workgroup, common)
+                            bench_kernels, bench_kvxfer, bench_overlap,
+                            bench_ring, bench_rma, bench_workgroup, common)
     suites = [
         ("fig3_rma", bench_rma.run),
         ("fig4_workgroup", bench_workgroup.run),
@@ -46,6 +53,7 @@ def main() -> None:
         ("ring_buffer", bench_ring.run),
         ("kernels", bench_kernels.run),
         ("overlap", bench_overlap.run),
+        ("kvxfer", bench_kvxfer.run),
     ]
     only = args.only.split(",") if args.only else None
     print("bench,config,us_per_call,derived")

@@ -35,3 +35,20 @@ assert eff > 1.0, f"nbi overlap efficiency regressed to {eff:.3f} (<= 1.0)"
 assert ratio > 1.0, f"write combining inactive (ratio {ratio:.1f})"
 print(f"overlap efficiency {eff:.3f}, coalescing ratio {ratio:.1f} -> OK")
 EOF
+
+echo "== KV migration smoke (disaggregated serving) =="
+python -m benchmarks.bench_kvxfer --smoke BENCH_kvxfer.json
+python - <<'EOF'
+import json
+doc = json.load(open("BENCH_kvxfer.json"))
+ovl = doc["overlap"]["overlap_ratio"]
+ratio = doc["migration"]["coalescing_ratio"]
+bw = doc["migration"]["bw_GBs"]
+profiles = doc["telemetry"]["fitted_profiles"]
+assert ovl >= 1.2, f"MB-scale overlap below acceptance floor ({ovl:.3f} < 1.2)"
+assert ratio > 1.0, f"block write-combining inactive (ratio {ratio:.1f})"
+assert bw > 0.0, "migration moved no bytes"
+assert profiles > 0, "kvxfer telemetry produced no fitted transport profiles"
+print(f"migration overlap {ovl:.2f}x, coalescing {ratio:.1f}, "
+      f"{bw:.1f} GB/s modeled, {profiles} fitted profiles -> OK")
+EOF

@@ -56,7 +56,10 @@ class SymmetricHeap:
 
     # ----------------------------------------------------------- allocation
     def malloc(self, shape, dtype) -> SymPtr:
-        """shmem_malloc: symmetric, collective over all PEs (host-only API)."""
+        """shmem_malloc: symmetric, collective over all PEs (host-only API).
+
+        Contents of a reused free-list region are UNDEFINED (the OpenSHMEM
+        contract); use :meth:`calloc` for guaranteed zeros."""
         # canonicalize (JAX without x64: 64-bit symmetric objects narrow to
         # 32-bit — documented TPU adaptation; TPUs natively prefer 32-bit)
         dt = jax.dtypes.canonicalize_dtype(jnp.dtype(dtype)).name
@@ -87,11 +90,71 @@ class SymmetricHeap:
         return SymPtr(dt, cur, shape)
 
     def calloc(self, shape, dtype) -> SymPtr:
-        return self.malloc(shape, dtype)  # pools are zero-initialized
+        """shmem_calloc: like malloc but the region reads zero at every PE.
+
+        malloc may hand back a reused free-list region still holding a freed
+        buffer's bytes, so the whole aligned span is explicitly zeroed here.
+        The pool update mutates this heap in place — allocation is a host-only
+        collective, not a one-sided data op, so the functional-update rule for
+        data movement does not apply (snapshots taken via replace_pool/write
+        keep their own pools dict and are unaffected)."""
+        ptr = self.malloc(shape, dtype)
+        n_aligned = max(ALIGN, -(-ptr.size // ALIGN) * ALIGN)
+        pool = self.pools[ptr.dtype]
+        self.pools[ptr.dtype] = pool.at[
+            :, ptr.offset:ptr.offset + n_aligned].set(0)
+        return ptr
 
     def free(self, ptr: SymPtr) -> None:
+        """Return the aligned span to the free list, coalescing with adjacent
+        free entries so repeated alloc/free cycles don't fragment the pool."""
         n = max(ALIGN, -(-ptr.size // ALIGN) * ALIGN)
-        self._free.setdefault(ptr.dtype, []).append((ptr.offset, n))
+        entries = sorted(self._free.setdefault(ptr.dtype, [])
+                         + [(ptr.offset, n)])
+        merged = [entries[0]]
+        for off, sz in entries[1:]:
+            last_off, last_sz = merged[-1]
+            if last_off + last_sz == off:
+                merged[-1] = (last_off, last_sz + sz)
+            else:
+                merged.append((off, sz))
+        self._free[ptr.dtype] = merged
+
+    # ----------------------------------------------------------- accounting
+    def stats(self) -> dict:
+        """Allocator accounting: bytes in use / free / reserved plus a
+        fragmentation index per dtype pool (0 = one free extent, ->1 = free
+        space shattered across many extents).  Consumed by the paged KV pool
+        and the serving benchmarks."""
+        per_dtype = {}
+        tot_used = tot_free = tot_reserved = 0
+        for dt, pool in self.pools.items():
+            item = jnp.dtype(dt).itemsize
+            cursor = self._cursor.get(dt, 0)
+            free_spans = self._free.get(dt, [])
+            free_words = sum(sz for _, sz in free_spans)
+            largest = max((sz for _, sz in free_spans), default=0)
+            used_words = cursor - free_words
+            frag = 1.0 - largest / free_words if free_words else 0.0
+            per_dtype[dt] = {
+                "bytes_in_use": used_words * item,
+                "bytes_free": free_words * item,
+                "bytes_reserved": cursor * item,
+                "capacity_bytes": pool.shape[1] * item,
+                "free_extents": len(free_spans),
+                "largest_free_bytes": largest * item,
+                "fragmentation": frag,
+            }
+            tot_used += used_words * item
+            tot_free += free_words * item
+            tot_reserved += cursor * item
+        return {
+            "npes": self.npes,
+            "bytes_in_use": tot_used,
+            "bytes_free": tot_free,
+            "bytes_reserved": tot_reserved,
+            "pools": per_dtype,
+        }
 
     # ----------------------------------------------------------- access
     def read(self, ptr: SymPtr, pe) -> jnp.ndarray:

@@ -33,6 +33,9 @@ class Team:
 
     def split_strided(self, start: int, stride: int, size: int) -> "Team":
         """shmem_team_split_strided relative to this team."""
+        if start < 0 or stride < 1 or size < 1:
+            raise ValueError(
+                f"invalid split (start={start}, stride={stride}, size={size})")
         if start + (size - 1) * stride >= self.size:
             raise ValueError("child team exceeds parent")
         return Team(self.translate(start), self.stride * stride, size)
@@ -47,3 +50,16 @@ def shared(npes: int, node_size: int, node_id: int) -> Team:
     if node_size * (node_id + 1) > npes:
         raise ValueError("node beyond world")
     return Team(node_id * node_size, 1, node_size)
+
+
+def disagg_partition(team: Team, n_prefill: int) -> tuple:
+    """Split a team into contiguous (prefill, decode) sub-teams for
+    disaggregated serving — the prefill fleet owns the first ``n_prefill``
+    ranks, the decode fleet the rest.  Built on ``split_strided`` so it works
+    on ``world`` and on a ``shared()`` pod team alike (the intra-pod split
+    the serve launcher uses when prefill and decode share one fabric)."""
+    if not 0 < n_prefill < team.size:
+        raise ValueError(
+            f"need 0 < n_prefill < {team.size}, got {n_prefill}")
+    return (team.split_strided(0, 1, n_prefill),
+            team.split_strided(n_prefill, 1, team.size - n_prefill))

@@ -1,10 +1,126 @@
-"""Serving launcher: batched generation on a reduced config.
+"""Serving launcher: batched generation, and disaggregated prefill/decode
+with SHMEM paged-KV migration.
 
+  # lockstep batch (original mode)
   PYTHONPATH=src python -m repro.launch.serve --arch zamba2-2.7b --batch 4
+
+  # disaggregated: 2 prefill PEs stream paged KV to 2 decode PEs
+  PYTHONPATH=src python -m repro.launch.serve --disagg \\
+      --prefill-pes 2 --decode-pes 2 --requests 8 --slots 3
+
+  # cross-pod hand-off (prefill pod -> decode pod over the host proxy)
+  PYTHONPATH=src python -m repro.launch.serve --disagg --cross-pod ...
 """
 from __future__ import annotations
 
 import argparse
+
+
+def _overlap_report(args) -> None:
+    """Production-shape nbi-vs-blocking report for the decode collectives.
+
+    The ROADMAP open item: at toy (reduced-config) sizes the decode
+    allreduces are alpha-bound and nbi loses.  Here the *full* architecture
+    config prices the sweep — real vocab (the logits reduce) and real
+    d_model (the hidden reduce) over a batch sweep — and the report prints
+    the crossover batch where the completion-engine schedule starts to win.
+    """
+    from repro.comms import api as comms_api
+    from repro.configs import base as cfgbase
+
+    full = cfgbase.get_config(args.arch)
+    ops = comms_api.get_ops("shmem", npes=args.comms_npes)
+    print(f"[serve] overlap report — production shapes for {full.name}: "
+          f"d_model={full.d_model} vocab={full.vocab_size} "
+          f"npes={args.comms_npes}")
+    batches = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+    for name, per_tok in (("hidden", full.d_model * 4),
+                          ("logits", full.vocab_size * 4)):
+        crossover = None
+        rows = []
+        for B in batches:
+            nbytes = B * per_tok
+            eff = ops.modeled_overlap_efficiency(nbytes)
+            rows.append((B, nbytes, eff))
+            if crossover is None and eff > 1.0:
+                crossover = B
+        for B, nbytes, eff in rows:
+            verdict = "nbi" if eff > 1.0 else "blocking"
+            print(f"[serve]   {name:6s} B={B:<4d} {nbytes:>12d} B  "
+                  f"overlap x{eff:.2f} -> {verdict}")
+        if crossover is None:
+            print(f"[serve]   {name}: alpha-bound at every swept batch "
+                  f"-> stay blocking")
+        else:
+            print(f"[serve]   {name}: nbi wins from batch {crossover} "
+                  f"({crossover * per_tok} B per decode step)")
+
+
+def _make_batch(cfg, key, batch: int, prompt_len: int) -> dict:
+    """Random request batch with whatever frontend embeds the family needs."""
+    import jax
+    b = {"tokens": jax.random.randint(key, (batch, prompt_len), 0,
+                                      cfg.vocab_size)}
+    if cfg.family == "audio":
+        b["audio_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (batch, cfg.encoder_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        b["image_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (batch, cfg.image_tokens, cfg.d_model))
+    return b
+
+
+def _run_disagg(args, cfg, params) -> None:
+    import jax
+    from repro.core import context, teams
+    from repro.core.proxy import HostProxy
+    from repro.serve.engine import Engine, ServeConfig
+    from repro.serve.kvpool import KVPool
+    from repro.serve.kvxfer import KVMigrator
+    from repro.serve.scheduler import DisaggScheduler
+
+    npes = args.prefill_pes + args.decode_pes
+    node_size = args.prefill_pes if args.cross_pod else npes
+    ctx, heap = context.init(npes=npes, node_size=node_size)
+    pre, dec = teams.disagg_partition(teams.world(npes), args.prefill_pes)
+    max_len = args.prompt_len + args.max_new
+    eng = Engine(cfg, params, max_len=max_len)
+    pool = KVPool.create(heap, cfg, max_len,
+                         num_blocks=args.kv_blocks, max_slots=args.slots,
+                         block_tokens=args.block_tokens)
+    proxy = HostProxy(ctx) if args.cross_pod else None
+    mig = KVMigrator(ctx, pool, proxy=proxy)
+    sched = DisaggScheduler(
+        ctx, heap, eng, pool, mig, prefill_pes=pre.pes(),
+        decode_pes=dec.pes(), num_slots=args.slots,
+        scfg=ServeConfig(max_new_tokens=args.max_new,
+                         temperature=args.temperature),
+        admit_delay_steps=args.admit_delay)
+    for i in range(args.requests):
+        sched.submit(_make_batch(cfg, jax.random.fold_in(jax.random.key(1), i),
+                                 1, args.prompt_len))
+    outs = sched.run()
+    st = sched.stats
+    tier = "dcn (host proxy)" if args.cross_pod else "ici"
+    print(f"[serve] disagg arch={cfg.name} prefill={pre.pes()} "
+          f"decode={dec.pes()} tier={tier}")
+    print(f"[serve]   {st.prefills} prefills, {st.migrations} migrations "
+          f"({st.bytes_migrated} B), {st.admissions} admissions, "
+          f"{st.evictions} evictions over {st.decode_steps} decode steps")
+    if st.ttfd_steps:
+        avg_steps = sum(st.ttfd_steps) / len(st.ttfd_steps)
+        avg_t = sum(st.ttfd_model_s) / len(st.ttfd_model_s)
+        print(f"[serve]   time-to-first-decode-token: {avg_steps:.1f} sched "
+              f"steps / {avg_t * 1e6:.1f} us modeled comm")
+    print(f"[serve]   stalls: pool={st.stalled_on_pool} "
+          f"slots={st.stalled_on_slots}; coalescing ratio "
+          f"{ctx.pending.stats.coalescing_ratio():.2f}")
+    ps = pool.stats(sched.heap)
+    print(f"[serve]   pool: {ps['blocks_in_use']}/{ps['blocks_total']} "
+          f"blocks in use; heap: {ps['heap']['bytes_in_use']} B in use, "
+          f"{ps['heap']['bytes_free']} B free")
+    for rid in sorted(outs)[:4]:
+        print(f"[serve]   req {rid}: {outs[rid].tolist()}")
 
 
 def main():
@@ -16,46 +132,51 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--overlap-report", action="store_true",
                     help="model the decode-step collectives under the nbi "
-                         "(completion-engine) schedule vs blocking")
+                         "schedule vs blocking at PRODUCTION shapes (full "
+                         "vocab/d_model, batch sweep) and print the "
+                         "crossover where nbi wins")
     ap.add_argument("--comms-npes", type=int, default=8)
+    # --- disaggregated serving -------------------------------------------
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated prefill/decode with SHMEM paged-KV "
+                         "migration")
+    ap.add_argument("--prefill-pes", type=int, default=2)
+    ap.add_argument("--decode-pes", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=3,
+                    help="decode slots per decode PE")
+    ap.add_argument("--kv-blocks", type=int, default=64,
+                    help="paged KV pool size in blocks")
+    ap.add_argument("--block-tokens", type=int, default=16)
+    ap.add_argument("--admit-delay", type=int, default=1,
+                    help="modeled wire latency in scheduler steps before a "
+                         "migration's signal is polled")
+    ap.add_argument("--cross-pod", action="store_true",
+                    help="decode PEs in a second pod: dcn tier, migrations "
+                         "route through the host proxy ring")
     args = ap.parse_args()
 
     import jax
-    import jax.numpy as jnp
     from repro.configs import base as cfgbase
     from repro.models import model
     from repro.serve.engine import Engine, ServeConfig
 
     cfg = cfgbase.reduced(cfgbase.get_config(args.arch))
     params = model.init_params(jax.random.key(0), cfg)
-    eng = Engine(cfg, params, max_len=args.prompt_len + args.max_new)
-    batch = {"tokens": jax.random.randint(
-        jax.random.key(1), (args.batch, args.prompt_len), 0, cfg.vocab_size)}
-    if cfg.family == "audio":
-        batch["audio_embeds"] = jax.random.normal(
-            jax.random.key(2), (args.batch, cfg.encoder_seq, cfg.d_model))
-    if cfg.family == "vlm":
-        batch["image_embeds"] = jax.random.normal(
-            jax.random.key(2), (args.batch, cfg.image_tokens, cfg.d_model))
-    out = eng.generate(batch, ServeConfig(max_new_tokens=args.max_new,
-                                          temperature=args.temperature))
-    print(f"[serve] arch={cfg.name} generated {out.shape}:")
-    print(out)
+
+    if args.disagg:
+        _run_disagg(args, cfg, params)
+    else:
+        eng = Engine(cfg, params, max_len=args.prompt_len + args.max_new)
+        batch = _make_batch(cfg, jax.random.key(1), args.batch,
+                            args.prompt_len)
+        out = eng.generate(batch, ServeConfig(max_new_tokens=args.max_new,
+                                              temperature=args.temperature))
+        print(f"[serve] arch={cfg.name} generated {out.shape}:")
+        print(out)
 
     if args.overlap_report:
-        # decode is latency-bound: each step all-reduces the TP-sharded
-        # logits/hidden.  Under the completion engine the step's collective
-        # is issued nbi and completes while sampling/embedding of the
-        # previous token computes — report the modeled gain per step.
-        from repro.comms import api as comms_api
-        ops = comms_api.get_ops("shmem", npes=args.comms_npes)
-        for name, nbytes in (
-                ("hidden", args.batch * cfg.d_model * 4),
-                ("logits", args.batch * cfg.vocab_size * 4)):
-            eff = ops.modeled_overlap_efficiency(nbytes)
-            verdict = "use nbi" if eff > 1.0 else "stay blocking (alpha-bound)"
-            print(f"[serve] decode {name} allreduce ({nbytes} B): "
-                  f"modeled nbi overlap x{eff:.2f} vs blocking -> {verdict}")
+        _overlap_report(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,2 @@
+"""Serving layer: slot-based engine, paged KV pool, SHMEM-backed KV
+migration, and the continuous-batching disaggregated scheduler."""

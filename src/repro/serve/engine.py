@@ -1,9 +1,18 @@
-"""Batched serving engine: prefill + decode loop with KV/recurrent caches.
+"""Slot-based serving engine: prefill + decode over rotating request slots.
 
-Continuous-batching-lite: a request batch is prefetched together, decoded in
-lockstep with per-request stop handling (a production engine would rotate
-requests in/out of slots; the step functions here are exactly the ones the
-pod launcher shards — decode_32k / long_500k dry-run lower these).
+The decode cache is a fixed bank of ``num_slots`` request slots; requests
+enter a slot mid-flight (continuous batching — from a local prefill or from
+a migrated paged-KV hand-off, see ``serve/scheduler.py``) and leave it the
+step they finish, freeing the slot for the next admission.  One decode step
+always runs the full slot bank; inactive slots carry ``pos=0, tok=0``
+padding whose cache writes are either masked by the per-slot validity rules
+or overwritten at the next admission, so rotation never perturbs the active
+slots' numerics.
+
+``Engine.generate`` (the lockstep API the tests and examples drive) is a
+thin orbit of the same machinery: admit the whole batch at once, decode
+until done.  Disaggregated serving gets bitwise-identical decode because
+both paths share ``decode_slots``.
 """
 from __future__ import annotations
 
@@ -11,6 +20,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import kvcache, model
 
@@ -21,6 +31,22 @@ class ServeConfig:
     temperature: float = 0.0       # 0 = greedy
     eos_id: int = -1               # -1 = never stop early
     seed: int = 0
+
+
+@dataclasses.dataclass
+class SlotBatch:
+    """State of one decode slot bank (functional: steps return a new one)."""
+    cache: dict                    # batched decode cache, B = num_slots
+    pos: jnp.ndarray               # (B,) int32 — next decode position
+    tok: jnp.ndarray               # (B,) int32 — last sampled token
+    active: np.ndarray             # (B,) bool, host-side occupancy mask
+
+    @property
+    def num_slots(self) -> int:
+        return int(self.pos.shape[0])
+
+    def free_slots(self) -> list:
+        return [i for i in range(self.num_slots) if not self.active[i]]
 
 
 class Engine:
@@ -39,25 +65,88 @@ class Engine:
         return jax.random.categorical(key, logits / temperature, axis=-1) \
             .astype(jnp.int32)
 
+    # ------------------------------------------------------------ slot API
+    def init_slots(self, num_slots: int) -> SlotBatch:
+        return SlotBatch(
+            cache=kvcache.init_cache(self.cfg, num_slots, self.max_len),
+            pos=jnp.zeros((num_slots,), jnp.int32),
+            tok=jnp.zeros((num_slots,), jnp.int32),
+            active=np.zeros((num_slots,), bool))
+
+    def prefill_request(self, request: dict, key, temperature: float = 0.0):
+        """Prefill ONE request (batch axis 1).  Returns
+        ``(first_token, logits, cache1)`` — the B=1 cache a migration packs
+        from, and the first generated token sampled from the last-position
+        logits (the token that travels in the migration header)."""
+        S = request["tokens"].shape[1]
+        assert S <= self.max_len, "prompt exceeds cache"
+        cache = kvcache.init_cache(self.cfg, 1, self.max_len)
+        logits, cache = self._prefill(self.params, request, cache)
+        tok = self._sample(logits, key, temperature)
+        return int(tok[0]), logits, cache
+
+    def activate_slot(self, slots: SlotBatch, slot: int, *, pos: int,
+                      token: int) -> SlotBatch:
+        """Mark a slot occupied with its decode cursor and pending token.
+        The slot's cache contents must already be in place (batched prefill,
+        or `kvpool.insert_blocks`/`insert_tail` after a migration)."""
+        active = slots.active.copy()
+        active[slot] = True
+        return SlotBatch(cache=slots.cache,
+                         pos=slots.pos.at[slot].set(pos),
+                         tok=slots.tok.at[slot].set(token),
+                         active=active)
+
+    def evict_slot(self, slots: SlotBatch, slot: int) -> SlotBatch:
+        """Release a slot.  The cache rows keep their bytes (stale data is
+        masked by pos-validity and fully overwritten on the next admission);
+        pos/tok return to the inactive padding values."""
+        active = slots.active.copy()
+        active[slot] = False
+        return SlotBatch(cache=slots.cache,
+                         pos=slots.pos.at[slot].set(0),
+                         tok=slots.tok.at[slot].set(0),
+                         active=active)
+
+    def decode_slots(self, slots: SlotBatch, key, temperature: float = 0.0):
+        """ONE decode step over the whole slot bank.  Active slots advance
+        their cursor; inactive slots hold at (pos=0, tok=0) padding.
+        Returns ``(new_slots, tokens)`` with tokens the per-slot samples."""
+        logits, cache = self._decode(self.params, slots.tok[:, None],
+                                     slots.pos, slots.cache)
+        tok = self._sample(logits, key, temperature)
+        mask = jnp.asarray(slots.active)
+        return SlotBatch(
+            cache=cache,
+            pos=jnp.where(mask, slots.pos + 1, 0).astype(jnp.int32),
+            tok=jnp.where(mask, tok, 0).astype(jnp.int32),
+            active=slots.active.copy()), tok
+
+    # ------------------------------------------------------- lockstep API
     def generate(self, batch, scfg: ServeConfig = ServeConfig()):
         """batch: {tokens: (B, S_prompt) [+ frontend embeds]}.
-        Returns (B, max_new_tokens) generated ids."""
+        Returns (B, max_new_tokens) generated ids.
+
+        Lockstep special case of the slot machinery: every request admitted
+        at step 0 (one shared batched prefill), decoded until max_new.
+        """
         tokens = batch["tokens"]
         B, S = tokens.shape
         assert S + scfg.max_new_tokens <= self.max_len + 1, \
             "cache too small for prompt + generation"
-        cache = kvcache.init_cache(self.cfg, B, self.max_len)
-        logits, cache = self._prefill(self.params, batch, cache)
+        slots = self.init_slots(B)
+        logits, cache = self._prefill(self.params, batch, slots.cache)
         key = jax.random.key(scfg.seed)
+        tok = self._sample(logits, key, scfg.temperature)
+        slots = SlotBatch(cache=cache,
+                          pos=jnp.full((B,), S, jnp.int32),
+                          tok=tok,
+                          active=np.ones((B,), bool))
         out = []
         done = jnp.zeros((B,), bool)
-        tok = self._sample(logits, key, scfg.temperature)
         for i in range(scfg.max_new_tokens):
-            out.append(jnp.where(done, 0, tok))
-            done = done | (tok == scfg.eos_id)
-            pos = jnp.full((B,), S + i, jnp.int32)
-            logits, cache = self._decode(self.params, tok[:, None], pos,
-                                         cache)
+            out.append(jnp.where(done, 0, slots.tok))
+            done = done | (slots.tok == scfg.eos_id)
             key = jax.random.fold_in(key, i)
-            tok = self._sample(logits, key, scfg.temperature)
+            slots, _ = self.decode_slots(slots, key, scfg.temperature)
         return jnp.stack(out, axis=1)

@@ -1,0 +1,385 @@
+"""Paged KV-cache block pool on the symmetric heap.
+
+The disaggregated serving subsystem stores every request's decode state in
+fixed-size *blocks* carved out of one symmetric allocation, so a prefill PE
+can hand a finished request to a decode PE with plain one-sided
+``put_signal_nbi`` — the pool layout is identical on every PE (the
+OpenSHMEM symmetric contract), which makes a block id a cluster-wide
+address.
+
+Layout (derived from the model config once per pool):
+
+- **paged leaves** — the self-attention K/V tensors, whose token axis grows
+  with the request.  They are split along that axis into blocks of
+  ``block_tokens`` tokens; block *b* of a request holds the slice
+  ``[b*T, (b+1)*T)`` of every paged leaf, flattened and concatenated in a
+  fixed order (layer-major within the block).  A dense-cache request of
+  prompt length S only needs ``ceil(S/T)`` blocks migrated; a ring cache
+  (SWA window) always moves its full ``ceil(W/T)`` blocks since occupied
+  slots wrap.
+- **tail** — everything else (SSM/recurrent states, ring position arrays,
+  cross/encoder KV): fixed-size per request, packed into one float32 vector
+  per request slot.  Packing is *lossless*: float32 passes through, bf16
+  upcasts exactly, int32 is bit-cast — so a migrated request decodes
+  bitwise-identically.
+- **header** — 4 int32 words per slot ``(req_id, prompt_len, first_token,
+  n_blocks)``: the control-plane record the decode side reads after the
+  admission signal lands.
+- **signal** — one int32 word per slot, the ``signal_wait_until`` target of
+  the migration protocol (see ``serve/kvxfer.py``).
+
+Block metadata (free list, ref counts, block tables) is host-side, exactly
+like the heap's own allocation metadata — the paper's "memory management
+APIs are host-only".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.heap import SymPtr, SymmetricHeap
+from repro.models import kvcache
+
+HEADER_WORDS = 4            # (req_id, prompt_len, first_token, n_blocks)
+
+
+# ---------------------------------------------------------------------------
+# Layout derivation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLeaf:
+    """One K or V tensor paged over its token axis.
+
+    Cache leaves are stacked ``(reps, B, W, nkv, hd)``; a block slice of this
+    leaf contributes ``reps * T * nkv * hd`` words to each block payload.
+    """
+    unit_idx: int            # index into cache["blocks"]
+    key: str                 # "k" | "v"
+    reps: int
+    width: int               # W — cache slots along the token axis
+    nkv: int
+    hd: int
+
+    @property
+    def words_per_token(self) -> int:
+        return self.reps * self.nkv * self.hd
+
+
+@dataclasses.dataclass(frozen=True)
+class TailLeaf:
+    """One non-paged cache leaf, packed losslessly into the f32 tail vector."""
+    unit_idx: int
+    key: str
+    shape: tuple             # per-request shape (reps, 1, ...)
+    dtype: str
+    words: int
+
+
+@dataclasses.dataclass(frozen=True)
+class KVLayout:
+    """Block/tail geometry for one (cfg, max_len, block_tokens) triple."""
+    block_tokens: int
+    blocks_per_request: int          # ceil(W / block_tokens)
+    block_words: int                 # words per block payload
+    tail_words: int
+    kv_dtype: str
+    cache_width: int                 # W — paged-leaf token-axis length
+    ring: bool
+    paged: Tuple[PagedLeaf, ...]
+    tail: Tuple[TailLeaf, ...]
+
+    @property
+    def block_bytes(self) -> int:
+        return self.block_words * jnp.dtype(self.kv_dtype).itemsize
+
+    def blocks_for_prompt(self, prompt_len: int) -> int:
+        """Blocks that must migrate for a request of this prompt length.
+
+        Dense caches fill slots [0, S) so only the prefix blocks carry data;
+        ring caches wrap, so every block is live.
+        """
+        if self.ring:
+            return self.blocks_per_request
+        need = -(-min(prompt_len, self.cache_width) // self.block_tokens)
+        return max(1, need)
+
+
+def build_layout(cfg, max_len: int, *, block_tokens: int = 16) -> KVLayout:
+    """Walk the model's cache structure and classify every leaf."""
+    struct = kvcache.cache_struct(cfg, 1, max_len)
+    W = kvcache.self_cache_len(cfg, max_len)
+    ring = kvcache.is_ring(cfg, max_len)
+    block_tokens = min(block_tokens, W)
+    paged: List[PagedLeaf] = []
+    tail: List[TailLeaf] = []
+    kv_dtype = None
+    for ui, entry in enumerate(struct["blocks"]):
+        for key in sorted(entry):
+            leaf = entry[key]
+            shape = tuple(int(s) for s in leaf.shape)
+            dt = jnp.dtype(leaf.dtype).name
+            # a paged leaf is a self-attention K/V ring/dense buffer: shape
+            # (reps, 1, W, nkv, hd) with the token axis at position 2
+            if key in ("k", "v") and len(shape) == 5 and shape[2] == W:
+                paged.append(PagedLeaf(ui, key, shape[0], shape[2],
+                                       shape[3], shape[4]))
+                kv_dtype = dt if kv_dtype is None else kv_dtype
+                if dt != kv_dtype:
+                    raise ValueError("mixed paged dtypes unsupported")
+            else:
+                n = 1
+                for s in shape:
+                    n *= s
+                if dt not in ("float32", "int32", "bfloat16"):
+                    # exactly what _pack_leaf_f32 round-trips losslessly —
+                    # fail at layout derivation, not mid-serving
+                    raise ValueError(f"unpackable tail dtype {dt}")
+                tail.append(TailLeaf(ui, key, shape, dt, n))
+    if not paged and kv_dtype is None:
+        kv_dtype = "float32"           # pure-SSM arch: tail-only migration
+    nb = -(-W // block_tokens) if paged else 1
+    block_words = sum(p.words_per_token for p in paged) * block_tokens
+    tail_words = sum(t.words for t in tail)
+    return KVLayout(block_tokens=block_tokens, blocks_per_request=nb,
+                    block_words=max(1, block_words),
+                    tail_words=max(1, tail_words), kv_dtype=kv_dtype,
+                    cache_width=W, ring=ring,
+                    paged=tuple(paged), tail=tuple(tail))
+
+
+# ---------------------------------------------------------------------------
+# Lossless tail packing
+# ---------------------------------------------------------------------------
+
+
+def _pack_leaf_f32(x) -> jnp.ndarray:
+    x = jnp.asarray(x)
+    if x.dtype == jnp.float32:
+        return x.reshape(-1)
+    if x.dtype == jnp.bfloat16:
+        return x.astype(jnp.float32).reshape(-1)        # exact upcast
+    if x.dtype == jnp.int32:
+        return jax.lax.bitcast_convert_type(x, jnp.float32).reshape(-1)
+    raise ValueError(f"unpackable tail dtype {x.dtype}")
+
+
+def _unpack_leaf_f32(flat, shape, dtype):
+    flat = jnp.asarray(flat, jnp.float32).reshape(shape)
+    dt = jnp.dtype(dtype)
+    if dt == jnp.float32:
+        return flat
+    if dt == jnp.dtype(jnp.bfloat16):
+        return flat.astype(jnp.bfloat16)                # exact downcast back
+    if dt == jnp.int32:
+        return jax.lax.bitcast_convert_type(flat, jnp.int32)
+    raise ValueError(f"unpackable tail dtype {dtype}")
+
+
+# ---------------------------------------------------------------------------
+# Cache <-> block payload conversion (pure functions)
+# ---------------------------------------------------------------------------
+
+
+def pack_blocks(layout: KVLayout, cache, *, batch_idx: int = 0,
+                n_blocks: Optional[int] = None) -> List[jnp.ndarray]:
+    """Slice one request out of a cache into block payloads (prefill side).
+
+    Returns ``n_blocks`` flat ``(block_words,)`` arrays in token-block order.
+    """
+    n_blocks = layout.blocks_per_request if n_blocks is None else n_blocks
+    T = layout.block_tokens
+    payloads = []
+    for b in range(n_blocks):
+        parts = []
+        for pl in layout.paged:
+            leaf = cache["blocks"][pl.unit_idx][pl.key]
+            sl = leaf[:, batch_idx, b * T:(b + 1) * T]      # (reps,T,nkv,hd)
+            if sl.shape[1] < T:                             # ragged last block
+                pad = T - sl.shape[1]
+                sl = jnp.pad(sl, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            parts.append(sl.reshape(-1))
+        if not parts:
+            parts = [jnp.zeros((layout.block_words,), layout.kv_dtype)]
+        payloads.append(jnp.concatenate(parts).astype(layout.kv_dtype))
+    return payloads
+
+
+def pack_tail(layout: KVLayout, cache, *, batch_idx: int = 0) -> jnp.ndarray:
+    """Pack the non-paged remainder of one request into a f32 vector."""
+    parts = []
+    for tl in layout.tail:
+        leaf = cache["blocks"][tl.unit_idx][tl.key]
+        parts.append(_pack_leaf_f32(leaf[:, batch_idx:batch_idx + 1]))
+    if not parts:
+        parts = [jnp.zeros((layout.tail_words,), jnp.float32)]
+    return jnp.concatenate(parts)
+
+
+def insert_blocks(layout: KVLayout, cache, slot: int,
+                  payloads: List[jnp.ndarray]):
+    """Scatter migrated block payloads into slot ``slot`` of a batched decode
+    cache (inverse of :func:`pack_blocks`).  Returns the new cache pytree."""
+    T = layout.block_tokens
+    cache = dict(cache)
+    blocks = [dict(e) for e in cache["blocks"]]     # only blocks are mutated
+    for b, payload in enumerate(payloads):
+        payload = jnp.asarray(payload).reshape(-1)
+        off = 0
+        t0 = b * T
+        for pl in layout.paged:
+            n = pl.words_per_token * T
+            sl = payload[off:off + n].reshape(pl.reps, T, pl.nkv, pl.hd)
+            off += n
+            width = min(T, pl.width - t0)
+            if width <= 0:
+                continue
+            leaf = blocks[pl.unit_idx][pl.key]
+            blocks[pl.unit_idx][pl.key] = leaf.at[
+                :, slot, t0:t0 + width].set(
+                    sl[:, :width].astype(leaf.dtype))
+    cache["blocks"] = blocks
+    return cache
+
+
+def insert_tail(layout: KVLayout, cache, slot: int, tail_vec):
+    """Scatter a migrated tail vector into slot ``slot`` (inverse of
+    :func:`pack_tail`)."""
+    tail_vec = jnp.asarray(tail_vec, jnp.float32).reshape(-1)
+    cache = dict(cache)
+    blocks = [dict(e) for e in cache["blocks"]]     # only blocks are mutated
+    off = 0
+    for tl in layout.tail:
+        sl = _unpack_leaf_f32(tail_vec[off:off + tl.words], tl.shape,
+                              tl.dtype)
+        off += tl.words
+        leaf = blocks[tl.unit_idx][tl.key]
+        blocks[tl.unit_idx][tl.key] = leaf.at[:, slot:slot + 1].set(
+            sl.astype(leaf.dtype))
+    cache["blocks"] = blocks
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# The pool: symmetric allocation + host-side block accounting
+# ---------------------------------------------------------------------------
+
+
+class KVPool:
+    """Ref-counted paged block pool over one symmetric heap allocation.
+
+    Every PE sees the identical layout, so ``block_ptr(i)`` is valid at the
+    prefill PE (staging writes), on the wire (one-sided puts), and at the
+    decode PE (admission reads).
+    """
+
+    def __init__(self, heap: SymmetricHeap, layout: KVLayout, *,
+                 num_blocks: int, max_slots: int):
+        self.layout = layout
+        self.num_blocks = num_blocks
+        self.max_slots = max_slots
+        self.data = heap.calloc((num_blocks * layout.block_words,),
+                                layout.kv_dtype)
+        self.tails = heap.calloc((max_slots * layout.tail_words,), "float32")
+        self.headers = heap.calloc((max_slots * HEADER_WORDS,), "int32")
+        self.signals = heap.calloc((max_slots,), "int32")
+        self._refcnt: List[int] = [0] * num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self.block_tables: Dict[int, List[int]] = {}
+
+    @classmethod
+    def create(cls, heap: SymmetricHeap, cfg, max_len: int, *,
+               num_blocks: int, max_slots: int,
+               block_tokens: int = 16) -> "KVPool":
+        layout = build_layout(cfg, max_len, block_tokens=block_tokens)
+        return cls(heap, layout, num_blocks=num_blocks, max_slots=max_slots)
+
+    # ---------------------------------------------------------- addressing
+    def block_ptr(self, block_id: int) -> SymPtr:
+        if not 0 <= block_id < self.num_blocks:
+            raise IndexError(block_id)
+        w = self.layout.block_words
+        return SymPtr(self.layout.kv_dtype,
+                      self.data.offset + block_id * w, (w,))
+
+    def _check_slot(self, slot: int) -> int:
+        if not 0 <= slot < self.max_slots:
+            raise IndexError(f"slot {slot} outside pool of {self.max_slots}")
+        return slot
+
+    def tail_ptr(self, slot: int) -> SymPtr:
+        w = self.layout.tail_words
+        return SymPtr("float32",
+                      self.tails.offset + self._check_slot(slot) * w, (w,))
+
+    def header_ptr(self, slot: int) -> SymPtr:
+        return SymPtr("int32",
+                      self.headers.offset
+                      + self._check_slot(slot) * HEADER_WORDS,
+                      (HEADER_WORDS,))
+
+    def sig_ptr(self, slot: int) -> SymPtr:
+        return SymPtr("int32", self.signals.offset + self._check_slot(slot),
+                      ())
+
+    # ---------------------------------------------------------- accounting
+    def alloc(self, req_id: int, n_blocks: int) -> Optional[List[int]]:
+        """Reserve ``n_blocks`` blocks for a request (refcount 1 each).
+        Returns the block ids in token-block order, or None when the pool
+        cannot satisfy the request (caller keeps it queued)."""
+        if req_id in self.block_tables:
+            raise ValueError(f"request {req_id} already has blocks")
+        if n_blocks > len(self._free):
+            return None
+        # pop from the tail of the LIFO free list; sort so contiguous ids
+        # (adjacent heap ranges) end up queue-adjacent for write combining
+        ids = sorted(self._free[-n_blocks:])
+        del self._free[-n_blocks:]
+        for i in ids:
+            self._refcnt[i] = 1
+        self.block_tables[req_id] = ids
+        return ids
+
+    def incref(self, block_ids: List[int]) -> None:
+        """Shared-prefix reuse: another request references the same blocks."""
+        for i in block_ids:
+            if self._refcnt[i] <= 0:
+                raise ValueError(f"incref on free block {i}")
+            self._refcnt[i] += 1
+
+    def release(self, req_id: int) -> int:
+        """Drop a request's references; blocks whose refcount hits zero go
+        back on the free list.  Returns the number of blocks freed."""
+        ids = self.block_tables.pop(req_id, [])
+        freed = 0
+        for i in ids:
+            self._refcnt[i] -= 1
+            if self._refcnt[i] == 0:
+                self._free.append(i)
+                freed += 1
+            elif self._refcnt[i] < 0:
+                raise ValueError(f"double free of block {i}")
+        return freed
+
+    def blocks_of(self, req_id: int) -> List[int]:
+        return list(self.block_tables[req_id])
+
+    # ------------------------------------------------------------- metrics
+    def stats(self, heap: Optional[SymmetricHeap] = None) -> dict:
+        used = self.num_blocks - len(self._free)
+        out = {
+            "blocks_total": self.num_blocks,
+            "blocks_in_use": used,
+            "blocks_free": len(self._free),
+            "block_bytes": self.layout.block_bytes,
+            "bytes_in_use": used * self.layout.block_bytes,
+            "utilization": used / self.num_blocks if self.num_blocks else 0.0,
+            "requests_resident": len(self.block_tables),
+        }
+        if heap is not None:
+            out["heap"] = heap.stats()
+        return out

@@ -1,0 +1,216 @@
+"""KV-cache migration engine: prefill PE -> decode PE over the SHMEM stack.
+
+The hand-off protocol for one finished prefill (DESIGN.md §8):
+
+1. **stage** — the prefill PE packs the request's cache into pool blocks and
+   writes them into *its own* row of the symmetric pool (local-tier stores;
+   on real hardware the prefill attention kernel writes the paged pool
+   directly, so staging is free).
+2. **migrate** — the request's blocks stream to the decode PE with
+   ``put_signal_nbi``: block ids are sorted so heap-contiguous runs become
+   queue-adjacent, every block in a run is a deferred nbi put, and the run's
+   last block carries a ``SIGNAL_ADD(run_len)`` flag update.  The completion
+   engine write-combines each run into ONE wire transfer, and the cutover
+   engine prices direct stores vs the copy engine on the *coalesced* size.
+   The tail (SSM states, ring positions, cross-KV) and the 4-word header
+   follow, each signal-bearing.  Cross-pod migrations (``dcn`` tier) route
+   through the :class:`~repro.core.proxy.HostProxy` ring at flush.
+3. **admit** — the decode PE polls ``signal_wait_until(sig, ">=", expected)``
+   where ``expected = n_blocks + 2`` (every data block + tail + header).
+   Queue order makes the signal the *last* update to land, so observing it
+   proves every block of the request is resident — no block is readable
+   before its signal, property-tested against the pending-queue oracle in
+   ``tests/test_disagg.py``.
+
+Completion stays deferred until a completion point: the scheduler overlaps
+migration under ongoing decode steps and only pays the flush when a slot is
+actually admitted (or at an explicit ``flush``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+
+from repro.core import cutover, rma, signal as signal_mod
+from repro.serve.kvpool import HEADER_WORDS, KVPool, pack_blocks, pack_tail
+
+#: signal increments beyond the data blocks: one for the tail, one for the
+#: header — the header's is the admission-visible "final block signal"
+EXTRA_SIGNALS = 2
+
+
+def expected_signal(n_blocks: int) -> int:
+    return n_blocks + EXTRA_SIGNALS
+
+
+@dataclasses.dataclass
+class MigrationReport:
+    """What one request's migration put on the wire."""
+    req_id: int
+    slot: int
+    src_pe: int
+    dst_pe: int
+    tier: str
+    n_blocks: int
+    n_runs: int                 # contiguous block runs (coalescing upper bound)
+    bytes_paged: int
+    bytes_tail: int
+    expected_signal: int
+
+    @property
+    def bytes_total(self) -> int:
+        return self.bytes_paged + self.bytes_tail + HEADER_WORDS * 4
+
+
+def _contiguous_runs(ids: List[int]) -> List[List[int]]:
+    runs: List[List[int]] = []
+    for i in sorted(ids):
+        if runs and i == runs[-1][-1] + 1:
+            runs[-1].append(i)
+        else:
+            runs.append([i])
+    return runs
+
+
+class KVMigrator:
+    """Streams paged KV blocks between PEs with signal-carried completion."""
+
+    def __init__(self, ctx, pool: KVPool, *, proxy=None,
+                 work_items: int = 128):
+        self.ctx = ctx
+        self.pool = pool
+        self.proxy = proxy          # HostProxy for dcn-tier flushes (optional)
+        self.work_items = work_items
+        self._staged_tails = {}     # req_id -> packed tail vector
+
+    # ------------------------------------------------------------- staging
+    def stage(self, heap, req_id: int, cache, *, prompt_len: int,
+              src_pe: int, batch_idx: int = 0):
+        """Allocate blocks for a finished prefill and write the packed
+        payloads into the prefill PE's own pool row.  Returns (heap, ids) or
+        (heap, None) when the pool is exhausted (request stays queued)."""
+        lay = self.pool.layout
+        n_blocks = lay.blocks_for_prompt(prompt_len)
+        ids = self.pool.alloc(req_id, n_blocks)
+        if ids is None:
+            return heap, None
+        payloads = pack_blocks(lay, cache, batch_idx=batch_idx,
+                               n_blocks=n_blocks)
+        for bid, payload in zip(ids, payloads):
+            heap = rma.put(self.ctx, heap, self.pool.block_ptr(bid), payload,
+                           src_pe, src_pe=src_pe,
+                           work_items=self.work_items)
+        self._staged_tails[req_id] = pack_tail(lay, cache,
+                                               batch_idx=batch_idx)
+        return heap, ids
+
+    # ----------------------------------------------------------- migration
+    def migrate(self, heap, req_id: int, *, src_pe: int, dst_pe: int,
+                slot: int, prompt_len: int, first_token: int,
+                ) -> tuple:
+        """Stream one staged request's blocks to ``dst_pe`` as deferred
+        ``put_signal_nbi`` traffic.  Nothing lands at the target until a
+        completion point; returns ``(heap, MigrationReport)``."""
+        lay = self.pool.layout
+        ids = self.pool.blocks_of(req_id)
+        tier = self.ctx.tier(src_pe, dst_pe)
+        sig = self.pool.sig_ptr(slot)
+        runs = _contiguous_runs(ids)
+        for run in runs:
+            for bid in run[:-1]:
+                ptr = self.pool.block_ptr(bid)
+                heap = rma.put_nbi(self.ctx, heap, ptr,
+                                   heap.read(ptr, src_pe), dst_pe,
+                                   src_pe=src_pe, work_items=self.work_items)
+                self._note_block(ptr.nbytes, tier)
+            last = self.pool.block_ptr(run[-1])
+            heap = signal_mod.put_signal_nbi(
+                self.ctx, heap, last, heap.read(last, src_pe), sig,
+                len(run), signal_mod.SIGNAL_ADD, dst_pe, src_pe=src_pe,
+                work_items=self.work_items)
+            self._note_block(last.nbytes, tier)
+        # tail (recurrent states / ring positions / cross-KV)
+        tail_vec = self._staged_tails.pop(req_id)
+        heap = signal_mod.put_signal_nbi(
+            self.ctx, heap, self.pool.tail_ptr(slot), tail_vec, sig,
+            1, signal_mod.SIGNAL_ADD, dst_pe, src_pe=src_pe,
+            work_items=self.work_items)
+        # header last: its signal increment is the admission threshold
+        hdr = jnp.asarray([req_id, prompt_len, first_token, len(ids)],
+                          jnp.int32)
+        heap = signal_mod.put_signal_nbi(
+            self.ctx, heap, self.pool.header_ptr(slot), hdr, sig,
+            1, signal_mod.SIGNAL_ADD, dst_pe, src_pe=src_pe,
+            work_items=self.work_items)
+        report = MigrationReport(
+            req_id=req_id, slot=slot, src_pe=src_pe, dst_pe=dst_pe,
+            tier=tier, n_blocks=len(ids), n_runs=len(runs),
+            bytes_paged=len(ids) * lay.block_bytes,
+            bytes_tail=lay.tail_words * 4,
+            expected_signal=expected_signal(len(ids)))
+        return heap, report
+
+    def _note_block(self, nbytes: int, tier: str) -> None:
+        """Per-block cutover telemetry: record the path (and standalone
+        price) the cutover engine would pick for this block size, so the
+        tuner sees block-granular samples alongside the coalesced
+        flush-time transfers.  These records are *advisory* — the bytes are
+        charged for real when the flush prices the coalesced transfer — so
+        consumers of the modeled comm clock must exclude the
+        ``kvxfer_block`` buckets (see ``DisaggScheduler._comm_clock``)."""
+        if tier == "dcn":
+            path = "proxy"
+        else:
+            path = cutover.choose_path(nbytes, work_items=self.work_items,
+                                       tier=tier, hw=self.ctx.hw,
+                                       tuning=self.ctx.tuning)
+        self.ctx.record("kvxfer_block", nbytes, path, tier, self.work_items)
+
+    # ---------------------------------------------------------- completion
+    def flush(self, heap):
+        """Explicit completion point (quiet); dcn-tier traffic drains through
+        the host proxy ring when one is attached."""
+        return rma.quiet(self.ctx, heap, proxy=self.proxy)
+
+    def pending_ops(self) -> int:
+        return len(self.ctx.pending)
+
+    # ----------------------------------------------------------- admission
+    def try_admit(self, heap, slot: int, dst_pe: int, expected: int):
+        """Signal-gated admission: returns ``(heap, header|None)``.  The
+        wait is the completion point — observing ``sig >= expected`` forces
+        the queue prefix the signal depends on, which includes every data
+        block of this request (data-before-flag)."""
+        if self.proxy is not None:
+            # cross-pod: complete ONLY the queue prefix this slot's signal
+            # depends on, through the host-proxy ring machinery — other
+            # requests' in-flight migrations stay deferred (their wire cost
+            # is not charged to this admission)
+            dep = self.ctx.pending.pending_for(self.pool.sig_ptr(slot),
+                                               dst_pe)
+            if dep is not None:
+                heap = self.ctx.pending.flush_prefix(self.ctx, heap, dep,
+                                                     proxy=self.proxy)
+        heap, _, ok = signal_mod.signal_wait_until(
+            self.ctx, heap, self.pool.sig_ptr(slot), dst_pe, "ge", expected)
+        if not bool(ok):
+            return heap, None
+        hdr = [int(v) for v in heap.read(self.pool.header_ptr(slot), dst_pe)]
+        return heap, {"req_id": hdr[0], "prompt_len": hdr[1],
+                      "first_token": hdr[2], "n_blocks": hdr[3]}
+
+    def gather(self, heap, req_id: int, slot: int, pe: int):
+        """Decode-side read of an admitted request's payloads from this PE's
+        own pool row: (block payloads in token order, tail vector)."""
+        ids = self.pool.blocks_of(req_id)
+        payloads = [heap.read(self.pool.block_ptr(i), pe) for i in ids]
+        tail = heap.read(self.pool.tail_ptr(slot), pe)
+        return payloads, tail
+
+    def reset_slot(self, heap, slot: int, pe: int):
+        """Re-arm a slot for its next request: zero the signal word (a local
+        store on the decode PE)."""
+        return rma.p(self.ctx, heap, self.pool.sig_ptr(slot), 0, pe,
+                     src_pe=pe)

@@ -1,0 +1,327 @@
+"""Disaggregated continuous-batching scheduler.
+
+Ties the serving subsystem together: a request queue feeding a fleet of
+prefill PEs, SHMEM paged-KV migration to decode PEs (``serve/kvxfer.py``),
+signal-gated admission into decode slots, slot rotation mid-flight, and
+eviction back to the block pool.
+
+Request state machine (DESIGN.md §8):
+
+    QUEUED --prefill+stage--> STAGED --migrate(nbi)--> MIGRATING
+        --signal observed--> DECODING --max_new/eos--> FINISHED
+                                 \\--evict: blocks freed, slot re-armed
+
+One ``step()`` advances every stage once — the order (prefill, admit,
+decode) means a migration issued this step stays *pending* (deferred nbi
+traffic) while decode keeps stepping resident requests: migration overlaps
+decode exactly the way the completion engine overlaps any nbi transfer, and
+the flush cost is only paid at the admission completion point.
+
+The scheduler is the control plane a real deployment runs host-side; the
+data plane (block payloads, signals, headers) moves exclusively through the
+symmetric heap via one-sided ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import kvpool as kvpool_mod
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.kvxfer import KVMigrator
+
+QUEUED, STAGED, MIGRATING, DECODING, FINISHED = (
+    "queued", "staged", "migrating", "decoding", "finished")
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    batch: dict                     # {"tokens": (1,S)} + frontend embeds
+    max_new: int
+    state: str = QUEUED
+    prefill_pe: int = -1
+    decode_pe: int = -1
+    slot: int = -1
+    first_token: int = -1
+    expected_sig: int = 0
+    out: List[int] = dataclasses.field(default_factory=list)
+    submit_step: int = -1
+    migrate_step: int = -1
+    admit_step: int = -1
+    # prefill result parked here while the request waits for pool blocks, so
+    # a stall never re-runs the model
+    prefill_cache: Optional[dict] = None
+    t_submit: float = 0.0           # modeled comm clock at prefill finish
+    t_admit: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.batch["tokens"].shape[1])
+
+
+@dataclasses.dataclass
+class SchedStats:
+    prefills: int = 0
+    migrations: int = 0
+    admissions: int = 0
+    evictions: int = 0
+    decode_steps: int = 0
+    decode_tokens: int = 0
+    bytes_migrated: int = 0
+    stalled_on_pool: int = 0        # prefills deferred because no free blocks
+    stalled_on_slots: int = 0       # migrations deferred because no free slot
+    ttfd_steps: List[int] = dataclasses.field(default_factory=list)
+    ttfd_model_s: List[float] = dataclasses.field(default_factory=list)
+
+
+class DisaggScheduler:
+    """Drives prefill PEs, the migration engine, and decode slot banks."""
+
+    def __init__(self, ctx, heap, engine: Engine, pool, migrator: KVMigrator,
+                 *, prefill_pes: List[int], decode_pes: List[int],
+                 num_slots: int, scfg: ServeConfig = ServeConfig(),
+                 prefills_per_step: Optional[int] = None,
+                 admit_delay_steps: int = 0):
+        if num_slots > pool.max_slots:
+            raise ValueError(
+                f"num_slots ({num_slots}) exceeds the pool's per-PE slot "
+                f"regions (max_slots={pool.max_slots})")
+        self.ctx = ctx
+        self.heap = heap
+        self.engine = engine
+        self.pool = pool
+        self.migrator = migrator
+        self.prefill_pes = list(prefill_pes)
+        self.decode_pes = list(decode_pes)
+        self.scfg = scfg
+        self.prefills_per_step = (len(self.prefill_pes)
+                                  if prefills_per_step is None
+                                  else prefills_per_step)
+        # modeled wire latency in scheduler steps: a migration issued at
+        # step N is only *polled* from step N + delay, so its nbi traffic
+        # stays deferred while decode keeps stepping — migration overlapped
+        # under decode
+        self.admit_delay_steps = admit_delay_steps
+        self.queue: deque = deque()
+        self.requests: Dict[int, Request] = {}
+        self.staged: deque = deque()            # blocks held, awaiting a slot
+        self.migrating: List[Request] = []
+        # per-decode-PE slot banks (each decode PE owns num_slots slots)
+        self.banks = {pe: engine.init_slots(num_slots) for pe in decode_pes}
+        self.slot_req: Dict[int, List[Optional[int]]] = {
+            pe: [None] * num_slots for pe in decode_pes}
+        self.stats = SchedStats()
+        self._rr_prefill = 0
+        self._rr_decode = 0
+        self._step = 0
+        self._next_rid = 0
+        self._key = jax.random.key(scfg.seed)
+
+    # ------------------------------------------------------------- intake
+    def submit(self, batch: dict, *, max_new: Optional[int] = None) -> int:
+        """Enqueue one request ({\"tokens\": (1,S)} [+ frontend embeds])."""
+        if max_new is None:
+            max_new = self.scfg.max_new_tokens
+        S = int(batch["tokens"].shape[1])
+        if S + max_new > self.engine.max_len + 1:
+            raise ValueError(
+                f"prompt ({S}) + max_new ({max_new}) exceeds the decode "
+                f"cache (max_len={self.engine.max_len})")
+        need = self.pool.layout.blocks_for_prompt(S)
+        if need > self.pool.num_blocks:
+            raise ValueError(
+                f"prompt needs {need} KV blocks but the pool holds only "
+                f"{self.pool.num_blocks} — no schedule can ever admit it")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, batch=batch, max_new=max_new)
+        req.submit_step = self._step
+        self.queue.append(req)
+        self.requests[rid] = req
+        return rid
+
+    def _comm_clock(self) -> float:
+        """Modeled comm seconds excluding the migrator's advisory per-block
+        records (those price each block standalone for the tuner; the real
+        wire cost lands at flush time and would otherwise double-count)."""
+        advisory = sum(
+            b.time_total for k, b in self.ctx.telemetry.buckets.items()
+            if k[0] == "kvxfer_block")
+        return self.ctx.total_time() - advisory
+
+    # -------------------------------------------------------------- phases
+    def _phase_prefill(self) -> None:
+        """Retry slot assignment for already-staged requests, then pop up to
+        prefills_per_step queued requests, prefill each on the next prefill
+        PE (round-robin), stage + issue the nbi migration."""
+        for _ in range(len(self.staged)):
+            self._try_migrate(self.staged.popleft())
+        for _ in range(self.prefills_per_step):
+            if not self.queue:
+                return
+            req = self.queue.popleft()
+            if req.prefill_cache is None:            # not prefilled yet
+                pe = self.prefill_pes[self._rr_prefill
+                                      % len(self.prefill_pes)]
+                self._rr_prefill += 1
+                req.prefill_pe = pe
+                key = jax.random.fold_in(self._key, req.rid)
+                tok, _, cache1 = self.engine.prefill_request(
+                    req.batch, key, self.scfg.temperature)
+                req.first_token = tok
+                req.prefill_cache = cache1
+                self.stats.prefills += 1
+            self.heap, ids = self.migrator.stage(
+                self.heap, req.rid, req.prefill_cache,
+                prompt_len=req.prompt_len, src_pe=req.prefill_pe)
+            if ids is None:                          # pool exhausted: park
+                self.stats.stalled_on_pool += 1      # the prefilled request
+                self.queue.appendleft(req)
+                return
+            req.prefill_cache = None                 # staged in the pool now
+            req.state = STAGED
+            req.t_submit = self._comm_clock()
+            self._try_migrate(req)
+
+    def _try_migrate(self, req: Request) -> None:
+        """Assign a (decode PE, slot) and stream the request's blocks."""
+        pe, slot = self._pick_slot()
+        if slot is None:
+            self.stats.stalled_on_slots += 1
+            self.staged.append(req)
+            return
+        req.decode_pe, req.slot = pe, slot
+        self.slot_req[pe][slot] = req.rid
+        self.heap, report = self.migrator.migrate(
+            self.heap, req.rid, src_pe=req.prefill_pe, dst_pe=pe,
+            slot=slot, prompt_len=req.prompt_len,
+            first_token=req.first_token)
+        req.expected_sig = report.expected_signal
+        req.state = MIGRATING
+        req.migrate_step = self._step
+        self.migrating.append(req)
+        self.stats.migrations += 1
+        self.stats.bytes_migrated += report.bytes_total
+
+    def _pick_slot(self):
+        """Next (decode_pe, slot) with no resident request, round-robin."""
+        n = len(self.decode_pes)
+        for k in range(n):
+            pe = self.decode_pes[(self._rr_decode + k) % n]
+            for s, owner in enumerate(self.slot_req[pe]):
+                if owner is None:
+                    self._rr_decode += k + 1
+                    return pe, s
+        return None, None
+
+    def _phase_admit(self) -> None:
+        """Signal-gated admission: a MIGRATING request enters its decode slot
+        only once ``signal_wait_until`` observes the final signal."""
+        still = []
+        for req in self.migrating:
+            if self._step < req.migrate_step + self.admit_delay_steps:
+                still.append(req)               # wire still "in flight"
+                continue
+            self.heap, hdr = self.migrator.try_admit(
+                self.heap, req.slot, req.decode_pe, req.expected_sig)
+            if hdr is None:
+                still.append(req)
+                continue
+            assert hdr["req_id"] == req.rid, "slot/header mismatch"
+            payloads, tail = self.migrator.gather(
+                self.heap, req.rid, req.slot, req.decode_pe)
+            bank = self.banks[req.decode_pe]
+            lay = self.pool.layout
+            cache = kvpool_mod.insert_blocks(lay, bank.cache, req.slot,
+                                             payloads)
+            cache = kvpool_mod.insert_tail(lay, cache, req.slot, tail)
+            bank = dataclasses.replace(bank, cache=cache)
+            bank = self.engine.activate_slot(
+                bank, req.slot, pos=hdr["prompt_len"],
+                token=hdr["first_token"])
+            self.banks[req.decode_pe] = bank
+            req.state = DECODING
+            req.out.append(hdr["first_token"])
+            req.admit_step = self._step
+            req.t_admit = self._comm_clock()
+            self.stats.admissions += 1
+            self.stats.ttfd_steps.append(req.admit_step - req.submit_step)
+            self.stats.ttfd_model_s.append(req.t_admit - req.t_submit)
+            self._maybe_finish(req)
+        self.migrating = still
+
+    def _phase_decode(self) -> None:
+        """One decode step over every decode PE that has an active slot
+        (the PEs step in parallel on real hardware: one decode iteration)."""
+        self._step_key = jax.random.fold_in(self._key, 10_000 + self._step)
+        stepped = False
+        for pe in self.decode_pes:
+            bank = self.banks[pe]
+            if not bank.active.any():
+                continue
+            # per-PE fold: decode PEs must not share sampling noise
+            bank, toks = self.engine.decode_slots(
+                bank, jax.random.fold_in(self._step_key, pe),
+                self.scfg.temperature)
+            self.banks[pe] = bank
+            stepped = True
+            for s, rid in enumerate(self.slot_req[pe]):
+                if rid is None:
+                    continue
+                req = self.requests[rid]
+                if req.state != DECODING:
+                    continue
+                req.out.append(int(toks[s]))
+                self.stats.decode_tokens += 1
+                self._maybe_finish(req)
+        if stepped:
+            self.stats.decode_steps += 1
+
+    def _maybe_finish(self, req: Request) -> None:
+        eos_hit = (self.scfg.eos_id >= 0
+                   and req.out and req.out[-1] == self.scfg.eos_id)
+        if len(req.out) >= req.max_new or eos_hit:
+            # same output contract as Engine.generate: eos is emitted, the
+            # remainder zero-pads to max_new (bitwise-comparable rows)
+            req.out = (req.out[:req.max_new]
+                       + [0] * (req.max_new - len(req.out)))
+            req.state = FINISHED
+            self._evict(req)
+
+    def _evict(self, req: Request) -> None:
+        """Return the request's blocks to the pool and re-arm its slot."""
+        self.pool.release(req.rid)
+        self.heap = self.migrator.reset_slot(self.heap, req.slot,
+                                             req.decode_pe)
+        bank = self.banks[req.decode_pe]
+        self.banks[req.decode_pe] = self.engine.evict_slot(bank, req.slot)
+        self.slot_req[req.decode_pe][req.slot] = None
+        self.stats.evictions += 1
+
+    # --------------------------------------------------------------- drive
+    def step(self) -> None:
+        """Advance every pipeline stage once (see module docstring)."""
+        self._phase_prefill()
+        self._phase_admit()
+        self._phase_decode()
+        self._step += 1
+
+    def done(self) -> bool:
+        return (not self.queue and not self.staged and not self.migrating
+                and all(r.state == FINISHED for r in self.requests.values()))
+
+    def run(self, *, max_steps: int = 10_000) -> Dict[int, np.ndarray]:
+        """Drive until every submitted request finishes; returns
+        {rid: generated token ids}."""
+        while not self.done():
+            if self._step >= max_steps:
+                raise RuntimeError(f"scheduler wedged after {max_steps} steps")
+            self.step()
+        return {rid: np.asarray(r.out, np.int32)
+                for rid, r in self.requests.items()}

@@ -33,6 +33,68 @@ def test_free_reuse():
     assert b.offset == a.offset                # first-fit reuse
 
 
+def test_calloc_zeroes_reused_region():
+    """free -> write -> calloc regression: a recycled free-list block must
+    not leak the freed buffer's bytes through calloc."""
+    h = heap_mod.create(npes=2)
+    a = h.malloc((256,), "float32")
+    h = h.write(a, 1, jnp.full(256, 7.0))      # dirty the region at PE 1
+    h.free(a)
+    b = h.calloc((256,), "float32")
+    assert b.offset == a.offset                # reuse really happened
+    np.testing.assert_array_equal(np.asarray(h.read(b, 1)), 0.0)
+    np.testing.assert_array_equal(np.asarray(h.read(b, 0)), 0.0)
+
+
+def test_malloc_reuse_is_dirty_but_calloc_is_not():
+    # documents the malloc contract the calloc fix is defined against
+    h = heap_mod.create(npes=1)
+    a = h.malloc((128,), "float32")
+    h = h.write(a, 0, jnp.ones(128))
+    h.free(a)
+    c = h.malloc((128,), "float32")
+    assert float(h.read(c, 0)[0]) == 1.0       # malloc: undefined (dirty)
+
+
+def test_free_coalesces_adjacent_extents():
+    h = heap_mod.create(npes=1)
+    ptrs = [h.malloc((128,), "float32") for _ in range(4)]
+    keep = h.malloc((128,), "float32")         # guard after the freed run
+    for p in (ptrs[0], ptrs[2], ptrs[1], ptrs[3]):   # out-of-order frees
+        h.free(p)
+    assert h._free["float32"] == [(ptrs[0].offset, 4 * 128)]
+    # the coalesced extent satisfies an allocation bigger than any one piece
+    big = h.malloc((512,), "float32")
+    assert big.offset == ptrs[0].offset
+    assert keep.offset >= 4 * 128
+
+
+def test_heap_stats_accounting():
+    h = heap_mod.create(npes=2)
+    a = h.malloc((256,), "float32")
+    b = h.malloc((128,), "int32")
+    s = h.stats()
+    assert s["bytes_in_use"] == 256 * 4 + 128 * 4
+    assert s["bytes_free"] == 0
+    assert s["pools"]["float32"]["fragmentation"] == 0.0
+    h.free(a)
+    s = h.stats()
+    assert s["pools"]["float32"]["bytes_free"] == 256 * 4
+    assert s["pools"]["float32"]["bytes_in_use"] == 0
+    assert s["pools"]["int32"]["bytes_in_use"] == 128 * 4
+    assert s["pools"]["float32"]["free_extents"] == 1
+    # two non-adjacent free extents -> nonzero fragmentation
+    h2 = heap_mod.create(npes=1)
+    x = h2.malloc((128,), "float32")
+    y = h2.malloc((128,), "float32")
+    z = h2.malloc((128,), "float32")
+    h2.free(x)
+    h2.free(z)                                  # x and z are not adjacent
+    st = h2.stats()["pools"]["float32"]
+    assert st["free_extents"] == 2
+    assert st["fragmentation"] == 0.5
+
+
 def test_pool_growth():
     h = heap_mod.create(npes=2, words_per_pool=256)
     ptrs = [h.malloc((128,), "float32") for _ in range(8)]

@@ -1,0 +1,188 @@
+"""Paged KV pool: layout, block accounting, and lossless pack/unpack."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cfgbase
+from repro.core import heap as heap_mod
+from repro.models import kvcache, model
+from repro.serve import kvpool
+
+
+def _cfg(arch="qwen3_4b"):
+    return cfgbase.reduced(cfgbase.get_config(arch))
+
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+
+
+def test_layout_classifies_leaves():
+    lay = kvpool.build_layout(_cfg(), 24, block_tokens=8)
+    assert lay.blocks_per_request == 3
+    assert {p.key for p in lay.paged} == {"k", "v"}
+    assert lay.block_words == sum(p.words_per_token for p in lay.paged) * 8
+    # hybrid: mamba/shared-attn states land in the tail
+    lay_h = kvpool.build_layout(_cfg("zamba2_2_7b"), 24, block_tokens=8)
+    assert lay_h.tail_words > 1
+    assert any(t.key == "state" for t in lay_h.tail)
+    # pure-SSM arch: no paged leaves, everything is tail
+    lay_s = kvpool.build_layout(_cfg("xlstm_125m"), 24)
+    assert not lay_s.paged and lay_s.tail_words > 1
+
+
+def test_blocks_for_prompt_dense_prefix():
+    lay = kvpool.build_layout(_cfg(), 32, block_tokens=8)
+    assert lay.blocks_for_prompt(1) == 1
+    assert lay.blocks_for_prompt(8) == 1
+    assert lay.blocks_for_prompt(9) == 2
+    assert lay.blocks_for_prompt(32) == 4
+    assert lay.blocks_for_prompt(100) == 4     # clamped to cache width
+
+
+# ---------------------------------------------------------------------------
+# block accounting
+# ---------------------------------------------------------------------------
+
+
+def _pool(num_blocks=8, max_slots=2):
+    h = heap_mod.create(npes=2)
+    return h, kvpool.KVPool.create(h, _cfg(), 16, num_blocks=num_blocks,
+                                   max_slots=max_slots, block_tokens=8)
+
+
+def test_alloc_release_refcount():
+    h, pool = _pool()
+    a = pool.alloc(1, 3)
+    assert a is not None and len(a) == 3
+    assert pool.stats()["blocks_in_use"] == 3
+    b = pool.alloc(2, 5)
+    assert b is not None and not set(a) & set(b)
+    assert pool.alloc(3, 1) is None            # exhausted -> caller queues
+    pool.incref(a)                             # shared-prefix second reader
+    pool.block_tables[3] = list(a)
+    assert pool.release(1) == 0                # still referenced
+    assert pool.stats()["blocks_in_use"] == 8
+    assert pool.release(3) == 3                # last ref frees
+    assert pool.release(2) == 5
+    assert pool.stats()["blocks_free"] == 8
+
+
+def test_double_alloc_and_bad_incref_raise():
+    h, pool = _pool()
+    pool.alloc(1, 2)
+    with pytest.raises(ValueError):
+        pool.alloc(1, 1)
+    pool.release(1)
+    with pytest.raises(ValueError):
+        pool.incref([0])                       # block 0 is free again
+
+
+def test_alloc_prefers_contiguous_ids():
+    """Fresh pool hands out sorted contiguous ids — adjacent heap ranges, so
+    the migration's nbi puts write-combine into one transfer."""
+    h, pool = _pool()
+    ids = pool.alloc(1, 4)
+    assert ids == sorted(ids)
+    assert all(b - a == 1 for a, b in zip(ids, ids[1:]))
+    p0, p1 = pool.block_ptr(ids[0]), pool.block_ptr(ids[1])
+    assert p1.offset == p0.offset + pool.layout.block_words
+
+
+def test_block_ptr_bounds_and_symmetry():
+    h, pool = _pool()
+    with pytest.raises(IndexError):
+        pool.block_ptr(pool.num_blocks)
+    ptr = pool.block_ptr(0)
+    h2 = h.write(ptr, 1, jnp.ones(pool.layout.block_words))
+    assert float(h2.read(ptr, 1)[0]) == 1.0
+    assert float(h2.read(ptr, 0)[0]) == 0.0    # other PE's row untouched
+
+
+def test_pool_stats_report_heap():
+    h, pool = _pool()
+    s = pool.stats(h)
+    assert s["heap"]["bytes_in_use"] > 0
+    assert "fragmentation" in s["heap"]["pools"][pool.layout.kv_dtype]
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack round trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen3_4b", "zamba2_2_7b",
+                                  "whisper_medium", "xlstm_125m"])
+def test_pack_insert_roundtrip_bitwise(arch):
+    """pack_blocks/pack_tail -> insert_blocks/insert_tail reproduces the
+    prefilled request slice bit-for-bit in another slot of a bigger cache
+    (the lossless-migration property every disagg guarantee rests on)."""
+    cfg = _cfg(arch)
+    W = 24
+    lay = kvpool.build_layout(cfg, W, block_tokens=8)
+    params = model.init_params(jax.random.key(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (1, 10), 0,
+                                          cfg.vocab_size)}
+    if cfg.family == "audio":
+        batch["audio_embeds"] = 0.1 * jax.random.normal(
+            jax.random.key(2), (1, cfg.encoder_seq, cfg.d_model))
+    c1 = kvcache.init_cache(cfg, 1, W)
+    _, c1 = model.prefill(params, cfg, batch, c1)
+    payloads = kvpool.pack_blocks(lay, c1)
+    tail = kvpool.pack_tail(lay, c1)
+    cB = kvcache.init_cache(cfg, 4, W)
+    cB = kvpool.insert_blocks(lay, cB, 2, payloads)
+    cB = kvpool.insert_tail(lay, cB, 2, tail)
+    for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(cB)):
+        np.testing.assert_array_equal(np.asarray(a[:, 0]),
+                                      np.asarray(b[:, 2]))
+
+
+def test_partial_block_migration_prefix():
+    """Dense cache: only blocks_for_prompt(S) blocks carry data; inserting
+    just the prefix reproduces positions [0, S) exactly."""
+    cfg = _cfg()
+    W, S = 32, 9
+    lay = kvpool.build_layout(cfg, W, block_tokens=8)
+    need = lay.blocks_for_prompt(S)
+    assert need == 2
+    params = model.init_params(jax.random.key(0), cfg)
+    c1 = kvcache.init_cache(cfg, 1, W)
+    _, c1 = model.prefill(params, cfg, {"tokens": jax.random.randint(
+        jax.random.key(1), (1, S), 0, cfg.vocab_size)}, c1)
+    payloads = kvpool.pack_blocks(lay, c1, n_blocks=need)
+    cB = kvcache.init_cache(cfg, 2, W)
+    cB = kvpool.insert_blocks(lay, cB, 1, payloads)
+    for pl in lay.paged:
+        src = np.asarray(c1["blocks"][pl.unit_idx][pl.key][:, 0, :S])
+        dst = np.asarray(cB["blocks"][pl.unit_idx][pl.key][:, 1, :S])
+        np.testing.assert_array_equal(src, dst)
+
+
+def test_tail_pack_lossless_int32_bitcast():
+    """int32 values (ring kpos) survive the f32 tail round trip bit-exactly,
+    including values a float cast would corrupt."""
+    vals = jnp.asarray([[-1, 0, 1, (1 << 24) + 1, 2**31 - 1, -(2**31)]],
+                       jnp.int32)
+    packed = kvpool._pack_leaf_f32(vals)
+    back = kvpool._unpack_leaf_f32(packed, vals.shape, "int32")
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(back))
+
+
+def test_calloc_backed_pool_is_clean_after_heap_churn():
+    """Pool regions come from calloc: even on a heap whose free list holds a
+    dirty recycled extent, a new pool reads zero everywhere."""
+    h = heap_mod.create(npes=2)
+    junk = h.malloc((4096,), "float32")
+    h = h.write(junk, 1, jnp.full(4096, 3.0))
+    h.free(junk)
+    pool = kvpool.KVPool.create(h, _cfg(), 16, num_blocks=4, max_slots=1,
+                                block_tokens=8)
+    # the small tail region is the one that first-fits into the dirty extent
+    assert pool.tails.offset == junk.offset
+    np.testing.assert_array_equal(
+        np.asarray(h.read(pool.tail_ptr(0), 1)), 0.0)
+    np.testing.assert_array_equal(
+        np.asarray(h.read(pool.block_ptr(0), 1)), 0.0)

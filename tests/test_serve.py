@@ -68,6 +68,58 @@ def test_cache_too_small_raises():
         eng.generate(batch, ServeConfig(max_new_tokens=5))
 
 
+def test_slot_rotation_mid_flight():
+    """Slot API: a request admitted into a slot AFTER other requests have
+    been decoding (and one evicted) produces the same tokens as its own
+    lockstep generate — rotation does not perturb resident numerics."""
+    import numpy as np
+    from repro.models import kvcache
+    cfg, params, eng = _engine("qwen3_4b", max_len=30)
+    S, NEW = 10, 5
+    prompts = [jax.random.randint(jax.random.fold_in(jax.random.key(6), i),
+                                  (1, S), 0, cfg.vocab_size)
+               for i in range(3)]
+    base = [eng.generate({"tokens": p}, ServeConfig(max_new_tokens=NEW))
+            for p in prompts]
+
+    slots = eng.init_slots(2)
+    outs = {0: [], 1: [], 2: []}
+
+    def admit(slots, slot, rid):
+        tok, _, c1 = eng.prefill_request({"tokens": prompts[rid]},
+                                         jax.random.key(0))
+        # direct cache hand-off (local prefill->decode, no migration)
+        from repro.serve import kvpool
+        lay = kvpool.build_layout(cfg, eng.max_len)
+        cache = kvpool.insert_blocks(lay, slots.cache, slot,
+                                     kvpool.pack_blocks(lay, c1))
+        cache = kvpool.insert_tail(lay, cache, slot,
+                                   kvpool.pack_tail(lay, c1))
+        import dataclasses as dc
+        slots = dc.replace(slots, cache=cache)
+        outs[rid].append(tok)
+        return eng.activate_slot(slots, slot, pos=S, token=tok)
+
+    slots = admit(slots, 0, 0)
+    slots = admit(slots, 1, 1)
+    resident = {0: 0, 1: 1}
+    for step in range(20):
+        if not slots.active.any():
+            break
+        slots, toks = eng.decode_slots(slots, jax.random.key(step))
+        for s, rid in list(resident.items()):
+            outs[rid].append(int(toks[s]))
+            if len(outs[rid]) >= NEW:
+                slots = eng.evict_slot(slots, s)
+                del resident[s]
+                if rid == 0:                   # rotate request 2 in mid-flight
+                    slots = admit(slots, s, 2)
+                    resident[s] = 2
+    for rid in range(3):
+        np.testing.assert_array_equal(np.asarray(base[rid][0]),
+                                      np.asarray(outs[rid][:NEW]))
+
+
 def test_hybrid_and_encdec_serve():
     for arch in ("zamba2_2_7b", "whisper_medium"):
         cfg, params, eng = _engine(arch)

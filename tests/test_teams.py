@@ -40,3 +40,51 @@ def test_translate_bounds():
     t = teams.Team(0, 1, 4)
     with pytest.raises(ValueError):
         t.translate(4)
+
+
+def test_split_strided_bounds():
+    t = teams.world(8)
+    with pytest.raises(ValueError):
+        t.split_strided(-1, 1, 4)              # negative start
+    with pytest.raises(ValueError):
+        t.split_strided(0, 0, 4)               # zero stride
+    with pytest.raises(ValueError):
+        t.split_strided(0, 1, 0)               # empty child
+    with pytest.raises(ValueError):
+        t.split_strided(7, 1, 2)               # last rank off the end
+    # exactly-fitting child is legal
+    assert t.split_strided(4, 1, 4).pes() == [4, 5, 6, 7]
+    assert t.split_strided(7, 1, 1).pes() == [7]
+
+
+def test_rank_of_non_members():
+    t = teams.Team(2, 3, 3)                    # PEs 2, 5, 8
+    assert [t.rank_of(p) for p in t.pes()] == [0, 1, 2]
+    assert t.rank_of(1) == -1                  # below start
+    assert t.rank_of(-4) == -1                 # negative, stride-aligned
+    assert t.rank_of(3) == -1                  # off-stride
+    assert t.rank_of(11) == -1                 # stride-aligned but past end
+    assert t.rank_of(100) == -1
+
+
+def test_disagg_partition_world():
+    pre, dec = teams.disagg_partition(teams.world(8), 3)
+    assert pre.pes() == [0, 1, 2]
+    assert dec.pes() == [3, 4, 5, 6, 7]
+    # partitions tile the parent with no overlap
+    assert sorted(pre.pes() + dec.pes()) == list(range(8))
+    assert all(dec.rank_of(p) == -1 for p in pre.pes())
+    for bad in (0, 8, -1):
+        with pytest.raises(ValueError):
+            teams.disagg_partition(teams.world(8), bad)
+
+
+def test_disagg_partition_on_shared_pod():
+    """The serve launcher's intra-pod split: TEAM_SHARED of pod 1, first half
+    prefill, second half decode — world PE numbering must be preserved."""
+    pod = teams.shared(16, node_size=8, node_id=1)     # PEs 8..15
+    pre, dec = teams.disagg_partition(pod, 4)
+    assert pre.pes() == [8, 9, 10, 11]
+    assert dec.pes() == [12, 13, 14, 15]
+    assert pre.translate(0) == 8 and dec.translate(0) == 12
+    assert pre.rank_of(12) == -1 and dec.rank_of(11) == -1
