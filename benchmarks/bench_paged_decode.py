@@ -1,0 +1,184 @@
+"""Paged decode + chunked prefill streaming + shared prefixes (DESIGN.md §9).
+
+Three experiments on the end-to-end serving path, all driven through the
+real scheduler/migrator/pool machine (no synthetic byte-shuffling):
+
+1. **TTFD** — the identical request workload served twice: whole-prefill
+   migration (everything on the wire after prefill finishes) vs chunked
+   streaming (`--stream-chunks` installments drain under later chunks'
+   prefill compute).  The reported number is the modeled comm window
+   between prefill-finish and admission (``stats.ttfd_model_s``) — the
+   part of time-to-first-decode-token the migration protocol owns.
+   Streaming must strictly shrink it (CI-gated).
+2. **paged vs dense admission** — with paged decode the pool row IS the
+   decode cache, so admission moves only the tail; the dense fallback
+   rehydrates every payload byte into the slot bank.  Reported as modeled
+   rehydrate time per admission (HBM-bound local copy) plus the end-to-end
+   wall clock of both modes for reference.
+3. **shared-prefix savings** — many-samples-one-prompt workload on one
+   decode PE: physical blocks mapped instead of re-staged, wire bytes
+   skipped for resident blocks, and the copy-on-write count that keeps the
+   shared payloads pristine.
+
+``smoke(json_path)`` is the CI entry point (BENCH_paged.json):
+scripts/ci.sh asserts TTFD(streaming) < TTFD(whole-prefill) and that
+prefix sharing actually shared blocks.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import base as cfgbase
+from repro.core import context, cutover
+from repro.models import model
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.kvpool import KVPool
+from repro.serve.kvxfer import KVMigrator
+from repro.serve.scheduler import DisaggScheduler
+
+ARCH = "qwen3_4b"
+PROMPT = 16
+NEW = 6
+N_REQ = 6
+BLOCK_TOKENS = 4
+MAXLEN = PROMPT + NEW
+
+
+def _workload(*, stream_chunks=0, shared_prefix=False, paged=True,
+              decode_pes=(2, 3), num_slots=2, same_prompt=False,
+              admit_delay=1, n_req=N_REQ, S=PROMPT):
+    cfg = cfgbase.reduced(cfgbase.get_config(ARCH))
+    params = model.init_params(jax.random.key(0), cfg)
+    ctx, heap = context.init(npes=4, node_size=4)
+    eng = Engine(cfg, params, max_len=MAXLEN)
+    pool = KVPool.create(heap, cfg, MAXLEN, num_blocks=48,
+                         max_slots=max(num_slots, 3),
+                         block_tokens=BLOCK_TOKENS)
+    mig = KVMigrator(ctx, pool)
+    sched = DisaggScheduler(
+        ctx, heap, eng, pool, mig, prefill_pes=[0, 1],
+        decode_pes=list(decode_pes), num_slots=num_slots,
+        scfg=ServeConfig(max_new_tokens=NEW), admit_delay_steps=admit_delay,
+        paged=paged, stream_chunks=stream_chunks,
+        shared_prefix=shared_prefix)
+    base = jax.random.randint(jax.random.key(1), (1, S), 0, cfg.vocab_size)
+    for i in range(n_req):
+        p = base if same_prompt else jax.random.randint(
+            jax.random.fold_in(jax.random.key(1), i), (1, S), 0,
+            cfg.vocab_size)
+        sched.submit({"tokens": p}, prefix_len=S if shared_prefix else 0)
+    t0 = time.perf_counter()
+    sched.run()
+    wall = time.perf_counter() - t0
+    return sched, ctx, pool, wall
+
+
+def _mean(xs):
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+def _ttfd_pair(chunk: int = 1):
+    """(whole_s, streaming_s, chunks): the same workload served both ways.
+
+    Streaming needs slot headroom to win: a stream holds its decode slot
+    while its chunks drain under prefill, so with one slot per PE the slot
+    is the bottleneck and whole-prefill's instant hand-off ties or wins
+    (measured 0.9-1.1x).  With two slots per PE the drained-early chunks
+    dominate and the window shrinks ~1.3x — that operating point is what
+    the CI gate pins."""
+    s_whole, *_ = _workload(stream_chunks=0, num_slots=2, n_req=4)
+    s_stream, *_ = _workload(stream_chunks=chunk, num_slots=2, n_req=4)
+    return (_mean(s_whole.stats.ttfd_model_s),
+            _mean(s_stream.stats.ttfd_model_s),
+            s_stream.stats.stream_chunks)
+
+
+def _rehydrate_model(pool, hw=None) -> tuple:
+    """(seconds, bytes) of the dense rehydrate per admission: every payload
+    byte of a full-prompt request plus the tail, copied HBM->HBM into the
+    slot bank (the copy the paged path deletes)."""
+    hw = hw or cutover.HwParams()
+    lay = pool.layout
+    nbytes = (lay.blocks_for_prompt(PROMPT) * lay.block_bytes
+              + lay.tail_words * 4)
+    return hw.alpha_direct + nbytes / hw.hbm_bw, nbytes
+
+
+def run():
+    whole, stream, chunks = _ttfd_pair()
+    emit("paged_ttfd", "mode=whole-prefill", whole * 1e6)
+    emit("paged_ttfd", f"mode=streaming,chunks={chunks}", stream * 1e6,
+         improvement=f"{whole / stream:.2f}" if stream else "inf")
+
+    s_paged, _, pool, wall_p = _workload(paged=True)
+    s_dense, _, _, wall_d = _workload(paged=False)
+    t_reh, nbytes = _rehydrate_model(pool)
+    emit("paged_admission", "mode=paged", 0.0,
+         rehydrate_bytes=0, wall_ms=f"{wall_p * 1e3:.1f}")
+    emit("paged_admission", "mode=dense-rehydrate", t_reh * 1e6,
+         rehydrate_bytes=nbytes, wall_ms=f"{wall_d * 1e3:.1f}")
+
+    s_shared, _, _, _ = _workload(shared_prefix=True, same_prompt=True,
+                                  decode_pes=(2,), num_slots=3, S=14)
+    st = s_shared.stats
+    emit("paged_prefix", f"requests={N_REQ}", 0.0,
+         hits=st.prefix_hits, blocks_shared=st.blocks_prefix_shared,
+         wire_saved=st.bytes_wire_saved, cow=st.cow_copies)
+
+
+def smoke(json_path: str = "BENCH_paged.json") -> dict:
+    """CI smoke: TTFD pair + prefix savings -> JSON artifact."""
+    whole, stream, chunks = _ttfd_pair()
+    # 14 % 4 != 0: the whole-prompt prefix shares a partial boundary block,
+    # so the first divergent decode write exercises copy-on-write
+    s_shared, _, pool, _ = _workload(shared_prefix=True, same_prompt=True,
+                                     decode_pes=(2,), num_slots=3, S=14)
+    st = s_shared.stats
+    t_reh, nbytes = _rehydrate_model(pool)
+    doc = {
+        "bench": "paged_decode_smoke",
+        "arch": cfgbase.reduced(cfgbase.get_config(ARCH)).name,
+        "ttfd": {
+            "whole_prefill_s": whole,
+            "streaming_s": stream,
+            "stream_chunks": chunks,
+            "improvement": whole / stream if stream else float("inf"),
+        },
+        "paged_decode": {
+            "rehydrate_bytes_per_admission_dense": nbytes,
+            "rehydrate_s_per_admission_dense": t_reh,
+            "rehydrate_bytes_per_admission_paged": 0,
+        },
+        "shared_prefix": {
+            "requests": N_REQ,
+            "prefix_hits": st.prefix_hits,
+            "blocks_shared": st.blocks_prefix_shared,
+            "bytes_wire_saved": st.bytes_wire_saved,
+            "cow_copies": st.cow_copies,
+        },
+    }
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("paged_smoke", json_path, stream * 1e6,
+         ttfd_improvement=f"{doc['ttfd']['improvement']:.2f}",
+         blocks_shared=st.blocks_prefix_shared)
+    return doc
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", nargs="?", const="BENCH_paged.json",
+                    default=None, metavar="PATH",
+                    help="CI smoke: TTFD streaming-vs-whole + prefix "
+                         "savings -> JSON artifact")
+    cli = ap.parse_args()
+    if cli.smoke is not None:
+        smoke(cli.smoke)
+    else:
+        run()

@@ -28,22 +28,28 @@ def main() -> None:
 
     if args.json is not None:
         import os
-        from benchmarks import bench_cutover, bench_kvxfer
+        from benchmarks import bench_cutover, bench_kvxfer, bench_paged_decode
         print("bench,config,us_per_call,derived")
         doc = bench_cutover.profile(args.json)
         print(f"# wrote {args.json}: {doc['samples']} samples, "
               f"agreement={doc['agreement_vs_analytic']:.3f}")
-        kv_path = os.path.join(os.path.dirname(args.json) or ".",
-                               "BENCH_kvxfer.json")
+        out_dir = os.path.dirname(args.json) or "."
+        kv_path = os.path.join(out_dir, "BENCH_kvxfer.json")
         kv = bench_kvxfer.smoke(kv_path)
         print(f"# wrote {kv_path}: overlap "
               f"{kv['overlap']['overlap_ratio']:.2f}x, coalescing "
               f"{kv['migration']['coalescing_ratio']:.1f}")
+        pg_path = os.path.join(out_dir, "BENCH_paged.json")
+        pg = bench_paged_decode.smoke(pg_path)
+        print(f"# wrote {pg_path}: streaming TTFD "
+              f"{pg['ttfd']['improvement']:.2f}x, "
+              f"{pg['shared_prefix']['blocks_shared']} blocks shared")
         return
 
     from benchmarks import (bench_broadcast, bench_cutover, bench_fcollect,
                             bench_kernels, bench_kvxfer, bench_overlap,
-                            bench_ring, bench_rma, bench_workgroup, common)
+                            bench_paged_decode, bench_ring, bench_rma,
+                            bench_workgroup, common)
     suites = [
         ("fig3_rma", bench_rma.run),
         ("fig4_workgroup", bench_workgroup.run),
@@ -54,6 +60,7 @@ def main() -> None:
         ("kernels", bench_kernels.run),
         ("overlap", bench_overlap.run),
         ("kvxfer", bench_kvxfer.run),
+        ("paged_decode", bench_paged_decode.run),
     ]
     only = args.only.split(",") if args.only else None
     print("bench,config,us_per_call,derived")

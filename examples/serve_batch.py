@@ -1,11 +1,15 @@
-"""End-to-end serving driver, in two acts:
+"""End-to-end serving driver, in three acts:
 
 1. lockstep batched generation across architecture families (the original
-   demo — prefill + decode with KV/recurrent caches), and
+   demo — prefill + decode with KV/recurrent caches),
 2. **continuous batching** on the slot engine: more requests than decode
    slots, requests admitted mid-flight as earlier ones finish and are
-   evicted — the serving pattern the disaggregated scheduler
-   (`repro.serve.scheduler`) runs across PE fleets.
+   evicted — decode reads K/V straight from the symmetric-heap block pool
+   (paged attention), and
+3. **streaming admission**: chunked prefill puts each filled block run on
+   the wire mid-prefill with a monotonically ramping signal, so admission
+   waits only for the final installment — plus shared-prefix block reuse
+   across many samples of one prompt (copy-on-write on divergence).
 
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
@@ -71,3 +75,29 @@ print(f"[serve] continuous batching: {len(outs)} reqs through "
       f"ttfd {sum(st.ttfd_steps) / len(st.ttfd_steps):.1f} steps")
 for rid in sorted(outs)[:3]:
     print(f"[serve]   req {rid}: {outs[rid].tolist()}")
+
+# --- act 3: streaming admission + shared prefixes ---------------------------
+# 6 samples of ONE prompt: prefix blocks are mapped, not restaged (one wire
+# copy per decode PE), prefill streams 1 block per step mid-prefill, and the
+# first divergent decode write copy-on-writes the shared boundary block.
+ctx, heap = context.init(npes=NPES, node_size=NPES)
+pool = KVPool.create(heap, cfg, S + NEW, num_blocks=24, max_slots=2,
+                     block_tokens=4)
+sched = DisaggScheduler(
+    ctx, heap, eng, pool, KVMigrator(ctx, pool),
+    prefill_pes=pre.pes(), decode_pes=dec.pes(), num_slots=2,
+    scfg=ServeConfig(max_new_tokens=NEW, temperature=0.8, seed=4),
+    admit_delay_steps=1, stream_chunks=1, shared_prefix=True)
+prompt = jax.random.randint(jax.random.key(5), (1, S - 2), 0, cfg.vocab_size)
+for _ in range(6):
+    sched.submit({"tokens": prompt}, prefix_len=S - 2)
+outs = sched.run()
+st = sched.stats
+print(f"[serve] streaming admission: {st.stream_chunks} wire installments, "
+      f"window {sum(st.ttfd_model_s) / len(st.ttfd_model_s) * 1e6:.1f} us; "
+      f"shared prefix: {st.prefix_hits} hits / "
+      f"{st.blocks_prefix_shared} blocks mapped / "
+      f"{st.bytes_wire_saved // 1024} KiB wire saved / "
+      f"{st.cow_copies} copy-on-writes")
+for rid in sorted(outs)[:3]:
+    print(f"[serve]   sample {rid}: {outs[rid].tolist()}")

@@ -36,6 +36,25 @@ assert ratio > 1.0, f"write combining inactive (ratio {ratio:.1f})"
 print(f"overlap efficiency {eff:.3f}, coalescing ratio {ratio:.1f} -> OK")
 EOF
 
+echo "== paged decode / streaming / shared-prefix smoke =="
+python -m benchmarks.bench_paged_decode --smoke BENCH_paged.json
+python - <<'EOF'
+import json, os
+assert os.path.exists("BENCH_paged.json"), "BENCH_paged.json not emitted"
+doc = json.load(open("BENCH_paged.json"))
+whole = doc["ttfd"]["whole_prefill_s"]
+stream = doc["ttfd"]["streaming_s"]
+shared = doc["shared_prefix"]["blocks_shared"]
+cow = doc["shared_prefix"]["cow_copies"]
+assert stream < whole, \
+    f"chunked streaming no longer beats whole-prefill TTFD " \
+    f"({stream*1e6:.2f}us >= {whole*1e6:.2f}us)"
+assert shared > 0, "shared-prefix policy mapped no blocks"
+assert cow > 0, "boundary-block copy-on-write never fired"
+print(f"streaming TTFD {whole/stream:.2f}x better, {shared} blocks shared, "
+      f"{cow} COW copies -> OK")
+EOF
+
 echo "== KV migration smoke (disaggregated serving) =="
 python -m benchmarks.bench_kvxfer --smoke BENCH_kvxfer.json
 python - <<'EOF'

@@ -189,6 +189,22 @@ class CompletionQueue:
         return self._flush_ops(ctx, heap, self.ops[:upto + 1], proxy=proxy,
                                keep_from=upto + 1)
 
+    def flush_dependency(self, ctx, heap, ptr: SymPtr, pe: int, *,
+                         proxy=None):
+        """Complete the queue prefix the word at (ptr, pe) depends on: the
+        last pending op overlapping it and everything submitted before.
+
+        This is the one completion primitive streamed migrations need: each
+        chunk of a chunked prefill ends in a ``put_signal_nbi`` on the same
+        slot signal word, so flushing the signal's dependency after chunk k
+        lands exactly chunks [0..k] — data before each chunk's flag, later
+        chunks (and unrelated requests' traffic) stay deferred.  A no-op
+        when nothing pending targets the word."""
+        dep = self.pending_for(ptr, pe)
+        if dep is not None:
+            heap = self.flush_prefix(ctx, heap, dep, proxy=proxy)
+        return heap
+
     def _flush_ops(self, ctx, heap, ops, *, proxy, keep_from):
         if not ops:
             return heap

@@ -77,9 +77,7 @@ def signal_wait_until(ctx, heap, sig_ptr, pe, cmp: str, value):
     waited word depends on — the last queued update of (sig_ptr, pe) and
     everything submitted before it, which covers the data half of a
     put_signal_nbi — is flushed first.  Returns (heap, value, satisfied)."""
-    dep = ctx.pending.pending_for(sig_ptr, pe)
-    if dep is not None:
-        heap = ctx.pending.flush_prefix(ctx, heap, dep)
+    heap = ctx.pending.flush_dependency(ctx, heap, sig_ptr, pe)
     cur = heap.read(sig_ptr, pe).reshape(())
     ok = _CMP[cmp](cur, jnp.asarray(value, cur.dtype))
     ctx.record("signal_wait", 0, "direct", "local", 1)

@@ -1,12 +1,23 @@
 """Serving launcher: batched generation, and disaggregated prefill/decode
-with SHMEM paged-KV migration.
+with SHMEM paged-KV migration, paged decode attention, chunked prefill
+streaming, and shared-prefix block reuse.
 
   # lockstep batch (original mode)
   PYTHONPATH=src python -m repro.launch.serve --arch zamba2-2.7b --batch 4
 
-  # disaggregated: 2 prefill PEs stream paged KV to 2 decode PEs
+  # disaggregated: 2 prefill PEs stream paged KV to 2 decode PEs; decode
+  # consumes blocks straight from the pool (paged attention, the default)
   PYTHONPATH=src python -m repro.launch.serve --disagg \\
       --prefill-pes 2 --decode-pes 2 --requests 8 --slots 3
+
+  # chunked prefill streaming: 2 blocks per installment hit the wire
+  # mid-prefill, admission gates on the monotonic signal threshold
+  PYTHONPATH=src python -m repro.launch.serve --disagg --stream-chunks 2
+
+  # many samples of one prompt share prefix blocks (copy-on-write on the
+  # first divergent decode write)
+  PYTHONPATH=src python -m repro.launch.serve --disagg --shared-prefix \\
+      --requests 6 --temperature 0.8
 
   # cross-pod hand-off (prefill pod -> decode pod over the host proxy)
   PYTHONPATH=src python -m repro.launch.serve --disagg --cross-pod ...
@@ -95,15 +106,25 @@ def _run_disagg(args, cfg, params) -> None:
         decode_pes=dec.pes(), num_slots=args.slots,
         scfg=ServeConfig(max_new_tokens=args.max_new,
                          temperature=args.temperature),
-        admit_delay_steps=args.admit_delay)
+        admit_delay_steps=args.admit_delay,
+        paged=not args.dense_rehydrate,
+        stream_chunks=args.stream_chunks,
+        shared_prefix=args.shared_prefix)
+    base = _make_batch(cfg, jax.random.key(1), 1, args.prompt_len)
     for i in range(args.requests):
-        sched.submit(_make_batch(cfg, jax.random.fold_in(jax.random.key(1), i),
-                                 1, args.prompt_len))
+        if args.shared_prefix:
+            # many-samples-one-prompt: every request maps the same prefix
+            sched.submit(dict(base), prefix_len=args.prompt_len)
+        else:
+            sched.submit(_make_batch(
+                cfg, jax.random.fold_in(jax.random.key(1), i), 1,
+                args.prompt_len))
     outs = sched.run()
     st = sched.stats
     tier = "dcn (host proxy)" if args.cross_pod else "ici"
+    mode = "paged" if not args.dense_rehydrate else "dense-rehydrate"
     print(f"[serve] disagg arch={cfg.name} prefill={pre.pes()} "
-          f"decode={dec.pes()} tier={tier}")
+          f"decode={dec.pes()} tier={tier} decode-cache={mode}")
     print(f"[serve]   {st.prefills} prefills, {st.migrations} migrations "
           f"({st.bytes_migrated} B), {st.admissions} admissions, "
           f"{st.evictions} evictions over {st.decode_steps} decode steps")
@@ -111,7 +132,15 @@ def _run_disagg(args, cfg, params) -> None:
         avg_steps = sum(st.ttfd_steps) / len(st.ttfd_steps)
         avg_t = sum(st.ttfd_model_s) / len(st.ttfd_model_s)
         print(f"[serve]   time-to-first-decode-token: {avg_steps:.1f} sched "
-              f"steps / {avg_t * 1e6:.1f} us modeled comm")
+              f"steps / {avg_t * 1e6:.1f} us modeled comm window")
+    if args.stream_chunks:
+        print(f"[serve]   streaming: {st.stream_chunks} wire installments "
+              f"of {args.stream_chunks} block(s)")
+    if args.shared_prefix:
+        print(f"[serve]   shared prefix: {st.prefix_hits} hits, "
+              f"{st.blocks_prefix_shared} blocks mapped, "
+              f"{st.bytes_wire_saved} wire B saved, "
+              f"{st.cow_copies} copy-on-writes")
     print(f"[serve]   stalls: pool={st.stalled_on_pool} "
           f"slots={st.stalled_on_slots}; coalescing ratio "
           f"{ctx.pending.stats.coalescing_ratio():.2f}")
@@ -150,7 +179,19 @@ def main():
     ap.add_argument("--block-tokens", type=int, default=16)
     ap.add_argument("--admit-delay", type=int, default=1,
                     help="modeled wire latency in scheduler steps before a "
-                         "migration's signal is polled")
+                         "migration's signal is polled (streamed closes "
+                         "scale it by the final installment's share)")
+    ap.add_argument("--stream-chunks", type=int, default=0, metavar="BLOCKS",
+                    help="chunked prefill streaming: put BLOCKS filled "
+                         "blocks on the wire per scheduler step mid-prefill "
+                         "(0 = whole-prefill migration)")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="serve every request as a sample of one shared "
+                         "prompt: prefix blocks are mapped (incref), not "
+                         "re-staged, with copy-on-write on divergence")
+    ap.add_argument("--dense-rehydrate", action="store_true",
+                    help="fall back to the PR-3 dense-cache admission "
+                         "(gather+insert) instead of paged decode attention")
     ap.add_argument("--cross-pod", action="store_true",
                     help="decode PEs in a second pod: dcn tier, migrations "
                          "route through the host proxy ring")

@@ -122,6 +122,29 @@ class Engine:
             tok=jnp.where(mask, tok, 0).astype(jnp.int32),
             active=slots.active.copy()), tok
 
+    def decode_slots_paged(self, slots: SlotBatch, key, ctx, heap, view,
+                           temperature: float = 0.0):
+        """ONE decode step consuming K/V straight from the symmetric-heap
+        block pool: the view assembles every paged leaf through the slot
+        block tables (byte-identical to what the dense rehydrate would have
+        built, so the step itself is bitwise-identical to
+        :meth:`decode_slots`), the exact same jitted decode runs, and each
+        active slot's new K/V token is written back to its owning pool
+        block — with copy-on-write if that block is shared.  The returned
+        bank cache keeps only non-paged state; its paged leaves stay zero.
+        Returns ``(new_slots, tokens, heap)``."""
+        cache = view.assemble(heap, slots.cache)
+        logits, new_cache = self._decode(self.params, slots.tok[:, None],
+                                         slots.pos, cache)
+        tok = self._sample(logits, key, temperature)
+        heap = view.writeback(ctx, heap, new_cache, slots.pos, slots.active)
+        mask = jnp.asarray(slots.active)
+        return SlotBatch(
+            cache=view.strip(new_cache),
+            pos=jnp.where(mask, slots.pos + 1, 0).astype(jnp.int32),
+            tok=jnp.where(mask, tok, 0).astype(jnp.int32),
+            active=slots.active.copy()), tok, heap
+
     # ------------------------------------------------------- lockstep API
     def generate(self, batch, scfg: ServeConfig = ServeConfig()):
         """batch: {tokens: (B, S_prompt) [+ frontend embeds]}.

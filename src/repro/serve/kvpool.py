@@ -108,6 +108,23 @@ class KVLayout:
         need = -(-min(prompt_len, self.cache_width) // self.block_tokens)
         return max(1, need)
 
+    def blocks_for_decode(self, prompt_len: int, max_new: int) -> int:
+        """Block-table length a request needs through its whole decode: the
+        prompt blocks plus the *growth* blocks its generated tokens will be
+        written into (paged decode writes each new K/V token straight into
+        the pool).  Ring caches wrap in place, so no growth; dense writes
+        past the cache width are dropped (the `.at[].set` OOB rule), so the
+        table never exceeds ``blocks_per_request``.
+
+        This is THE table-size formula: ``KVMigrator.stage`` allocates with
+        it and the scheduler's free-headroom precheck uses it — keep both
+        on this one definition."""
+        if self.ring:
+            return self.blocks_per_request
+        last = min(prompt_len + max_new, self.cache_width) - 1
+        return max(self.blocks_for_prompt(prompt_len),
+                   last // self.block_tokens + 1)
+
 
 def build_layout(cfg, max_len: int, *, block_tokens: int = 16) -> KVLayout:
     """Walk the model's cache structure and classify every leaf."""
@@ -186,15 +203,19 @@ def _unpack_leaf_f32(flat, shape, dtype):
 
 
 def pack_blocks(layout: KVLayout, cache, *, batch_idx: int = 0,
-                n_blocks: Optional[int] = None) -> List[jnp.ndarray]:
+                n_blocks: Optional[int] = None,
+                start: int = 0) -> List[jnp.ndarray]:
     """Slice one request out of a cache into block payloads (prefill side).
 
-    Returns ``n_blocks`` flat ``(block_words,)`` arrays in token-block order.
+    Returns ``n_blocks`` flat ``(block_words,)`` arrays covering token
+    blocks ``[start, start + n_blocks)`` — shared-prefix staging skips the
+    blocks another request already staged by passing ``start``.
     """
-    n_blocks = layout.blocks_per_request if n_blocks is None else n_blocks
+    if n_blocks is None:
+        n_blocks = layout.blocks_per_request - start
     T = layout.block_tokens
     payloads = []
-    for b in range(n_blocks):
+    for b in range(start, start + n_blocks):
         parts = []
         for pl in layout.paged:
             leaf = cache["blocks"][pl.unit_idx][pl.key]
@@ -290,6 +311,10 @@ class KVPool:
         self._refcnt: List[int] = [0] * num_blocks
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self.block_tables: Dict[int, List[int]] = {}
+        # block id -> PE whose heap row holds the staged payload (the wire
+        # source for migrations; growth/COW blocks have no home — they are
+        # written only by the decode PE and never travel)
+        self._home: Dict[int, int] = {}
 
     @classmethod
     def create(cls, heap: SymmetricHeap, cfg, max_len: int, *,
@@ -327,22 +352,55 @@ class KVPool:
                       ())
 
     # ---------------------------------------------------------- accounting
+    def _alloc_free(self, n_blocks: int) -> Optional[List[int]]:
+        """Pop ``n_blocks`` off the free list (refcount 1 each), or None.
+        Pops from the tail of the LIFO list; sorted so contiguous ids
+        (adjacent heap ranges) end up queue-adjacent for write combining."""
+        if n_blocks < 0:
+            raise ValueError(f"negative block count {n_blocks}")
+        if n_blocks > len(self._free):
+            return None
+        if n_blocks == 0:
+            return []
+        ids = sorted(self._free[-n_blocks:])
+        del self._free[-n_blocks:]
+        for i in ids:
+            self._refcnt[i] = 1
+        return ids
+
     def alloc(self, req_id: int, n_blocks: int) -> Optional[List[int]]:
         """Reserve ``n_blocks`` blocks for a request (refcount 1 each).
         Returns the block ids in token-block order, or None when the pool
         cannot satisfy the request (caller keeps it queued)."""
         if req_id in self.block_tables:
             raise ValueError(f"request {req_id} already has blocks")
-        if n_blocks > len(self._free):
+        ids = self._alloc_free(n_blocks)
+        if ids is None:
             return None
-        # pop from the tail of the LIFO free list; sort so contiguous ids
-        # (adjacent heap ranges) end up queue-adjacent for write combining
-        ids = sorted(self._free[-n_blocks:])
-        del self._free[-n_blocks:]
-        for i in ids:
-            self._refcnt[i] = 1
         self.block_tables[req_id] = ids
         return ids
+
+    def alloc_with_prefix(self, req_id: int, shared_ids: List[int],
+                          n_total: int) -> Optional[List[int]]:
+        """Shared-prefix table: map ``shared_ids`` (another request's prefix
+        blocks, incref'd in place) and allocate the remaining
+        ``n_total - len(shared_ids)`` fresh.  All-or-nothing: a failed fresh
+        allocation takes no references."""
+        if req_id in self.block_tables:
+            raise ValueError(f"request {req_id} already has blocks")
+        fresh = self._alloc_free(n_total - len(shared_ids))
+        if fresh is None:
+            return None
+        self.incref(shared_ids)
+        self.block_tables[req_id] = list(shared_ids) + fresh
+        return self.block_tables[req_id]
+
+    def reserve(self, n_blocks: int) -> Optional[List[int]]:
+        """Anonymous refcounted blocks outside any table — copy-on-write
+        targets held by the paged decode view until first divergent write
+        (then :meth:`remap` moves them into the table) or released unused
+        via :meth:`release_ids` at eviction."""
+        return self._alloc_free(n_blocks)
 
     def incref(self, block_ids: List[int]) -> None:
         """Shared-prefix reuse: another request references the same blocks."""
@@ -351,22 +409,55 @@ class KVPool:
                 raise ValueError(f"incref on free block {i}")
             self._refcnt[i] += 1
 
+    def _decref(self, i: int) -> int:
+        self._refcnt[i] -= 1
+        if self._refcnt[i] == 0:
+            self._free.append(i)
+            self._home.pop(i, None)
+            return 1
+        if self._refcnt[i] < 0:
+            raise ValueError(f"double free of block {i}")
+        return 0
+
     def release(self, req_id: int) -> int:
         """Drop a request's references; blocks whose refcount hits zero go
         back on the free list.  Returns the number of blocks freed."""
         ids = self.block_tables.pop(req_id, [])
-        freed = 0
-        for i in ids:
-            self._refcnt[i] -= 1
-            if self._refcnt[i] == 0:
-                self._free.append(i)
-                freed += 1
-            elif self._refcnt[i] < 0:
-                raise ValueError(f"double free of block {i}")
-        return freed
+        return sum(self._decref(i) for i in ids)
+
+    def release_ids(self, block_ids: List[int]) -> int:
+        """Drop one reference each on table-less blocks (unused COW
+        reserves).  Returns the number freed."""
+        return sum(self._decref(i) for i in block_ids)
+
+    def remap(self, req_id: int, index: int, new_id: int) -> int:
+        """Copy-on-write: swap table entry ``index`` to ``new_id`` (the
+        caller transfers its reservation reference into the table) and drop
+        this table's reference on the old, shared block.  Returns the old
+        block id."""
+        table = self.block_tables[req_id]
+        old = table[index]
+        table[index] = new_id
+        self._decref(old)
+        return old
 
     def blocks_of(self, req_id: int) -> List[int]:
         return list(self.block_tables[req_id])
+
+    def refcount(self, block_id: int) -> int:
+        return self._refcnt[block_id]
+
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    # ----------------------------------------------------------- wire home
+    def set_home(self, block_ids: List[int], pe: int) -> None:
+        """Record which PE's row holds these blocks' staged payloads."""
+        for i in block_ids:
+            self._home[i] = pe
+
+    def home_of(self, block_id: int) -> Optional[int]:
+        return self._home.get(block_id)
 
     # ------------------------------------------------------------- metrics
     def stats(self, heap: Optional[SymmetricHeap] = None) -> dict:
@@ -379,6 +470,7 @@ class KVPool:
             "bytes_in_use": used * self.layout.block_bytes,
             "utilization": used / self.num_blocks if self.num_blocks else 0.0,
             "requests_resident": len(self.block_tables),
+            "blocks_shared": sum(1 for r in self._refcnt if r > 1),
         }
         if heap is not None:
             out["heap"] = heap.stats()

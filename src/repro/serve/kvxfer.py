@@ -1,26 +1,41 @@
 """KV-cache migration engine: prefill PE -> decode PE over the SHMEM stack.
 
-The hand-off protocol for one finished prefill (DESIGN.md §8):
+The hand-off protocol for one prefill (DESIGN.md §8, streamed form §9):
 
 1. **stage** — the prefill PE packs the request's cache into pool blocks and
    writes them into *its own* row of the symmetric pool (local-tier stores;
    on real hardware the prefill attention kernel writes the paged pool
-   directly, so staging is free).
-2. **migrate** — the request's blocks stream to the decode PE with
+   directly, so staging is free).  Shared-prefix blocks another request
+   already staged are skipped; growth blocks (pre-reserved for paged decode
+   to write generated tokens into) are never staged — they carry no
+   payload and never travel.
+2. **migrate** — the request's staged blocks stream to the decode PE with
    ``put_signal_nbi``: block ids are sorted so heap-contiguous runs become
-   queue-adjacent, every block in a run is a deferred nbi put, and the run's
-   last block carries a ``SIGNAL_ADD(run_len)`` flag update.  The completion
-   engine write-combines each run into ONE wire transfer, and the cutover
-   engine prices direct stores vs the copy engine on the *coalesced* size.
-   The tail (SSM states, ring positions, cross-KV) and the 4-word header
-   follow, each signal-bearing.  Cross-pod migrations (``dcn`` tier) route
-   through the :class:`~repro.core.proxy.HostProxy` ring at flush.
+   queue-adjacent, every block in a run is a deferred nbi put read from the
+   block's *home* row (the PE that staged it — shared blocks may live on a
+   different prefill PE), and the run's last block carries a
+   ``SIGNAL_ADD(run_len)`` flag update.  The completion engine
+   write-combines each run into ONE wire transfer, and the cutover engine
+   prices direct stores vs the copy engine on the *coalesced* size.  Blocks
+   already resident at the destination (a shared prefix a previous request
+   migrated there) are skipped entirely.  The tail (SSM states, ring
+   positions, cross-KV) and the 4-word header follow, each signal-bearing.
+   Cross-pod migrations (``dcn`` tier) route through the
+   :class:`~repro.core.proxy.HostProxy` ring at flush.
+
+   **Chunked streaming** (``open_stream``/``stream_chunk``/``stream_close``)
+   is the same wire protocol cut across scheduler steps: each chunk of
+   freshly filled blocks goes out mid-prefill with the same monotonically
+   accumulating ``SIGNAL_ADD`` signal, and ``stream_flush`` drains the
+   previous chunk's queue prefix while the next chunk's prefill compute
+   runs — migration hides under prefill exactly as the paper's
+   device-initiated pipelines hide communication inside kernels.
 3. **admit** — the decode PE polls ``signal_wait_until(sig, ">=", expected)``
-   where ``expected = n_blocks + 2`` (every data block + tail + header).
+   where ``expected = blocks_sent + 2`` (every wire block + tail + header).
    Queue order makes the signal the *last* update to land, so observing it
-   proves every block of the request is resident — no block is readable
+   proves every byte of the request is resident — no block is readable
    before its signal, property-tested against the pending-queue oracle in
-   ``tests/test_disagg.py``.
+   ``tests/test_disagg.py`` / ``tests/test_paged.py``.
 
 Completion stays deferred until a completion point: the scheduler overlaps
 migration under ongoing decode steps and only pays the flush when a slot is
@@ -53,15 +68,40 @@ class MigrationReport:
     src_pe: int
     dst_pe: int
     tier: str
-    n_blocks: int
+    n_blocks: int               # staged (payload-bearing) blocks
+    n_wire: int                 # blocks actually sent (skip-resident saves)
     n_runs: int                 # contiguous block runs (coalescing upper bound)
-    bytes_paged: int
+    bytes_paged: int            # wire bytes (skipped blocks excluded)
     bytes_tail: int
+    bytes_skipped: int          # shared blocks already resident at dst
     expected_signal: int
+    chunks: int = 1             # wire installments (1 = whole-prefill)
 
     @property
     def bytes_total(self) -> int:
         return self.bytes_paged + self.bytes_tail + HEADER_WORDS * 4
+
+
+@dataclasses.dataclass
+class StreamState:
+    """One in-flight chunked migration (prefill still 'computing')."""
+    req_id: int
+    src_pe: int
+    dst_pe: int
+    slot: int
+    prompt_len: int
+    first_token: int
+    pending: List[int]          # staged blocks not yet on the wire
+    n_staged: int               # payload-bearing blocks (header n_blocks)
+    n_skipped: int              # resident-at-dst blocks never sent
+    sent: int = 0               # wire blocks issued so far (signal progress)
+    chunks: int = 0
+    final_wire: int = 0         # signal increments of the closing chunk
+
+    @property
+    def expected(self) -> int:
+        """Admission threshold once the stream closes."""
+        return self.sent + len(self.pending) + EXTRA_SIGNALS
 
 
 def _contiguous_runs(ids: List[int]) -> List[List[int]]:
@@ -87,72 +127,173 @@ class KVMigrator:
 
     # ------------------------------------------------------------- staging
     def stage(self, heap, req_id: int, cache, *, prompt_len: int,
-              src_pe: int, batch_idx: int = 0):
-        """Allocate blocks for a finished prefill and write the packed
+              src_pe: int, batch_idx: int = 0, max_new: int = 0,
+              shared_ids: Optional[List[int]] = None):
+        """Allocate a finished prefill's block table and write the packed
         payloads into the prefill PE's own pool row.  Returns (heap, ids) or
-        (heap, None) when the pool is exhausted (request stays queued)."""
+        (heap, None) when the pool is exhausted (request stays queued).
+
+        The table is laid out ``[shared prefix | private prompt | growth]``:
+        ``shared_ids`` map another request's already-staged prefix blocks
+        (incref'd, not re-packed); ``max_new > 0`` pre-reserves the growth
+        blocks paged decode will write generated tokens into (zero payload,
+        never migrated)."""
         lay = self.pool.layout
-        n_blocks = lay.blocks_for_prompt(prompt_len)
-        ids = self.pool.alloc(req_id, n_blocks)
+        shared_ids = list(shared_ids or [])
+        n_prompt = lay.blocks_for_prompt(prompt_len)
+        n_table = lay.blocks_for_decode(prompt_len, max_new)
+        if shared_ids:
+            ids = self.pool.alloc_with_prefix(req_id, shared_ids, n_table)
+        else:
+            ids = self.pool.alloc(req_id, n_table)
         if ids is None:
             return heap, None
+        start = len(shared_ids)
         payloads = pack_blocks(lay, cache, batch_idx=batch_idx,
-                               n_blocks=n_blocks)
-        for bid, payload in zip(ids, payloads):
+                               n_blocks=n_prompt - start, start=start)
+        for bid, payload in zip(ids[start:n_prompt], payloads):
             heap = rma.put(self.ctx, heap, self.pool.block_ptr(bid), payload,
                            src_pe, src_pe=src_pe,
                            work_items=self.work_items)
+        self.pool.set_home(ids[start:n_prompt], src_pe)
         self._staged_tails[req_id] = pack_tail(lay, cache,
                                                batch_idx=batch_idx)
         return heap, ids
 
-    # ----------------------------------------------------------- migration
-    def migrate(self, heap, req_id: int, *, src_pe: int, dst_pe: int,
-                slot: int, prompt_len: int, first_token: int,
-                ) -> tuple:
-        """Stream one staged request's blocks to ``dst_pe`` as deferred
-        ``put_signal_nbi`` traffic.  Nothing lands at the target until a
-        completion point; returns ``(heap, MigrationReport)``."""
-        lay = self.pool.layout
+    def _wire_plan(self, req_id: int, skip) -> tuple:
+        """(send_ids, n_staged, n_skipped): staged blocks to put on the wire
+        — growth blocks have no home and never travel, ``skip`` holds shared
+        blocks already resident at the destination."""
         ids = self.pool.blocks_of(req_id)
-        tier = self.ctx.tier(src_pe, dst_pe)
-        sig = self.pool.sig_ptr(slot)
+        staged = [i for i in ids if self.pool.home_of(i) is not None]
+        send = [i for i in staged if i not in skip]
+        return send, len(staged), len(staged) - len(send)
+
+    # ----------------------------------------------------------- migration
+    def _send_runs(self, heap, ids: List[int], sig, dst_pe: int) -> tuple:
+        """Issue one signal-bearing deferred transfer per contiguous run;
+        each block is read from its home row.  Returns (heap, n_runs)."""
         runs = _contiguous_runs(ids)
         for run in runs:
             for bid in run[:-1]:
                 ptr = self.pool.block_ptr(bid)
                 heap = rma.put_nbi(self.ctx, heap, ptr,
-                                   heap.read(ptr, src_pe), dst_pe,
-                                   src_pe=src_pe, work_items=self.work_items)
-                self._note_block(ptr.nbytes, tier)
+                                   heap.read(ptr, self.pool.home_of(bid)),
+                                   dst_pe, src_pe=self.pool.home_of(bid),
+                                   work_items=self.work_items)
+                self._note_block(ptr.nbytes, dst_pe, self.pool.home_of(bid))
             last = self.pool.block_ptr(run[-1])
+            home = self.pool.home_of(run[-1])
             heap = signal_mod.put_signal_nbi(
-                self.ctx, heap, last, heap.read(last, src_pe), sig,
-                len(run), signal_mod.SIGNAL_ADD, dst_pe, src_pe=src_pe,
+                self.ctx, heap, last, heap.read(last, home), sig,
+                len(run), signal_mod.SIGNAL_ADD, dst_pe, src_pe=home,
                 work_items=self.work_items)
-            self._note_block(last.nbytes, tier)
-        # tail (recurrent states / ring positions / cross-KV)
+            self._note_block(last.nbytes, dst_pe, home)
+        return heap, len(runs)
+
+    def _send_tail_header(self, heap, req_id: int, slot: int, src_pe: int,
+                          dst_pe: int, prompt_len: int, first_token: int,
+                          n_staged: int):
+        """Signal-bearing tail then header; the header's increment is the
+        last queue entry, i.e. the admission threshold."""
+        sig = self.pool.sig_ptr(slot)
         tail_vec = self._staged_tails.pop(req_id)
         heap = signal_mod.put_signal_nbi(
             self.ctx, heap, self.pool.tail_ptr(slot), tail_vec, sig,
             1, signal_mod.SIGNAL_ADD, dst_pe, src_pe=src_pe,
             work_items=self.work_items)
-        # header last: its signal increment is the admission threshold
-        hdr = jnp.asarray([req_id, prompt_len, first_token, len(ids)],
+        hdr = jnp.asarray([req_id, prompt_len, first_token, n_staged],
                           jnp.int32)
         heap = signal_mod.put_signal_nbi(
             self.ctx, heap, self.pool.header_ptr(slot), hdr, sig,
             1, signal_mod.SIGNAL_ADD, dst_pe, src_pe=src_pe,
             work_items=self.work_items)
+        return heap
+
+    def migrate(self, heap, req_id: int, *, src_pe: int, dst_pe: int,
+                slot: int, prompt_len: int, first_token: int,
+                skip=frozenset()) -> tuple:
+        """Stream one staged request's blocks to ``dst_pe`` as deferred
+        ``put_signal_nbi`` traffic — the whole-prefill (single-chunk) form.
+        Nothing lands at the target until a completion point; returns
+        ``(heap, MigrationReport)``."""
+        lay = self.pool.layout
+        send, n_staged, n_skipped = self._wire_plan(req_id, skip)
+        tier = self.ctx.tier(src_pe, dst_pe)
+        heap, n_runs = self._send_runs(heap, send, self.pool.sig_ptr(slot),
+                                       dst_pe)
+        heap = self._send_tail_header(heap, req_id, slot, src_pe, dst_pe,
+                                      prompt_len, first_token, n_staged)
         report = MigrationReport(
             req_id=req_id, slot=slot, src_pe=src_pe, dst_pe=dst_pe,
-            tier=tier, n_blocks=len(ids), n_runs=len(runs),
-            bytes_paged=len(ids) * lay.block_bytes,
+            tier=tier, n_blocks=n_staged, n_wire=len(send), n_runs=n_runs,
+            bytes_paged=len(send) * lay.block_bytes,
             bytes_tail=lay.tail_words * 4,
-            expected_signal=expected_signal(len(ids)))
+            bytes_skipped=n_skipped * lay.block_bytes,
+            expected_signal=expected_signal(len(send)))
         return heap, report
 
-    def _note_block(self, nbytes: int, tier: str) -> None:
+    # ----------------------------------------------------- chunked streaming
+    def open_stream(self, req_id: int, *, src_pe: int, dst_pe: int,
+                    slot: int, prompt_len: int, first_token: int,
+                    skip=frozenset()) -> StreamState:
+        """Begin a chunked migration of an already-staged request.  Pure
+        control plane: the wire plan is computed, nothing is issued yet."""
+        send, n_staged, n_skipped = self._wire_plan(req_id, skip)
+        return StreamState(req_id=req_id, src_pe=src_pe, dst_pe=dst_pe,
+                           slot=slot, prompt_len=prompt_len,
+                           first_token=first_token, pending=send,
+                           n_staged=n_staged, n_skipped=n_skipped)
+
+    def stream_chunk(self, heap, st: StreamState, chunk_blocks: int):
+        """Put the next ``chunk_blocks`` filled blocks on the wire as
+        signal-bearing runs.  ``SIGNAL_ADD`` keeps the slot signal
+        monotonically increasing across chunks, so the decode side watches
+        one word ramp toward the admission threshold."""
+        take, st.pending = (st.pending[:chunk_blocks],
+                            st.pending[chunk_blocks:])
+        heap, _ = self._send_runs(heap, take, self.pool.sig_ptr(st.slot),
+                                  st.dst_pe)
+        st.sent += len(take)
+        st.chunks += 1
+        return heap
+
+    def stream_flush(self, heap, st: StreamState):
+        """Drain the wire under the next chunk's prefill compute: complete
+        exactly the queue prefix this slot's signal depends on (the chunks
+        issued so far) — other requests' in-flight traffic stays deferred,
+        and the modeled comm clock charges the chunk's transfer *before*
+        prefill finishes, which is where streaming's TTFD win comes from."""
+        return self.ctx.pending.flush_dependency(
+            self.ctx, heap, self.pool.sig_ptr(st.slot), st.dst_pe,
+            proxy=self.proxy)
+
+    def stream_close(self, heap, st: StreamState) -> tuple:
+        """Final installment: any remaining blocks, then tail + header.  The
+        header's signal increment completes the admission threshold
+        ``sent + 2``.  Returns ``(heap, MigrationReport)``."""
+        lay = self.pool.layout
+        st.final_wire = len(st.pending) + EXTRA_SIGNALS
+        n_runs = 0
+        if st.pending:
+            take = list(st.pending)
+            heap = self.stream_chunk(heap, st, len(take))
+            n_runs = len(_contiguous_runs(take))
+        heap = self._send_tail_header(heap, st.req_id, st.slot, st.src_pe,
+                                      st.dst_pe, st.prompt_len,
+                                      st.first_token, st.n_staged)
+        report = MigrationReport(
+            req_id=st.req_id, slot=st.slot, src_pe=st.src_pe,
+            dst_pe=st.dst_pe, tier=self.ctx.tier(st.src_pe, st.dst_pe),
+            n_blocks=st.n_staged, n_wire=st.sent, n_runs=n_runs,
+            bytes_paged=st.sent * lay.block_bytes,
+            bytes_tail=lay.tail_words * 4,
+            bytes_skipped=st.n_skipped * lay.block_bytes,
+            expected_signal=expected_signal(st.sent),
+            chunks=st.chunks)
+        return heap, report
+
+    def _note_block(self, nbytes: int, dst_pe: int, src_pe: int) -> None:
         """Per-block cutover telemetry: record the path (and standalone
         price) the cutover engine would pick for this block size, so the
         tuner sees block-granular samples alongside the coalesced
@@ -160,6 +301,7 @@ class KVMigrator:
         charged for real when the flush prices the coalesced transfer — so
         consumers of the modeled comm clock must exclude the
         ``kvxfer_block`` buckets (see ``DisaggScheduler._comm_clock``)."""
+        tier = self.ctx.tier(src_pe, dst_pe)
         if tier == "dcn":
             path = "proxy"
         else:
@@ -188,11 +330,9 @@ class KVMigrator:
             # depends on, through the host-proxy ring machinery — other
             # requests' in-flight migrations stay deferred (their wire cost
             # is not charged to this admission)
-            dep = self.ctx.pending.pending_for(self.pool.sig_ptr(slot),
-                                               dst_pe)
-            if dep is not None:
-                heap = self.ctx.pending.flush_prefix(self.ctx, heap, dep,
-                                                     proxy=self.proxy)
+            heap = self.ctx.pending.flush_dependency(
+                self.ctx, heap, self.pool.sig_ptr(slot), dst_pe,
+                proxy=self.proxy)
         heap, _, ok = signal_mod.signal_wait_until(
             self.ctx, heap, self.pool.sig_ptr(slot), dst_pe, "ge", expected)
         if not bool(ok):
@@ -201,9 +341,16 @@ class KVMigrator:
         return heap, {"req_id": hdr[0], "prompt_len": hdr[1],
                       "first_token": hdr[2], "n_blocks": hdr[3]}
 
+    def gather_tail(self, heap, slot: int, pe: int):
+        """Decode-side read of an admitted request's tail vector (paged
+        decode needs only this — the paged K/V stays in the pool)."""
+        return heap.read(self.pool.tail_ptr(slot), pe)
+
     def gather(self, heap, req_id: int, slot: int, pe: int):
         """Decode-side read of an admitted request's payloads from this PE's
-        own pool row: (block payloads in token order, tail vector)."""
+        own pool row: (block payloads in token order, tail vector).  Only
+        the dense-rehydrate fallback path uses the block half; paged decode
+        consumes blocks in place via ``serve/paged_attn.py``."""
         ids = self.pool.blocks_of(req_id)
         payloads = [heap.read(self.pool.block_ptr(i), pe) for i in ids]
         tail = heap.read(self.pool.tail_ptr(slot), pe)

@@ -1,21 +1,29 @@
 """Disaggregated continuous-batching scheduler.
 
 Ties the serving subsystem together: a request queue feeding a fleet of
-prefill PEs, SHMEM paged-KV migration to decode PEs (``serve/kvxfer.py``),
-signal-gated admission into decode slots, slot rotation mid-flight, and
-eviction back to the block pool.
+prefill PEs, SHMEM paged-KV migration to decode PEs (``serve/kvxfer.py``) —
+whole-prefill or chunked-streaming — signal-threshold-gated admission into
+decode slots, paged decode straight out of the block pool
+(``serve/paged_attn.py``), shared-prefix block reuse with copy-on-write,
+slot rotation mid-flight, and refcount-correct eviction back to the pool.
 
-Request state machine (DESIGN.md §8):
+Request state machine (DESIGN.md §9):
 
-    QUEUED --prefill+stage--> STAGED --migrate(nbi)--> MIGRATING
-        --signal observed--> DECODING --max_new/eos--> FINISHED
-                                 \\--evict: blocks freed, slot re-armed
+    QUEUED --prefill+stage--> STAGED --migrate(nbi)-----------> MIGRATING
+        |                       \\--open_stream--> STREAMING --close--/
+        |                                            (chunk k flushes under
+        |                                             chunk k+1's compute)
+        --signal >= threshold--> DECODING --max_new/eos--> FINISHED
+                                     \\--evict: refs dropped, slot re-armed
 
-One ``step()`` advances every stage once — the order (prefill, admit,
-decode) means a migration issued this step stays *pending* (deferred nbi
-traffic) while decode keeps stepping resident requests: migration overlaps
-decode exactly the way the completion engine overlaps any nbi transfer, and
-the flush cost is only paid at the admission completion point.
+One ``step()`` advances every stage once — the order (stream, prefill,
+admit, decode) means a migration issued this step stays *pending* (deferred
+nbi traffic) while decode keeps stepping resident requests, and a streaming
+request's previous chunk drains while its next chunk "computes": migration
+overlaps prefill AND decode exactly the way the completion engine overlaps
+any nbi transfer.  The admission flush only pays for what is still in
+flight — under streaming that is just the final chunk, which is the
+time-to-first-decode win ``stats.ttfd_model_s`` measures.
 
 The scheduler is the control plane a real deployment runs host-side; the
 data plane (block payloads, signals, headers) moves exclusively through the
@@ -28,15 +36,15 @@ from collections import deque
 from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.serve import kvpool as kvpool_mod
 from repro.serve.engine import Engine, ServeConfig
-from repro.serve.kvxfer import KVMigrator
+from repro.serve.kvxfer import EXTRA_SIGNALS, KVMigrator, StreamState
+from repro.serve.paged_attn import PagedDecodeView
 
-QUEUED, STAGED, MIGRATING, DECODING, FINISHED = (
-    "queued", "staged", "migrating", "decoding", "finished")
+QUEUED, STAGED, STREAMING, MIGRATING, DECODING, FINISHED = (
+    "queued", "staged", "streaming", "migrating", "decoding", "finished")
 
 
 @dataclasses.dataclass
@@ -54,15 +62,37 @@ class Request:
     submit_step: int = -1
     migrate_step: int = -1
     admit_step: int = -1
+    admit_ready_step: int = 0       # modeled wire latency gate
     # prefill result parked here while the request waits for pool blocks, so
     # a stall never re-runs the model
     prefill_cache: Optional[dict] = None
-    t_submit: float = 0.0           # modeled comm clock at prefill finish
+    # shared-prefix policy state
+    prefix_len: int = 0
+    prefix_key: Optional[tuple] = None
+    shared_ids: List[int] = dataclasses.field(default_factory=list)
+    cow_plan: Dict[int, int] = dataclasses.field(default_factory=dict)
+    stream: Optional[StreamState] = None
+    # modeled comm clock when the migration finished issuing (whole-prefill:
+    # the staging step; streamed: stream close) — t_admit - t_submit is the
+    # wire window admission still has to wait out
+    t_submit: float = 0.0
     t_admit: float = 0.0
 
     @property
     def prompt_len(self) -> int:
         return int(self.batch["tokens"].shape[1])
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One registered shareable prefix: the physical blocks, where their
+    staged payload lives, and which decode PEs already hold a copy."""
+    key: tuple
+    block_ids: List[int]
+    whole_prompt: bool              # ids include the partial boundary block
+    home_pe: int
+    resident: set
+    refs: int = 0                   # live requests mapping these blocks
 
 
 @dataclasses.dataclass
@@ -76,6 +106,11 @@ class SchedStats:
     bytes_migrated: int = 0
     stalled_on_pool: int = 0        # prefills deferred because no free blocks
     stalled_on_slots: int = 0       # migrations deferred because no free slot
+    stream_chunks: int = 0          # mid-prefill wire installments issued
+    prefix_hits: int = 0            # requests that mapped an existing prefix
+    blocks_prefix_shared: int = 0   # physical blocks reused via incref
+    bytes_wire_saved: int = 0       # resident-at-dst blocks never re-sent
+    cow_copies: int = 0             # divergent writes that copied a block
     ttfd_steps: List[int] = dataclasses.field(default_factory=list)
     ttfd_model_s: List[float] = dataclasses.field(default_factory=list)
 
@@ -87,7 +122,8 @@ class DisaggScheduler:
                  *, prefill_pes: List[int], decode_pes: List[int],
                  num_slots: int, scfg: ServeConfig = ServeConfig(),
                  prefills_per_step: Optional[int] = None,
-                 admit_delay_steps: int = 0):
+                 admit_delay_steps: int = 0, paged: bool = True,
+                 stream_chunks: int = 0, shared_prefix: bool = False):
         if num_slots > pool.max_slots:
             raise ValueError(
                 f"num_slots ({num_slots}) exceeds the pool's per-PE slot "
@@ -106,12 +142,23 @@ class DisaggScheduler:
         # modeled wire latency in scheduler steps: a migration issued at
         # step N is only *polled* from step N + delay, so its nbi traffic
         # stays deferred while decode keeps stepping — migration overlapped
-        # under decode
+        # under decode.  Streamed migrations scale the delay by the final
+        # installment's share of the wire (the rest already drained).
         self.admit_delay_steps = admit_delay_steps
+        # paged decode: slots read K/V through block tables, no rehydrate;
+        # False falls back to the PR-3 dense-copy admission (A/B baseline)
+        self.paged = paged
+        self.stream_chunks = stream_chunks      # blocks per installment; 0=off
+        self.shared_prefix = shared_prefix
+        self.views: Dict[int, PagedDecodeView] = (
+            {pe: PagedDecodeView(pool, pe, num_slots) for pe in decode_pes}
+            if paged else {})
         self.queue: deque = deque()
         self.requests: Dict[int, Request] = {}
         self.staged: deque = deque()            # blocks held, awaiting a slot
+        self.streaming: List[Request] = []      # chunked migrations in flight
         self.migrating: List[Request] = []
+        self.prefix_index: Dict[tuple, PrefixEntry] = {}
         # per-decode-PE slot banks (each decode PE owns num_slots slots)
         self.banks = {pe: engine.init_slots(num_slots) for pe in decode_pes}
         self.slot_req: Dict[int, List[Optional[int]]] = {
@@ -124,8 +171,11 @@ class DisaggScheduler:
         self._key = jax.random.key(scfg.seed)
 
     # ------------------------------------------------------------- intake
-    def submit(self, batch: dict, *, max_new: Optional[int] = None) -> int:
-        """Enqueue one request ({\"tokens\": (1,S)} [+ frontend embeds])."""
+    def submit(self, batch: dict, *, max_new: Optional[int] = None,
+               prefix_len: int = 0) -> int:
+        """Enqueue one request ({\"tokens\": (1,S)} [+ frontend embeds]).
+        ``prefix_len`` declares the first N prompt tokens shareable with
+        other requests declaring the same tokens (shared-prefix policy)."""
         if max_new is None:
             max_new = self.scfg.max_new_tokens
         S = int(batch["tokens"].shape[1])
@@ -133,14 +183,19 @@ class DisaggScheduler:
             raise ValueError(
                 f"prompt ({S}) + max_new ({max_new}) exceeds the decode "
                 f"cache (max_len={self.engine.max_len})")
-        need = self.pool.layout.blocks_for_prompt(S)
+        if not 0 <= prefix_len <= S:
+            raise ValueError(f"prefix_len {prefix_len} outside [0, {S}]")
+        lay = self.pool.layout
+        need = (lay.blocks_for_decode(S, max_new) if self.paged
+                else lay.blocks_for_prompt(S))
         if need > self.pool.num_blocks:
             raise ValueError(
-                f"prompt needs {need} KV blocks but the pool holds only "
+                f"request needs {need} KV blocks but the pool holds only "
                 f"{self.pool.num_blocks} — no schedule can ever admit it")
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid=rid, batch=batch, max_new=max_new)
+        req = Request(rid=rid, batch=batch, max_new=max_new,
+                      prefix_len=prefix_len if self.shared_prefix else 0)
         req.submit_step = self._step
         self.queue.append(req)
         self.requests[rid] = req
@@ -155,11 +210,79 @@ class DisaggScheduler:
             if k[0] == "kvxfer_block")
         return self.ctx.total_time() - advisory
 
+    # ------------------------------------------------------ prefix sharing
+    def _prefix_plan(self, req: Request):
+        """(shared_ids, key, n_entry): which table prefix this request maps
+        from the index (hit) or will register (miss).  Policy: only whole
+        blocks inside the declared prefix are sharable, plus the partial
+        boundary block when the prefix IS the whole prompt (the
+        many-samples-one-prompt case — the first divergent decode write
+        copy-on-writes it).  Ring layouts never share: occupied slots wrap
+        through every block, so no block is suffix-independent."""
+        lay = self.pool.layout
+        if not self.shared_prefix or req.prefix_len <= 0 or lay.ring:
+            return [], None, 0
+        P, S, T = req.prefix_len, req.prompt_len, lay.block_tokens
+        whole = P == S
+        n_own = P // T + (1 if whole and P % T else 0)
+        if n_own == 0:
+            return [], None, 0      # prefix shorter than one block
+        key = tuple(int(t) for t in np.asarray(req.batch["tokens"])[0, :P])
+        entry = self.prefix_index.get(key)
+        if entry is None:
+            return [], key, n_own   # miss: register after staging
+        usable = (entry.block_ids if (whole and entry.whole_prompt)
+                  else entry.block_ids[:P // T])
+        if not usable:
+            return [], None, 0
+        return list(usable), key, len(usable)
+
+    def _cow_range(self, req: Request, n_entry: int):
+        """Table indices decode will write that map prefix-entry blocks —
+        at most the boundary block of a whole-prompt prefix."""
+        lay = self.pool.layout
+        if not self.paged or lay.ring or n_entry == 0:
+            return range(0)
+        return range(req.prompt_len // lay.block_tokens, n_entry)
+
     # -------------------------------------------------------------- phases
+    def _next_prefill_pe(self) -> Optional[int]:
+        """Round-robin over prefill PEs not occupied by a chunked stream
+        (a streaming PE is still 'computing' its current request)."""
+        busy = {r.prefill_pe for r in self.streaming}
+        for _ in range(len(self.prefill_pes)):
+            pe = self.prefill_pes[self._rr_prefill % len(self.prefill_pes)]
+            self._rr_prefill += 1
+            if pe not in busy:
+                return pe
+        return None
+
+    def _phase_stream(self) -> None:
+        """Advance every chunked migration one installment: drain the
+        previous chunk's queue prefix (the wire works while this chunk's
+        prefill compute runs), then either issue the next chunk or close
+        the stream (remaining blocks + tail + header)."""
+        for req in list(self.streaming):
+            st = req.stream
+            self.heap = self.migrator.stream_flush(self.heap, st)
+            if len(st.pending) > self.stream_chunks:
+                self.heap = self.migrator.stream_chunk(self.heap, st,
+                                                       self.stream_chunks)
+                self.stats.stream_chunks += 1
+            else:
+                if st.pending:                  # the closing installment
+                    self.stats.stream_chunks += 1
+                self.heap, report = self.migrator.stream_close(self.heap, st)
+                self.streaming.remove(req)
+                total = st.sent + EXTRA_SIGNALS
+                delay = -(-self.admit_delay_steps * st.final_wire // total)
+                self._finish_migrate(req, report, delay=delay)
+
     def _phase_prefill(self) -> None:
-        """Retry slot assignment for already-staged requests, then pop up to
-        prefills_per_step queued requests, prefill each on the next prefill
-        PE (round-robin), stage + issue the nbi migration."""
+        """Advance streams, retry slot assignment for already-staged
+        requests, then pop queued requests onto free prefill PEs
+        (round-robin), prefill each, stage + start its migration."""
+        self._phase_stream()
         for _ in range(len(self.staged)):
             self._try_migrate(self.staged.popleft())
         for _ in range(self.prefills_per_step):
@@ -167,9 +290,10 @@ class DisaggScheduler:
                 return
             req = self.queue.popleft()
             if req.prefill_cache is None:            # not prefilled yet
-                pe = self.prefill_pes[self._rr_prefill
-                                      % len(self.prefill_pes)]
-                self._rr_prefill += 1
+                pe = self._next_prefill_pe()
+                if pe is None:                       # every PE mid-stream
+                    self.queue.appendleft(req)
+                    return
                 req.prefill_pe = pe
                 key = jax.random.fold_in(self._key, req.rid)
                 tok, _, cache1 = self.engine.prefill_request(
@@ -177,20 +301,58 @@ class DisaggScheduler:
                 req.first_token = tok
                 req.prefill_cache = cache1
                 self.stats.prefills += 1
-            self.heap, ids = self.migrator.stage(
-                self.heap, req.rid, req.prefill_cache,
-                prompt_len=req.prompt_len, src_pe=req.prefill_pe)
-            if ids is None:                          # pool exhausted: park
+            if not self._stage(req):                 # pool exhausted: park
                 self.stats.stalled_on_pool += 1      # the prefilled request
                 self.queue.appendleft(req)
                 return
-            req.prefill_cache = None                 # staged in the pool now
-            req.state = STAGED
-            req.t_submit = self._comm_clock()
-            self._try_migrate(req)
+
+    def _stage(self, req: Request) -> bool:
+        """Stage a prefilled request into the pool: shared-prefix mapping,
+        payload staging, prefix registration, and COW reservations — all or
+        nothing against the free list, so a stall leaves no references."""
+        lay = self.pool.layout
+        shared_ids, key, n_entry = self._prefix_plan(req)
+        max_new = req.max_new if self.paged else 0
+        # the same formula stage() allocates with — the headroom check and
+        # the allocation must agree, or reserve() below could come up empty
+        n_table = lay.blocks_for_decode(req.prompt_len, max_new)
+        n_cow = len(self._cow_range(req, n_entry))
+        if n_table - len(shared_ids) + n_cow > self.pool.free_blocks():
+            return False
+        self.heap, ids = self.migrator.stage(
+            self.heap, req.rid, req.prefill_cache,
+            prompt_len=req.prompt_len, src_pe=req.prefill_pe,
+            max_new=max_new, shared_ids=shared_ids)
+        assert ids is not None       # free-list head-room checked above
+        req.shared_ids = shared_ids
+        if key is not None:
+            if key not in self.prefix_index:
+                self.prefix_index[key] = PrefixEntry(
+                    key=key, block_ids=ids[:n_entry],
+                    whole_prompt=req.prefix_len == req.prompt_len,
+                    home_pe=req.prefill_pe, resident=set())
+                # the entry owns a reference on its blocks: mappers that
+                # copy-on-write away drop THEIR ref, but the blocks must
+                # outlive every mapper (and stay out of the free list) until
+                # the entry itself dies — else a recycled block could be
+                # zeroed as another request's growth while still mapped
+                self.pool.incref(self.prefix_index[key].block_ids)
+            entry = self.prefix_index[key]
+            entry.refs += 1
+            req.prefix_key = key
+            if shared_ids:
+                self.stats.prefix_hits += 1
+                self.stats.blocks_prefix_shared += len(shared_ids)
+        for b in self._cow_range(req, n_entry):
+            req.cow_plan[b] = self.pool.reserve(1)[0]
+        req.prefill_cache = None                 # staged in the pool now
+        req.state = STAGED
+        self._try_migrate(req)
+        return True
 
     def _try_migrate(self, req: Request) -> None:
-        """Assign a (decode PE, slot) and stream the request's blocks."""
+        """Assign a (decode PE, slot) and put the request on the wire —
+        one shot, or as the first installment of a chunked stream."""
         pe, slot = self._pick_slot()
         if slot is None:
             self.stats.stalled_on_slots += 1
@@ -198,16 +360,45 @@ class DisaggScheduler:
             return
         req.decode_pe, req.slot = pe, slot
         self.slot_req[pe][slot] = req.rid
+        skip = self._resident_skip(req, pe)
+        if self.stream_chunks > 0:
+            st = self.migrator.open_stream(
+                req.rid, src_pe=req.prefill_pe, dst_pe=pe, slot=slot,
+                prompt_len=req.prompt_len, first_token=req.first_token,
+                skip=skip)
+            req.stream = st
+            req.state = STREAMING
+            self.streaming.append(req)
+            # first installment leaves the same step its blocks "fill"
+            self.heap = self.migrator.stream_chunk(self.heap, st,
+                                                   self.stream_chunks)
+            self.stats.stream_chunks += 1
+            return
         self.heap, report = self.migrator.migrate(
             self.heap, req.rid, src_pe=req.prefill_pe, dst_pe=pe,
             slot=slot, prompt_len=req.prompt_len,
-            first_token=req.first_token)
+            first_token=req.first_token, skip=skip)
+        self._finish_migrate(req, report, delay=self.admit_delay_steps)
+
+    def _resident_skip(self, req: Request, dst_pe: int) -> frozenset:
+        """Shared blocks already migrated to this decode PE by an earlier
+        request never travel again (COW keeps them pristine there)."""
+        if req.prefix_key is None or not req.shared_ids:
+            return frozenset()
+        if dst_pe not in self.prefix_index[req.prefix_key].resident:
+            return frozenset()
+        return frozenset(req.shared_ids)
+
+    def _finish_migrate(self, req: Request, report, *, delay: int) -> None:
         req.expected_sig = report.expected_signal
         req.state = MIGRATING
         req.migrate_step = self._step
+        req.admit_ready_step = self._step + delay
+        req.t_submit = self._comm_clock()
         self.migrating.append(req)
         self.stats.migrations += 1
         self.stats.bytes_migrated += report.bytes_total
+        self.stats.bytes_wire_saved += report.bytes_skipped
 
     def _pick_slot(self):
         """Next (decode_pe, slot) with no resident request, round-robin."""
@@ -221,11 +412,12 @@ class DisaggScheduler:
         return None, None
 
     def _phase_admit(self) -> None:
-        """Signal-gated admission: a MIGRATING request enters its decode slot
-        only once ``signal_wait_until`` observes the final signal."""
+        """Signal-threshold-gated admission: a MIGRATING request enters its
+        decode slot only once ``signal_wait_until`` observes the threshold
+        its closed stream (or whole migration) established."""
         still = []
         for req in self.migrating:
-            if self._step < req.migrate_step + self.admit_delay_steps:
+            if self._step < req.admit_ready_step:
                 still.append(req)               # wire still "in flight"
                 continue
             self.heap, hdr = self.migrator.try_admit(
@@ -234,18 +426,35 @@ class DisaggScheduler:
                 still.append(req)
                 continue
             assert hdr["req_id"] == req.rid, "slot/header mismatch"
-            payloads, tail = self.migrator.gather(
-                self.heap, req.rid, req.slot, req.decode_pe)
             bank = self.banks[req.decode_pe]
             lay = self.pool.layout
-            cache = kvpool_mod.insert_blocks(lay, bank.cache, req.slot,
-                                             payloads)
-            cache = kvpool_mod.insert_tail(lay, cache, req.slot, tail)
-            bank = dataclasses.replace(bank, cache=cache)
+            if self.paged:
+                # no dense rehydrate: the pool row IS the decode KV cache;
+                # only the (tiny) non-paged tail enters the slot bank
+                tail = self.migrator.gather_tail(self.heap, req.slot,
+                                                 req.decode_pe)
+                cache = kvpool_mod.insert_tail(lay, bank.cache, req.slot,
+                                               tail)
+                bank = dataclasses.replace(bank, cache=cache)
+                growth = [i for i in self.pool.blocks_of(req.rid)
+                          if self.pool.home_of(i) is None]
+                self.heap = self.views[req.decode_pe].attach(
+                    self.heap, req.slot, req.rid, fresh_ids=growth,
+                    cow=req.cow_plan)
+                req.cow_plan = {}
+            else:
+                payloads, tail = self.migrator.gather(
+                    self.heap, req.rid, req.slot, req.decode_pe)
+                cache = kvpool_mod.insert_blocks(lay, bank.cache, req.slot,
+                                                 payloads)
+                cache = kvpool_mod.insert_tail(lay, cache, req.slot, tail)
+                bank = dataclasses.replace(bank, cache=cache)
             bank = self.engine.activate_slot(
                 bank, req.slot, pos=hdr["prompt_len"],
                 token=hdr["first_token"])
             self.banks[req.decode_pe] = bank
+            if req.prefix_key is not None:
+                self.prefix_index[req.prefix_key].resident.add(req.decode_pe)
             req.state = DECODING
             req.out.append(hdr["first_token"])
             req.admit_step = self._step
@@ -266,9 +475,14 @@ class DisaggScheduler:
             if not bank.active.any():
                 continue
             # per-PE fold: decode PEs must not share sampling noise
-            bank, toks = self.engine.decode_slots(
-                bank, jax.random.fold_in(self._step_key, pe),
-                self.scfg.temperature)
+            key = jax.random.fold_in(self._step_key, pe)
+            if self.paged:
+                bank, toks, self.heap = self.engine.decode_slots_paged(
+                    bank, key, self.ctx, self.heap, self.views[pe],
+                    self.scfg.temperature)
+            else:
+                bank, toks = self.engine.decode_slots(
+                    bank, key, self.scfg.temperature)
             self.banks[pe] = bank
             stepped = True
             for s, rid in enumerate(self.slot_req[pe]):
@@ -295,8 +509,23 @@ class DisaggScheduler:
             self._evict(req)
 
     def _evict(self, req: Request) -> None:
-        """Return the request's blocks to the pool and re-arm its slot."""
+        """Refcount-correct teardown: un-triggered COW reserves go first
+        (view bookkeeping), then the table's references — a shared block
+        returns to the free list only when its LAST mapper evicts — and the
+        prefix-index entry dies with its last reference."""
+        if self.paged:
+            self.views[req.decode_pe].detach(req.slot)
+            self.stats.cow_copies = sum(v.cow_copies
+                                        for v in self.views.values())
         self.pool.release(req.rid)
+        if req.prefix_key is not None:
+            entry = self.prefix_index.get(req.prefix_key)
+            if entry is not None:
+                entry.refs -= 1
+                if entry.refs <= 0:
+                    self.pool.release_ids(entry.block_ids)
+                    del self.prefix_index[req.prefix_key]
+            req.prefix_key = None
         self.heap = self.migrator.reset_slot(self.heap, req.slot,
                                              req.decode_pe)
         bank = self.banks[req.decode_pe]
@@ -313,7 +542,8 @@ class DisaggScheduler:
         self._step += 1
 
     def done(self) -> bool:
-        return (not self.queue and not self.staged and not self.migrating
+        return (not self.queue and not self.staged and not self.streaming
+                and not self.migrating
                 and all(r.state == FINISHED for r in self.requests.values()))
 
     def run(self, *, max_steps: int = 10_000) -> Dict[int, np.ndarray]:

@@ -317,3 +317,32 @@ def test_get_nbi_costs_accrue_at_quiet():
     heap = rma.quiet(ctx, heap)
     assert any(r.op == "get_nbi" for r in ctx.ledger)
     assert len(ctx.pending) == 0
+
+
+def test_flush_dependency_completes_exact_prefix():
+    """The streamed-migration primitive: flushing the dependency of a signal
+    word completes the chunks issued before it (data before each chunk's
+    flag) and leaves everything submitted after it deferred."""
+    ctx, heap = _ctx()
+    data = heap.malloc((64,), "float32")
+    sig = heap.malloc((), "int32")
+    other = heap.malloc((32,), "float32")
+    # chunk 1: data + flag on (sig, 1)
+    heap = rma.put_nbi(ctx, heap, data, jnp.full(64, 3.0), 1)
+    heap = signal.put_signal_nbi(ctx, heap, data, jnp.full(64, 3.0), sig,
+                                 1, signal.SIGNAL_ADD, 1)
+    # unrelated traffic submitted AFTER the flag
+    heap = rma.put_nbi(ctx, heap, other, jnp.ones(32), 2)
+    heap = ctx.pending.flush_dependency(ctx, heap, sig, 1)
+    assert int(heap.read(sig, 1).reshape(())) == 1           # chunk landed
+    np.testing.assert_array_equal(np.asarray(heap.read(data, 1)),
+                                  np.full(64, 3.0))
+    assert ctx.pending.pending_for(other, 2) is not None     # still deferred
+    # chunk 2 on the same word: the signal keeps ramping monotonically
+    heap = signal.put_signal_nbi(ctx, heap, data, jnp.full(64, 4.0), sig,
+                                 1, signal.SIGNAL_ADD, 1)
+    heap = ctx.pending.flush_dependency(ctx, heap, sig, 1)
+    assert int(heap.read(sig, 1).reshape(())) == 2
+    # flushing a word with no pending dependency is a no-op
+    heap = ctx.pending.flush_dependency(ctx, heap, sig, 1)
+    assert len(ctx.pending) == 0                 # 'other' flushed as prefix
