@@ -121,7 +121,10 @@ class KVLayout:
         on this one definition."""
         if self.ring:
             return self.blocks_per_request
-        last = min(prompt_len + max_new, self.cache_width) - 1
+        # decode steps consume tokens out[0..max_new-2] — the final sampled
+        # token is emitted but never fed back — so the last K/V write lands
+        # at prompt_len + max_new - 2, not prompt_len + max_new - 1
+        last = min(prompt_len + max(max_new - 1, 0), self.cache_width) - 1
         return max(self.blocks_for_prompt(prompt_len),
                    last // self.block_tokens + 1)
 

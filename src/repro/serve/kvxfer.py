@@ -96,6 +96,7 @@ class StreamState:
     n_skipped: int              # resident-at-dst blocks never sent
     sent: int = 0               # wire blocks issued so far (signal progress)
     chunks: int = 0
+    runs: int = 0               # contiguous runs issued across all chunks
     final_wire: int = 0         # signal increments of the closing chunk
 
     @property
@@ -181,14 +182,14 @@ class KVMigrator:
                                    heap.read(ptr, self.pool.home_of(bid)),
                                    dst_pe, src_pe=self.pool.home_of(bid),
                                    work_items=self.work_items)
-                self._note_block(ptr.nbytes, dst_pe, self.pool.home_of(bid))
+                self._note_block(ptr.nbytes, self.pool.home_of(bid), dst_pe)
             last = self.pool.block_ptr(run[-1])
             home = self.pool.home_of(run[-1])
             heap = signal_mod.put_signal_nbi(
                 self.ctx, heap, last, heap.read(last, home), sig,
                 len(run), signal_mod.SIGNAL_ADD, dst_pe, src_pe=home,
                 work_items=self.work_items)
-            self._note_block(last.nbytes, dst_pe, home)
+            self._note_block(last.nbytes, home, dst_pe)
         return heap, len(runs)
 
     def _send_tail_header(self, heap, req_id: int, slot: int, src_pe: int,
@@ -252,9 +253,10 @@ class KVMigrator:
         one word ramp toward the admission threshold."""
         take, st.pending = (st.pending[:chunk_blocks],
                             st.pending[chunk_blocks:])
-        heap, _ = self._send_runs(heap, take, self.pool.sig_ptr(st.slot),
-                                  st.dst_pe)
+        heap, n_runs = self._send_runs(heap, take, self.pool.sig_ptr(st.slot),
+                                       st.dst_pe)
         st.sent += len(take)
+        st.runs += n_runs
         st.chunks += 1
         return heap
 
@@ -274,18 +276,15 @@ class KVMigrator:
         ``sent + 2``.  Returns ``(heap, MigrationReport)``."""
         lay = self.pool.layout
         st.final_wire = len(st.pending) + EXTRA_SIGNALS
-        n_runs = 0
         if st.pending:
-            take = list(st.pending)
-            heap = self.stream_chunk(heap, st, len(take))
-            n_runs = len(_contiguous_runs(take))
+            heap = self.stream_chunk(heap, st, len(st.pending))
         heap = self._send_tail_header(heap, st.req_id, st.slot, st.src_pe,
                                       st.dst_pe, st.prompt_len,
                                       st.first_token, st.n_staged)
         report = MigrationReport(
             req_id=st.req_id, slot=st.slot, src_pe=st.src_pe,
             dst_pe=st.dst_pe, tier=self.ctx.tier(st.src_pe, st.dst_pe),
-            n_blocks=st.n_staged, n_wire=st.sent, n_runs=n_runs,
+            n_blocks=st.n_staged, n_wire=st.sent, n_runs=st.runs,
             bytes_paged=st.sent * lay.block_bytes,
             bytes_tail=lay.tail_words * 4,
             bytes_skipped=st.n_skipped * lay.block_bytes,
@@ -293,7 +292,7 @@ class KVMigrator:
             chunks=st.chunks)
         return heap, report
 
-    def _note_block(self, nbytes: int, dst_pe: int, src_pe: int) -> None:
+    def _note_block(self, nbytes: int, src_pe: int, dst_pe: int) -> None:
         """Per-block cutover telemetry: record the path (and standalone
         price) the cutover engine would pick for this block size, so the
         tuner sees block-granular samples alongside the coalesced

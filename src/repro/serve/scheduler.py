@@ -86,12 +86,15 @@ class Request:
 @dataclasses.dataclass
 class PrefixEntry:
     """One registered shareable prefix: the physical blocks, where their
-    staged payload lives, and which decode PEs already hold a copy."""
+    staged payload lives, and which of them each decode PE already holds.
+    Residency is per (PE, block), not per PE: a shorter-prefix mapper only
+    carries ``block_ids[:P//T]`` over the wire, so a whole-prompt mapper
+    admitted to the same PE later must still send the boundary block."""
     key: tuple
     block_ids: List[int]
     whole_prompt: bool              # ids include the partial boundary block
     home_pe: int
-    resident: set
+    resident: Dict[int, set]        # decode PE -> entry block ids landed there
     refs: int = 0                   # live requests mapping these blocks
 
 
@@ -188,6 +191,8 @@ class DisaggScheduler:
         lay = self.pool.layout
         need = (lay.blocks_for_decode(S, max_new) if self.paged
                 else lay.blocks_for_prompt(S))
+        if self._needs_boundary_cow(batch, prefix_len, S):
+            need += 1
         if need > self.pool.num_blocks:
             raise ValueError(
                 f"request needs {need} KV blocks but the pool holds only "
@@ -211,16 +216,37 @@ class DisaggScheduler:
         return self.ctx.total_time() - advisory
 
     # ------------------------------------------------------ prefix sharing
+    def _sharable(self, batch: dict, prefix_len: int) -> bool:
+        """Sharability gates (DESIGN.md §9.3).  Ring layouts never share:
+        occupied slots wrap through every block, so no block is
+        suffix-independent.  Batches carrying non-token inputs (frontend
+        embeds) never share either: cross-attention makes K/V depend on
+        them beyond the token prefix, so a token-keyed index cannot prove
+        two requests' blocks equal."""
+        return (self.shared_prefix and prefix_len > 0
+                and not self.pool.layout.ring
+                and not any(k != "tokens" for k in batch))
+
+    def _needs_boundary_cow(self, batch: dict, prefix_len: int,
+                            prompt_len: int) -> bool:
+        """True when staging this request standalone reserves a private
+        block for the whole-prompt boundary (R1) — the worst-case extra
+        pool demand submit()'s feasibility check must charge, or _stage
+        demands a block the check never counted and the request re-queues
+        forever."""
+        return (self.paged and self._sharable(batch, prefix_len)
+                and prefix_len == prompt_len
+                and prefix_len % self.pool.layout.block_tokens != 0)
+
     def _prefix_plan(self, req: Request):
         """(shared_ids, key, n_entry): which table prefix this request maps
         from the index (hit) or will register (miss).  Policy: only whole
         blocks inside the declared prefix are sharable, plus the partial
         boundary block when the prefix IS the whole prompt (the
         many-samples-one-prompt case — the first divergent decode write
-        copy-on-writes it).  Ring layouts never share: occupied slots wrap
-        through every block, so no block is suffix-independent."""
+        copy-on-writes it); see _sharable for the hard gates."""
         lay = self.pool.layout
-        if not self.shared_prefix or req.prefix_len <= 0 or lay.ring:
+        if not self._sharable(req.batch, req.prefix_len):
             return [], None, 0
         P, S, T = req.prefix_len, req.prompt_len, lay.block_tokens
         whole = P == S
@@ -268,10 +294,7 @@ class DisaggScheduler:
             if len(st.pending) > self.stream_chunks:
                 self.heap = self.migrator.stream_chunk(self.heap, st,
                                                        self.stream_chunks)
-                self.stats.stream_chunks += 1
             else:
-                if st.pending:                  # the closing installment
-                    self.stats.stream_chunks += 1
                 self.heap, report = self.migrator.stream_close(self.heap, st)
                 self.streaming.remove(req)
                 total = st.sent + EXTRA_SIGNALS
@@ -330,7 +353,7 @@ class DisaggScheduler:
                 self.prefix_index[key] = PrefixEntry(
                     key=key, block_ids=ids[:n_entry],
                     whole_prompt=req.prefix_len == req.prompt_len,
-                    home_pe=req.prefill_pe, resident=set())
+                    home_pe=req.prefill_pe, resident={})
                 # the entry owns a reference on its blocks: mappers that
                 # copy-on-write away drop THEIR ref, but the blocks must
                 # outlive every mapper (and stay out of the free list) until
@@ -366,13 +389,21 @@ class DisaggScheduler:
                 req.rid, src_pe=req.prefill_pe, dst_pe=pe, slot=slot,
                 prompt_len=req.prompt_len, first_token=req.first_token,
                 skip=skip)
+            if not st.pending:
+                # fully resident prefix: no blocks to stream — close now
+                # (tail + header only) instead of burning a scheduler step
+                # on a phantom zero-block installment, matching the
+                # whole-prefill path's admission timing
+                self.heap, report = self.migrator.stream_close(self.heap, st)
+                self._finish_migrate(req, report,
+                                     delay=self.admit_delay_steps)
+                return
             req.stream = st
             req.state = STREAMING
             self.streaming.append(req)
             # first installment leaves the same step its blocks "fill"
             self.heap = self.migrator.stream_chunk(self.heap, st,
                                                    self.stream_chunks)
-            self.stats.stream_chunks += 1
             return
         self.heap, report = self.migrator.migrate(
             self.heap, req.rid, src_pe=req.prefill_pe, dst_pe=pe,
@@ -382,12 +413,16 @@ class DisaggScheduler:
 
     def _resident_skip(self, req: Request, dst_pe: int) -> frozenset:
         """Shared blocks already migrated to this decode PE by an earlier
-        request never travel again (COW keeps them pristine there)."""
+        request never travel again (COW keeps them pristine there).  Skip
+        only the intersection with the blocks recorded resident at this
+        PE: an earlier mapper may have carried fewer entry blocks than
+        this request maps (it skipped the whole-prompt boundary block),
+        and skipping an absent block would admit stale pool-row bytes."""
         if req.prefix_key is None or not req.shared_ids:
             return frozenset()
-        if dst_pe not in self.prefix_index[req.prefix_key].resident:
-            return frozenset()
-        return frozenset(req.shared_ids)
+        resident = self.prefix_index[req.prefix_key].resident.get(
+            dst_pe, frozenset())
+        return frozenset(req.shared_ids) & frozenset(resident)
 
     def _finish_migrate(self, req: Request, report, *, delay: int) -> None:
         req.expected_sig = report.expected_signal
@@ -399,6 +434,10 @@ class DisaggScheduler:
         self.stats.migrations += 1
         self.stats.bytes_migrated += report.bytes_total
         self.stats.bytes_wire_saved += report.bytes_skipped
+        if self.stream_chunks > 0:
+            # report.chunks counts the stream's block-carrying installments
+            # (a whole-prefill report never reaches here in streaming mode)
+            self.stats.stream_chunks += report.chunks
 
     def _pick_slot(self):
         """Next (decode_pe, slot) with no resident request, round-robin."""
@@ -454,7 +493,15 @@ class DisaggScheduler:
                 token=hdr["first_token"])
             self.banks[req.decode_pe] = bank
             if req.prefix_key is not None:
-                self.prefix_index[req.prefix_key].resident.add(req.decode_pe)
+                # the admission wait proved every block this request maps
+                # landed at its decode PE (wire-carried or already skipped
+                # as resident) — record exactly those entry blocks, not a
+                # blanket PE flag.  COW has not fired yet (it triggers on
+                # the first divergent decode write), so the table still
+                # maps the shared ids.
+                entry = self.prefix_index[req.prefix_key]
+                entry.resident.setdefault(req.decode_pe, set()).update(
+                    set(entry.block_ids) & set(self.pool.blocks_of(req.rid)))
             req.state = DECODING
             req.out.append(hdr["first_token"])
             req.admit_step = self._step

@@ -186,6 +186,39 @@ def test_shared_prefix_with_divergent_suffixes():
     assert pool.stats()["blocks_in_use"] == 0
 
 
+def test_whole_prefix_after_partial_mapper_resends_boundary():
+    """Regression: residency must be per (decode PE, block).  A non-whole
+    mapper carries only the entry's full blocks to its decode PE; when a
+    whole-prompt mapper lands on that PE afterwards, the boundary block is
+    NOT resident there and must still travel — an all-or-nothing PE flag
+    would skip it and decode against stale (zero) pool-row bytes."""
+    cfg, params, ctx, heap, eng, pool = _setup()
+    NEW = 4
+    sched = _sched(ctx, heap, eng, pool, decode_pes=[2, 3], num_slots=2,
+                   NEW=NEW, shared_prefix=True)
+    P = 10                                       # 10 % 4 != 0: boundary block
+    p = _prompt(cfg, S=P)
+    tail = jax.random.randint(jax.random.key(33), (1, 4), 0, cfg.vocab_size)
+    longer = jnp.concatenate([p, tail], axis=1)
+    # round-robin slot pick: A->(2,0) registers the whole-prompt entry,
+    # B->(3,0) maps only the 2 full blocks, C->(2,1) skips all 3, D->(3,1)
+    # is whole-prompt on the PE where only B's partial set is resident
+    sched.submit({"tokens": p}, prefix_len=P)        # A
+    sched.submit({"tokens": longer}, prefix_len=P)   # B
+    sched.submit({"tokens": p}, prefix_len=P)        # C
+    sched.submit({"tokens": p}, prefix_len=P)        # D
+    outs = sched.run()
+    # C skipped 3 resident blocks; D skipped only B's 2 and re-sent the
+    # boundary — 5 skips total (a PE-level flag would claim 6)
+    assert (sched.stats.bytes_wire_saved
+            == 5 * pool.layout.block_bytes)
+    base_p = eng.generate({"tokens": p}, ServeConfig(max_new_tokens=NEW))
+    base_l = eng.generate({"tokens": longer}, ServeConfig(max_new_tokens=NEW))
+    for rid, base in [(0, base_p), (1, base_l), (2, base_p), (3, base_p)]:
+        np.testing.assert_array_equal(np.asarray(base[0]), outs[rid])
+    assert pool.stats()["blocks_in_use"] == 0
+
+
 def test_cow_keeps_shared_payload_pristine_under_divergence():
     """Sampled decoding makes the mapped requests genuinely diverge; the
     shared prefix blocks' payload at the decode PE must read identical to
@@ -303,12 +336,52 @@ def test_pool_sharing_api_refcounts():
     assert pool.release_ids([]) == 0
 
 
+def test_prefix_plan_refuses_multimodal_batches():
+    """Sharability rule 4: a batch carrying non-token inputs never maps or
+    registers a prefix — the token-keyed index cannot see the embeds that
+    condition K/V via cross-attention."""
+    from repro.serve.scheduler import Request
+    cfg, params, ctx, heap, eng, pool = _setup()
+    sched = _sched(ctx, heap, eng, pool, shared_prefix=True)
+    tok = _prompt(cfg, S=8)
+    mm = Request(rid=0, batch={"tokens": tok,
+                               "audio_embeds": jnp.zeros((1, 4, 8))},
+                 max_new=4, prefix_len=8)
+    assert sched._prefix_plan(mm) == ([], None, 0)
+    plain = Request(rid=1, batch={"tokens": tok}, max_new=4, prefix_len=8)
+    ids, key, n = sched._prefix_plan(plain)
+    assert key is not None and n == 2            # 8 tokens = 2 full blocks
+
+
+def test_submit_rejects_unschedulable_cow_request():
+    """A whole-prompt unaligned prefix needs table + 1 blocks (the COW
+    reserve); a pool of exactly table-many blocks must reject the request
+    upfront instead of wedging the scheduler re-queueing it forever."""
+    NEW = 4
+    cfg, params, ctx, heap, eng, pool = _setup(num_blocks=4, block_tokens=4)
+    assert pool.layout.blocks_for_decode(10, NEW) == 4
+    sched = _sched(ctx, heap, eng, pool, NEW=NEW, shared_prefix=True)
+    p = _prompt(cfg, S=10)                       # 10 % 4 != 0: boundary COW
+    with pytest.raises(ValueError):
+        sched.submit({"tokens": p}, prefix_len=10)
+    # a multimodal batch never shares (rule 4), so no reserve is demanded
+    # and the same-sized request must stay schedulable
+    sched2 = _sched(ctx, heap, eng, pool, NEW=NEW, shared_prefix=True)
+    sched2.submit({"tokens": p, "audio_embeds": jnp.zeros((1, 2, 4))},
+                  prefix_len=10)
+    sched.submit({"tokens": p})                  # no prefix: fits exactly
+    sched.run()
+
+
 def test_blocks_for_decode_growth():
     cfg, params, ctx, heap, eng, pool = _setup(block_tokens=4)
     lay = pool.layout
     assert not lay.ring
     assert lay.blocks_for_decode(10, 0) == lay.blocks_for_prompt(10) == 3
-    assert lay.blocks_for_decode(10, 6) == 4     # writes reach pos 15
+    assert lay.blocks_for_decode(10, 6) == 4     # writes reach pos 14
+    # the final sampled token is never written back: 9 + 4 tokens end the
+    # last write at pos 11, squarely inside block 2 — no dead fourth block
+    assert lay.blocks_for_decode(9, 4) == 3
     assert lay.blocks_for_decode(10, 100) == lay.blocks_per_request  # capped
 
 
@@ -349,7 +422,8 @@ def test_growth_blocks_receive_decode_writes():
     K/V into growth blocks that were never migrated — decode output still
     matches the baseline, and the growth blocks end up non-zero."""
     cfg, params, ctx, heap, eng, pool = _setup(block_tokens=4)
-    NEW = 7                                      # pos 10..16: blocks 2..4
+    NEW = 7                                      # writes pos 10..15: block 3
+                                                 # is pure growth
     sched = _sched(ctx, heap, eng, pool, decode_pes=[2], num_slots=1,
                    NEW=NEW)
     p = _prompt(cfg, S=10)
