@@ -1,0 +1,190 @@
+"""Cluster-frontend benchmarks: SLO scheduling, shedding, prefix affinity.
+
+Three experiments on the fleet (``repro.serve.frontend``), all driven
+through the real multi-pod machine — open-loop traffic, router, SLO
+admission, parked streams, preemption, shared pool:
+
+1. **SLO vs FCFS under overload** — the identical overloaded arrival
+   schedule served twice; the SLO policy's priority pop + over-budget
+   preemption must strictly beat FCFS on the *interactive* class's p99
+   TTFD measured from arrival (queue time counts).  CI-gated.
+2. **goodput vs offered load** — an offered-rate sweep past saturation
+   with shedding armed: good throughput (requests finishing inside their
+   class deadline per step) must degrade gracefully — sheds fire and the
+   good rate stays near its capacity plateau instead of collapsing under
+   unbounded queues.  CI-gated.
+3. **prefix-affinity routing** — a shared-prefix workload routed randomly
+   vs by affinity; the affinity arm must cut the cross-pod wire bytes
+   (prefix blocks pulled over the host-proxy ring by wrong-pod routing).
+   CI-gated.
+
+``smoke(json_path)`` emits BENCH_fleet.json for ``scripts/ci.sh``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.common import emit
+from repro.configs import base as cfgbase
+from repro.serve.engine import Engine
+from repro.serve.frontend import (Fleet, FleetConfig, TenantSpec,
+                                  TrafficEngine)
+
+ARCH = "qwen3_4b"
+SEED = 7
+STEPS = 24              # open-loop arrival window (drain runs to empty)
+MAXLEN = 24
+
+#: interactive chat against a long-decode batch scan — the mix that makes
+#: FCFS head-of-line blocking visible and gives preemption a victim
+MIX = (TenantSpec("chat", weight=1.0, prompt_lens=(8,), max_new=(4,),
+                  slo="interactive"),
+       TenantSpec("scan", weight=1.0, prompt_lens=(12,), max_new=(12,),
+                  slo="batch"))
+
+#: many-samples-one-prompt tenant for the affinity experiment
+PREFIX_MIX = (TenantSpec("samples", prompt_lens=(12,), max_new=(4,),
+                         slo="standard", shared_prefix_prob=0.8,
+                         prefix_groups=1),)
+
+RATE_CAPACITY = 0.8
+RATE_OVERLOAD = 1.2
+RATE_PAST_SAT = 3.2
+
+
+def _engine():
+    import jax
+    from repro.models import model
+    cfg = cfgbase.reduced(cfgbase.get_config(ARCH))
+    params = model.init_params(jax.random.key(0), cfg)
+    return Engine(cfg, params, max_len=MAXLEN)
+
+
+def _fleet(engine, *, admission, router="least_loaded", queue_bound=4):
+    fcfg = FleetConfig(n_pods=2, prefill_per_pod=1, decode_per_pod=2,
+                       num_slots=1, kv_blocks=128, block_tokens=4,
+                       max_len=MAXLEN, max_new=4, stream_chunks=2,
+                       admission=admission, router=router,
+                       queue_bound=queue_bound, seed=SEED)
+    return Fleet(fcfg, engine=engine)
+
+
+def _serve(engine, tenants, rate, *, admission="slo",
+           router="least_loaded", queue_bound=4, steps=STEPS):
+    fleet = _fleet(engine, admission=admission, router=router,
+                   queue_bound=queue_bound)
+    traffic = TrafficEngine(list(tenants), rate=rate,
+                            vocab=fleet.cfg.vocab_size, seed=SEED)
+    t0 = time.perf_counter()
+    rep = fleet.run(traffic.schedule(steps), max_steps=4000)
+    rep["wall_s"] = time.perf_counter() - t0
+    return rep
+
+
+def slo_vs_fcfs(engine) -> dict:
+    """The same overloaded schedule under FCFS and SLO admission."""
+    fcfs = _serve(engine, MIX, RATE_OVERLOAD, admission="fcfs")
+    slo = _serve(engine, MIX, RATE_OVERLOAD, admission="slo")
+    out = {"rate": RATE_OVERLOAD}
+    for name, rep in (("fcfs", fcfs), ("slo", slo)):
+        ia = rep["by_class"].get("interactive", {})
+        out[name] = {
+            "interactive_ttfd_p50_steps": ia.get("ttfd_p50_steps", 0.0),
+            "interactive_ttfd_p99_steps": ia.get("ttfd_p99_steps", 0.0),
+            "interactive_goodput": ia.get("goodput", 0.0),
+            "goodput": rep["goodput"],
+            "preempts": rep["preempts"],
+            "resumes": rep["resumes"],
+            "elapsed_steps": rep["elapsed_steps"],
+        }
+    return out
+
+
+def goodput_sweep(engine) -> dict:
+    """Offered-load sweep through and past saturation, SLO + shed armed."""
+    points = []
+    for rate in (RATE_CAPACITY, RATE_OVERLOAD * 4 / 3, RATE_PAST_SAT):
+        rep = _serve(engine, MIX, rate)
+        points.append({
+            "rate": rate,
+            "offered": rep["offered"],
+            "good": rep["good"],
+            "shed": rep["shed"],
+            "goodput": rep["goodput"],
+            "goodput_per_step": rep["goodput_per_step"],
+            "preempts": rep["preempts"],
+        })
+    return {"points": points}
+
+
+def affinity_savings(engine) -> dict:
+    """Random vs prefix-affinity routing on a shared-prefix workload."""
+    out = {}
+    for router in ("random", "affinity"):
+        rep = _serve(engine, PREFIX_MIX, 0.6, router=router)
+        out[router] = {
+            "bytes_cross_pod": rep["wire"]["bytes_cross_pod"],
+            "bytes_wire_saved": rep["wire"]["bytes_wire_saved"],
+            "proxy_delivered": (rep.get("proxy") or {}).get("delivered", 0),
+            "affinity_hits": rep["router"]["affinity_hits"],
+            "completed": rep["completed"],
+        }
+    return out
+
+
+def run():
+    engine = _engine()
+    ab = slo_vs_fcfs(engine)
+    for arm in ("fcfs", "slo"):
+        emit("fleet_slo_ab", f"admission={arm},rate={ab['rate']}",
+             0.0, interactive_p99_ttfd_steps=ab[arm][
+                 "interactive_ttfd_p99_steps"],
+             goodput=f"{ab[arm]['goodput']:.2f}",
+             preempts=ab[arm]["preempts"])
+    sweep = goodput_sweep(engine)
+    for p in sweep["points"]:
+        emit("fleet_goodput", f"rate={p['rate']:.2f}", 0.0,
+             good_per_step=f"{p['goodput_per_step']:.3f}",
+             shed=p["shed"], goodput=f"{p['goodput']:.2f}")
+    aff = affinity_savings(engine)
+    for router, a in aff.items():
+        emit("fleet_affinity", f"router={router}", 0.0,
+             cross_pod_bytes=a["bytes_cross_pod"],
+             wire_saved=a["bytes_wire_saved"])
+
+
+def smoke(json_path: str = "BENCH_fleet.json") -> dict:
+    """CI smoke: all three experiments -> JSON artifact."""
+    engine = _engine()
+    doc = {
+        "bench": "fleet_smoke",
+        "arch": cfgbase.reduced(cfgbase.get_config(ARCH)).name,
+        "slo_vs_fcfs": slo_vs_fcfs(engine),
+        "goodput": goodput_sweep(engine),
+        "affinity": affinity_savings(engine),
+    }
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    ab = doc["slo_vs_fcfs"]
+    emit("fleet_smoke", json_path, 0.0,
+         fcfs_p99=ab["fcfs"]["interactive_ttfd_p99_steps"],
+         slo_p99=ab["slo"]["interactive_ttfd_p99_steps"],
+         shed=doc["goodput"]["points"][-1]["shed"],
+         affinity_cross_pod=doc["affinity"]["affinity"]["bytes_cross_pod"])
+    return doc
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", nargs="?", const="BENCH_fleet.json",
+                    default=None, metavar="PATH",
+                    help="CI smoke: SLO-vs-FCFS + goodput sweep + affinity "
+                         "savings -> JSON artifact")
+    cli = ap.parse_args()
+    if cli.smoke is not None:
+        smoke(cli.smoke)
+    else:
+        run()

@@ -28,7 +28,8 @@ def main() -> None:
 
     if args.json is not None:
         import os
-        from benchmarks import bench_cutover, bench_kvxfer, bench_paged_decode
+        from benchmarks import (bench_cutover, bench_fleet, bench_kvxfer,
+                                bench_paged_decode)
         print("bench,config,us_per_call,derived")
         doc = bench_cutover.profile(args.json)
         print(f"# wrote {args.json}: {doc['samples']} samples, "
@@ -44,12 +45,19 @@ def main() -> None:
         print(f"# wrote {pg_path}: streaming TTFD "
               f"{pg['ttfd']['improvement']:.2f}x, "
               f"{pg['shared_prefix']['blocks_shared']} blocks shared")
+        fl_path = os.path.join(out_dir, "BENCH_fleet.json")
+        fl = bench_fleet.smoke(fl_path)
+        ab = fl["slo_vs_fcfs"]
+        print(f"# wrote {fl_path}: interactive p99 TTFD "
+              f"{ab['fcfs']['interactive_ttfd_p99_steps']:.1f} (fcfs) -> "
+              f"{ab['slo']['interactive_ttfd_p99_steps']:.1f} (slo) steps, "
+              f"{fl['goodput']['points'][-1]['shed']} shed past saturation")
         return
 
     from benchmarks import (bench_broadcast, bench_cutover, bench_fcollect,
-                            bench_kernels, bench_kvxfer, bench_overlap,
-                            bench_paged_decode, bench_ring, bench_rma,
-                            bench_workgroup, common)
+                            bench_fleet, bench_kernels, bench_kvxfer,
+                            bench_overlap, bench_paged_decode, bench_ring,
+                            bench_rma, bench_workgroup, common)
     suites = [
         ("fig3_rma", bench_rma.run),
         ("fig4_workgroup", bench_workgroup.run),
@@ -61,6 +69,7 @@ def main() -> None:
         ("overlap", bench_overlap.run),
         ("kvxfer", bench_kvxfer.run),
         ("paged_decode", bench_paged_decode.run),
+        ("fleet", bench_fleet.run),
     ]
     only = args.only.split(",") if args.only else None
     print("bench,config,us_per_call,derived")

@@ -55,6 +55,44 @@ print(f"streaming TTFD {whole/stream:.2f}x better, {shared} blocks shared, "
       f"{cow} COW copies -> OK")
 EOF
 
+echo "== cluster frontend smoke (SLO scheduling / shed / affinity) =="
+python -m benchmarks.bench_fleet --smoke BENCH_fleet.json
+python - <<'EOF'
+import json
+doc = json.load(open("BENCH_fleet.json"))
+ab = doc["slo_vs_fcfs"]
+fcfs_p99 = ab["fcfs"]["interactive_ttfd_p99_steps"]
+slo_p99 = ab["slo"]["interactive_ttfd_p99_steps"]
+assert slo_p99 < fcfs_p99, \
+    f"SLO scheduling no longer beats FCFS on interactive p99 TTFD under " \
+    f"overload ({slo_p99:.1f} >= {fcfs_p99:.1f} steps)"
+assert ab["slo"]["preempts"] > 0, \
+    "over-budget preemption never fired under overload"
+pts = {round(p["rate"], 2): p for p in doc["goodput"]["points"]}
+rates = sorted(pts)
+cap, over = pts[rates[0]], pts[rates[-1]]
+assert over["shed"] > 0, \
+    f"no shedding past saturation (rate {rates[-1]}) — queues unbounded"
+assert over["goodput_per_step"] >= 0.7 * cap["goodput_per_step"], \
+    f"goodput collapsed past saturation: {over['goodput_per_step']:.3f}" \
+    f"/step at {rates[-1]} vs {cap['goodput_per_step']:.3f}/step at " \
+    f"{rates[0]}"
+aff = doc["affinity"]
+assert aff["random"]["bytes_cross_pod"] > 0, \
+    "random routing produced no cross-pod wire bytes — the affinity " \
+    "comparison is vacuous"
+assert (aff["affinity"]["bytes_cross_pod"]
+        < aff["random"]["bytes_cross_pod"]), \
+    f"prefix-affinity routing stopped saving cross-pod wire bytes " \
+    f"({aff['affinity']['bytes_cross_pod']} >= " \
+    f"{aff['random']['bytes_cross_pod']})"
+print(f"SLO p99 {slo_p99:.1f} vs FCFS {fcfs_p99:.1f} steps, "
+      f"{over['shed']} shed at {rates[-1]}x with goodput "
+      f"{over['goodput_per_step']:.3f}/step, affinity cross-pod "
+      f"{aff['affinity']['bytes_cross_pod']} vs "
+      f"{aff['random']['bytes_cross_pod']} B -> OK")
+EOF
+
 echo "== KV migration smoke (disaggregated serving) =="
 python -m benchmarks.bench_kvxfer --smoke BENCH_kvxfer.json
 python - <<'EOF'

@@ -259,6 +259,15 @@ class CompletionQueue:
         # PUT: materialize the coalesced payload
         ptr, value = _merge_puts(group)
         if head.tier == "dcn" and proxy is not None:
+            if proxy.ring_full():
+                # migration storm: the ring is at capacity, so the producer
+                # must wait for consumer progress.  We ARE holding the heap
+                # here, so model the host proxy thread catching up (drain)
+                # instead of spinning to the wedge detector — backpressure,
+                # not message loss.  Draining a queue prefix early is always
+                # a legal completion schedule.
+                heap = proxy.drain(heap)
+                proxy.backpressure += 1
             proxy.put(ptr, value, head.pe)    # ring message; drained once
             return heap, True
         wi = max(o.work_items for o in group)

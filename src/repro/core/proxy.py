@@ -33,6 +33,16 @@ class HostProxy:
         self._staging = {}       # msg idx -> payload too big for 56 B inline
         self._seq = 0
         self._pid = 0
+        self.backpressure = 0    # producer waits absorbed by a mid-run drain
+
+    def ring_full(self) -> bool:
+        """True when the next submit would spin on flow control: every slot
+        looks occupied against the (possibly stale) published consumed
+        count.  Callers holding the heap should ``drain`` and retry — that
+        is the backpressure path a migration storm takes instead of
+        wedging (see ``core.pending.CompletionQueue._issue``)."""
+        return (self.ring.write_reserve - self.ring.consumed_published
+                >= self.ring.slots)
 
     # ------------------------------------------------------------- submit
     def _submit(self, op, ptr: SymPtr, pe, data=None):

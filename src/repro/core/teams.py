@@ -52,6 +52,24 @@ def shared(npes: int, node_size: int, node_id: int) -> Team:
     return Team(node_id * node_size, 1, node_size)
 
 
+def pods_partition(team: Team, pod_sizes) -> list:
+    """Split a team into contiguous pods of the given sizes (uneven sizes
+    allowed) — the fleet frontend's N-pod topology.  Each pod team can then
+    be ``disagg_partition``-ed into its prefill/decode fleets; pods need not
+    cover the whole team (leftover PEs stay unassigned)."""
+    sizes = list(pod_sizes)
+    if not sizes or any(s < 1 for s in sizes):
+        raise ValueError(f"pod sizes must be positive, got {sizes}")
+    if sum(sizes) > team.size:
+        raise ValueError(
+            f"pods need {sum(sizes)} PEs but the team holds {team.size}")
+    out, off = [], 0
+    for s in sizes:
+        out.append(team.split_strided(off, 1, s))
+        off += s
+    return out
+
+
 def disagg_partition(team: Team, n_prefill: int) -> tuple:
     """Split a team into contiguous (prefill, decode) sub-teams for
     disaggregated serving — the prefill fleet owns the first ``n_prefill``

@@ -21,6 +21,11 @@ streaming, and shared-prefix block reuse.
 
   # cross-pod hand-off (prefill pod -> decode pod over the host proxy)
   PYTHONPATH=src python -m repro.launch.serve --disagg --cross-pod ...
+
+  # cluster frontend: open-loop traffic over 2 pods, SLO admission,
+  # prefix-affinity routing (knob defaults: ISHMEM_FLEET_*)
+  PYTHONPATH=src python -m repro.launch.serve --fleet --rate 1.2 \\
+      --fleet-steps 24 --admission slo --router affinity
 """
 from __future__ import annotations
 
@@ -152,7 +157,78 @@ def _run_disagg(args, cfg, params) -> None:
         print(f"[serve]   req {rid}: {outs[rid].tolist()}")
 
 
+def _run_fleet(args, cfg, params) -> None:
+    from repro.serve.engine import Engine
+    from repro.serve.frontend import (Fleet, FleetConfig, TenantSpec,
+                                      TrafficEngine)
+
+    fcfg = FleetConfig(
+        arch=args.arch, n_pods=args.pods,
+        prefill_per_pod=args.pod_prefill, decode_per_pod=args.pod_decode,
+        num_slots=args.slots, kv_blocks=args.kv_blocks,
+        block_tokens=args.block_tokens,
+        max_len=args.prompt_len + args.max_new, max_new=args.max_new,
+        temperature=args.temperature, stream_chunks=args.stream_chunks,
+        shared_prefix=True,
+        admit_delay=args.admit_delay, admission=args.admission,
+        queue_bound=args.queue_bound, router=args.router, seed=args.seed)
+    engine = Engine(cfg, params, max_len=fcfg.max_len)
+    fleet = Fleet(fcfg, engine=engine)
+    tenants = [
+        TenantSpec("chat", weight=2.0, prompt_lens=(args.prompt_len,),
+                   max_new=(args.max_new,), slo="interactive"),
+        TenantSpec("api", weight=1.0, prompt_lens=(args.prompt_len,),
+                   max_new=(args.max_new,), slo="standard",
+                   shared_prefix_prob=0.5, prefix_groups=2),
+        TenantSpec("scan", weight=1.0, prompt_lens=(args.prompt_len,),
+                   max_new=(min(3 * args.max_new, fcfg.max_len
+                                - args.prompt_len),), slo="batch"),
+    ]
+    traffic = TrafficEngine(tenants, rate=args.rate,
+                            vocab=cfg.vocab_size, seed=args.seed,
+                            process=args.traffic)
+    specs = traffic.schedule(args.fleet_steps)
+    offered = traffic.offered_load(specs)
+    print(f"[serve] fleet arch={cfg.name} pods={fcfg.n_pods} "
+          f"({fcfg.prefill_per_pod}P+{fcfg.decode_per_pod}D x "
+          f"{fcfg.num_slots} slots) router={fcfg.router} "
+          f"admission={fcfg.admission}")
+    print(f"[serve]   offered: {offered['requests']} requests over "
+          f"{args.fleet_steps} steps ({args.traffic}, rate {args.rate}) "
+          f"by class {offered['by_slo']}")
+    rep = fleet.run(specs)
+    lat = rep["latency"]
+    print(f"[serve]   {rep['completed']}/{rep['offered']} completed, "
+          f"{rep['shed']} shed, {rep['preempts']} preempted "
+          f"({rep['resumes']} resumed) in {rep['elapsed_steps']} steps")
+    print(f"[serve]   TTFD p50/p99 {lat['ttfd_p50_steps']:.1f}/"
+          f"{lat['ttfd_p99_steps']:.1f} steps "
+          f"({lat['ttfd_p50_model_s'] * 1e6:.1f}/"
+          f"{lat['ttfd_p99_model_s'] * 1e6:.1f} us modeled); e2e p99 "
+          f"{lat['e2e_p99_steps']:.1f} steps; goodput "
+          f"{rep['goodput']:.2f} ({rep['goodput_per_step']:.3f}/step)")
+    for name, b in sorted(rep["by_class"].items()):
+        print(f"[serve]     {name:12s} {b['completed']}/{b['offered']} "
+              f"done, p99 TTFD {b['ttfd_p99_steps']:.1f} steps, "
+              f"goodput {b['goodput']:.2f}")
+    wire = rep["wire"]
+    print(f"[serve]   wire: {wire['bytes_migrated']} B migrated, "
+          f"{wire['bytes_cross_pod']} B cross-pod, "
+          f"{wire['bytes_wire_saved']} B saved by residency; router "
+          f"{rep['router']}")
+    if "proxy" in rep:
+        print(f"[serve]   proxy ring: {rep['proxy']['delivered']} messages, "
+              f"{rep['proxy']['backpressure']} backpressure drains")
+
+
 def main():
+    from repro.serve.frontend.env import FleetEnv, load_fleet_env
+    # a malformed ISHMEM_FLEET_* variable must only fail runs that use the
+    # fleet — other serve modes ignore every fleet knob
+    try:
+        fenv, fenv_err = load_fleet_env(), None
+    except ValueError as e:
+        fenv, fenv_err = FleetEnv(), e
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--batch", type=int, default=4)
@@ -181,10 +257,12 @@ def main():
                     help="modeled wire latency in scheduler steps before a "
                          "migration's signal is polled (streamed closes "
                          "scale it by the final installment's share)")
-    ap.add_argument("--stream-chunks", type=int, default=0, metavar="BLOCKS",
+    ap.add_argument("--stream-chunks", type=int, default=None,
+                    metavar="BLOCKS",
                     help="chunked prefill streaming: put BLOCKS filled "
                          "blocks on the wire per scheduler step mid-prefill "
-                         "(0 = whole-prefill migration)")
+                         "(0 = whole-prefill migration; --fleet defaults to "
+                         "ISHMEM_FLEET_STREAM_CHUNKS)")
     ap.add_argument("--shared-prefix", action="store_true",
                     help="serve every request as a sample of one shared "
                          "prompt: prefix blocks are mapped (incref), not "
@@ -195,7 +273,37 @@ def main():
     ap.add_argument("--cross-pod", action="store_true",
                     help="decode PEs in a second pod: dcn tier, migrations "
                          "route through the host proxy ring")
+    # --- cluster frontend (fleet) ----------------------------------------
+    ap.add_argument("--fleet", action="store_true",
+                    help="cluster frontend: open-loop traffic over N pods "
+                         "with SLO admission + routing (DESIGN.md §10); "
+                         "defaults come from the ISHMEM_FLEET_* env vars")
+    ap.add_argument("--pods", type=int, default=fenv.pods)
+    ap.add_argument("--pod-prefill", type=int, default=1,
+                    help="prefill PEs per pod")
+    ap.add_argument("--pod-decode", type=int, default=2,
+                    help="decode PEs per pod")
+    ap.add_argument("--fleet-steps", type=int, default=24,
+                    help="open-loop arrival window in scheduler steps "
+                         "(the run drains past it)")
+    ap.add_argument("--rate", type=float, default=0.8,
+                    help="offered load, requests per step fleet-wide")
+    ap.add_argument("--traffic", choices=("poisson", "bursty"),
+                    default="poisson", help="arrival process")
+    ap.add_argument("--router", choices=("random", "round_robin",
+                                         "least_loaded", "affinity"),
+                    default=fenv.router)
+    ap.add_argument("--admission", choices=("slo", "fcfs"),
+                    default=fenv.admission,
+                    help="SLO deadline-class policy vs the FCFS baseline")
+    ap.add_argument("--queue-bound", type=int, default=fenv.queue_bound,
+                    help="per-pod queue bound before the SLO policy sheds")
+    ap.add_argument("--seed", type=int, default=fenv.seed)
     args = ap.parse_args()
+    if args.fleet and fenv_err is not None:
+        raise fenv_err
+    if args.stream_chunks is None:
+        args.stream_chunks = fenv.stream_chunks if args.fleet else 0
 
     import jax
     from repro.configs import base as cfgbase
@@ -205,7 +313,9 @@ def main():
     cfg = cfgbase.reduced(cfgbase.get_config(args.arch))
     params = model.init_params(jax.random.key(0), cfg)
 
-    if args.disagg:
+    if args.fleet:
+        _run_fleet(args, cfg, params)
+    elif args.disagg:
         _run_disagg(args, cfg, params)
     else:
         eng = Engine(cfg, params, max_len=args.prompt_len + args.max_new)

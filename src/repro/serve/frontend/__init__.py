@@ -1,0 +1,24 @@
+"""Cluster serving frontend: open-loop traffic, multi-pod routing, SLO
+admission, and fleet metrics over the disaggregated SHMEM serve stack.
+
+See DESIGN.md §10 for the architecture; the pieces compose as
+
+    TrafficEngine.schedule() --> Fleet.run() --> metrics report
+                                   |-- Router (per arrival)
+                                   |-- DisaggScheduler per pod
+                                   |       '-- SLOPolicy / FCFS hooks
+                                   '-- shared KVPool / prefix index / proxy
+"""
+from repro.serve.frontend.env import FleetEnv, load_fleet_env
+from repro.serve.frontend.fleet import Fleet, FleetConfig
+from repro.serve.frontend.metrics import collect, percentile
+from repro.serve.frontend.router import POLICIES, Pod, Router
+from repro.serve.frontend.slo import CLASSES, SLOClass, SLOPolicy, resolve
+from repro.serve.frontend.traffic import (RequestSpec, TenantSpec,
+                                          TrafficEngine)
+
+__all__ = [
+    "CLASSES", "Fleet", "FleetConfig", "FleetEnv", "POLICIES", "Pod",
+    "RequestSpec", "Router", "SLOClass", "SLOPolicy", "TenantSpec",
+    "TrafficEngine", "collect", "load_fleet_env", "percentile", "resolve",
+]

@@ -1,0 +1,207 @@
+"""Cluster fleet driver: pods + router + SLO admission over one SHMEM world.
+
+Topology: ``n_pods`` contiguous pods of ``prefill_per_pod + decode_per_pod``
+PEs each.  ``node_size`` is set to the pod size, so intra-pod migration is
+ici tier and anything crossing pods is dcn — routed through ONE shared
+:class:`~repro.core.proxy.HostProxy` ring exactly like the paper's
+reverse-offloaded inter-node ops.  All pods share:
+
+- one symmetric heap and one :class:`~repro.serve.kvpool.KVPool` (block ids
+  are cluster-wide addresses — the OpenSHMEM symmetric contract is what
+  makes cross-pod prefix pulls possible at all);
+- one prefix index (``DisaggScheduler.prefix_index``), so the router's
+  affinity policy can see which pod staged a shared prompt;
+- one :class:`~repro.serve.engine.Engine` (stateless params + jitted fns;
+  per-pod slot banks live in each scheduler).
+
+The driver is a straight open-loop clock: at every step it submits the
+arrivals the traffic schedule put there (routing each through the
+:class:`~repro.serve.frontend.router.Router`), then advances every pod's
+scheduler one step.  After the schedule runs out it drains until every
+request reaches a terminal state, then rolls the report up via
+``frontend/metrics.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core import context, teams
+from repro.core.proxy import HostProxy
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.frontend import metrics as metrics_mod
+from repro.serve.frontend import slo as slo_mod
+from repro.serve.frontend.router import Pod, Router
+from repro.serve.frontend.traffic import RequestSpec
+from repro.serve.kvpool import KVPool
+from repro.serve.kvxfer import KVMigrator
+from repro.serve.scheduler import AdmissionPolicy, DisaggScheduler
+
+#: rid namespace stride per pod — block tables and request maps are fleet-
+#: global (shared pool), so request ids must never collide across pods
+RID_STRIDE = 1_000_000
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    arch: str = "qwen3-4b"
+    n_pods: int = 2
+    prefill_per_pod: int = 1
+    decode_per_pod: int = 2
+    num_slots: int = 2
+    kv_blocks: int = 96
+    block_tokens: int = 4
+    max_streams: int = 32
+    max_len: int = 24               # decode cache length (prompt + max_new)
+    max_new: int = 4                # default decode budget
+    temperature: float = 0.0
+    stream_chunks: int = 1          # 0 = whole-prefill migration
+    shared_prefix: bool = True
+    admit_delay: int = 1
+    admission: str = "slo"          # "slo" | "fcfs"
+    queue_bound: int = 12           # per-pod SLO shed bound
+    router: str = "affinity"        # router.POLICIES
+    proxy_slots: int = 128          # host-proxy ring capacity (power of 2)
+    seed: int = 0
+
+    @property
+    def pod_size(self) -> int:
+        return self.prefill_per_pod + self.decode_per_pod
+
+    @property
+    def npes(self) -> int:
+        return self.n_pods * self.pod_size
+
+
+class Fleet:
+    """A running cluster frontend: build once, feed it arrival schedules."""
+
+    def __init__(self, fcfg: FleetConfig, *, arch_cfg=None, params=None,
+                 engine: Optional[Engine] = None,
+                 classes: Optional[Dict[str, slo_mod.SLOClass]] = None):
+        import jax
+        from repro.configs import base as cfgbase
+        from repro.models import model
+
+        self.fcfg = fcfg
+        self.classes = slo_mod.CLASSES if classes is None else classes
+        if engine is not None:
+            self.cfg = engine.cfg
+            self.engine = engine
+        else:
+            self.cfg = (arch_cfg if arch_cfg is not None
+                        else cfgbase.reduced(cfgbase.get_config(fcfg.arch)))
+            if params is None:
+                params = model.init_params(jax.random.key(0), self.cfg)
+            self.engine = Engine(self.cfg, params, max_len=fcfg.max_len)
+        # one world: pods are nodes, inter-pod traffic is dcn via the proxy
+        self.ctx, self.heap = context.init(npes=fcfg.npes,
+                                           node_size=fcfg.pod_size)
+        self.pool = KVPool.create(
+            self.heap, self.cfg, fcfg.max_len, num_blocks=fcfg.kv_blocks,
+            max_slots=fcfg.num_slots, block_tokens=fcfg.block_tokens,
+            max_streams=fcfg.max_streams)
+        self.proxy = (HostProxy(self.ctx, slots=fcfg.proxy_slots)
+                      if fcfg.n_pods > 1 else None)
+        self.prefix_index: Dict = {}
+        world = teams.world(fcfg.npes)
+        pod_teams = teams.pods_partition(
+            world, [fcfg.pod_size] * fcfg.n_pods)
+        self.pods: List[Pod] = []
+        for i, pod_team in enumerate(pod_teams):
+            pre, dec = teams.disagg_partition(pod_team, fcfg.prefill_per_pod)
+            mig = KVMigrator(self.ctx, self.pool, proxy=self.proxy)
+            sched = DisaggScheduler(
+                self.ctx, self.heap, self.engine, self.pool, mig,
+                prefill_pes=pre.pes(), decode_pes=dec.pes(),
+                num_slots=fcfg.num_slots,
+                scfg=ServeConfig(max_new_tokens=fcfg.max_new,
+                                 temperature=fcfg.temperature,
+                                 seed=fcfg.seed),
+                admit_delay_steps=fcfg.admit_delay,
+                stream_chunks=fcfg.stream_chunks,
+                shared_prefix=fcfg.shared_prefix,
+                policy=self._make_policy(),
+                prefix_index=self.prefix_index,
+                rid_base=i * RID_STRIDE)
+            self.pods.append(Pod(name=f"pod{i}", team=pod_team, prefill=pre,
+                                 decode=dec, sched=sched))
+        self.router = Router(self.pods, policy=fcfg.router,
+                             prefix_index=self.prefix_index, seed=fcfg.seed)
+        self.placements: Dict[int, tuple] = {}   # spec.idx -> (pod name, rid)
+        self.elapsed_steps = 0
+
+    def _make_policy(self) -> AdmissionPolicy:
+        if self.fcfg.admission == "slo":
+            return slo_mod.SLOPolicy(queue_bound=self.fcfg.queue_bound,
+                                     classes=self.classes)
+        if self.fcfg.admission == "fcfs":
+            return AdmissionPolicy()
+        raise ValueError(
+            f"unknown admission policy {self.fcfg.admission!r} "
+            f"(one of 'slo', 'fcfs')")
+
+    # ---------------------------------------------------------------- drive
+    def _submit(self, spec: RequestSpec, step: int) -> None:
+        pod = self.router.route(spec)
+        rid = pod.sched.submit(
+            {"tokens": spec.tokens}, max_new=spec.max_new,
+            prefix_len=spec.prefix_len, arrival_step=step, slo=spec.slo)
+        self.placements[spec.idx] = (pod.name, rid)
+
+    def done(self) -> bool:
+        return all(pod.sched.done() for pod in self.pods)
+
+    def step(self, arrivals: Optional[List[RequestSpec]] = None) -> None:
+        """One fleet step: submit this step's arrivals, advance every pod.
+
+        The heap is threaded through the pods: there is ONE symmetric
+        memory, but each scheduler evolves its ``heap`` functionally — and
+        the completion queue is fleet-shared, so a flush driven by pod B
+        may complete ops pod A submitted.  Handing each pod the canonical
+        heap and taking its result back is what makes those cross-pod
+        flushes land in the memory every other pod reads."""
+        for spec in arrivals or ():
+            self._submit(spec, self.elapsed_steps)
+        for pod in self.pods:
+            pod.sched.heap = self.heap
+            pod.sched.step()
+            self.heap = pod.sched.heap
+        self.elapsed_steps += 1
+
+    def run(self, specs: List[RequestSpec], *,
+            max_steps: int = 10_000) -> dict:
+        """Open-loop drive: play the arrival schedule, drain, report."""
+        specs = sorted(specs, key=lambda s: (s.step, s.idx))
+        i = 0
+        while i < len(specs) or not self.done():
+            if self.elapsed_steps >= max_steps:
+                raise RuntimeError(
+                    f"fleet wedged after {max_steps} steps "
+                    f"({len(specs) - i} arrivals unplayed)")
+            batch = []
+            while i < len(specs) and specs[i].step <= self.elapsed_steps:
+                batch.append(specs[i])
+                i += 1
+            self.step(batch)
+        return self.report()
+
+    def report(self) -> dict:
+        doc = metrics_mod.collect(self.pods, classes=self.classes,
+                                  elapsed_steps=self.elapsed_steps)
+        doc["router"] = dict(self.router.stats)
+        if self.proxy is not None:
+            doc["proxy"] = {
+                "ring_slots": self.proxy.ring.slots,
+                "backpressure": self.proxy.backpressure,
+                "delivered": len(self.proxy.ring.delivered),
+            }
+        return doc
+
+    def outputs(self) -> Dict[int, object]:
+        """spec.idx -> generated token list (shed requests: empty)."""
+        out = {}
+        by_pod = {pod.name: pod for pod in self.pods}
+        for idx, (pod_name, rid) in self.placements.items():
+            out[idx] = list(by_pod[pod_name].sched.requests[rid].out)
+        return out

@@ -27,6 +27,11 @@ Layout (derived from the model config once per pool):
   admission signal lands.
 - **signal** — one int32 word per slot, the ``signal_wait_until`` target of
   the migration protocol (see ``serve/kvxfer.py``).
+- **stream signals** — a small region of per-*stream* signal words
+  (``max_streams`` int32), so a chunked migration can ramp its signal while
+  it is *parked*: streamed blocks land in the pool before any decode slot is
+  bound, and the slot binds only at ``stream_close`` (DESIGN.md §10) — the
+  slot-signal word stays free for whole-prefill migrations.
 
 Block metadata (free list, ref counts, block tables) is host-side, exactly
 like the heap's own allocation metadata — the paper's "memory management
@@ -302,15 +307,18 @@ class KVPool:
     """
 
     def __init__(self, heap: SymmetricHeap, layout: KVLayout, *,
-                 num_blocks: int, max_slots: int):
+                 num_blocks: int, max_slots: int, max_streams: int = 16):
         self.layout = layout
         self.num_blocks = num_blocks
         self.max_slots = max_slots
+        self.max_streams = max_streams
         self.data = heap.calloc((num_blocks * layout.block_words,),
                                 layout.kv_dtype)
         self.tails = heap.calloc((max_slots * layout.tail_words,), "float32")
         self.headers = heap.calloc((max_slots * HEADER_WORDS,), "int32")
         self.signals = heap.calloc((max_slots,), "int32")
+        self.stream_sigs = heap.calloc((max(1, max_streams),), "int32")
+        self._stream_free: List[int] = list(range(max_streams - 1, -1, -1))
         self._refcnt: List[int] = [0] * num_blocks
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self.block_tables: Dict[int, List[int]] = {}
@@ -322,9 +330,10 @@ class KVPool:
     @classmethod
     def create(cls, heap: SymmetricHeap, cfg, max_len: int, *,
                num_blocks: int, max_slots: int,
-               block_tokens: int = 16) -> "KVPool":
+               block_tokens: int = 16, max_streams: int = 16) -> "KVPool":
         layout = build_layout(cfg, max_len, block_tokens=block_tokens)
-        return cls(heap, layout, num_blocks=num_blocks, max_slots=max_slots)
+        return cls(heap, layout, num_blocks=num_blocks, max_slots=max_slots,
+                   max_streams=max_streams)
 
     # ---------------------------------------------------------- addressing
     def block_ptr(self, block_id: int) -> SymPtr:
@@ -353,6 +362,22 @@ class KVPool:
     def sig_ptr(self, slot: int) -> SymPtr:
         return SymPtr("int32", self.signals.offset + self._check_slot(slot),
                       ())
+
+    def stream_sig_ptr(self, stream_id: int) -> SymPtr:
+        if not 0 <= stream_id < self.max_streams:
+            raise IndexError(
+                f"stream {stream_id} outside pool of {self.max_streams}")
+        return SymPtr("int32", self.stream_sigs.offset + stream_id, ())
+
+    def alloc_stream_sig(self) -> Optional[int]:
+        """Reserve a parked-stream signal word, or None when every word is
+        carried by an in-flight stream (caller keeps the request staged)."""
+        return self._stream_free.pop() if self._stream_free else None
+
+    def free_stream_sig(self, stream_id: int) -> None:
+        if stream_id in self._stream_free:
+            raise ValueError(f"double free of stream signal {stream_id}")
+        self._stream_free.append(stream_id)
 
     # ---------------------------------------------------------- accounting
     def _alloc_free(self, n_blocks: int) -> Optional[List[int]]:
@@ -474,6 +499,7 @@ class KVPool:
             "utilization": used / self.num_blocks if self.num_blocks else 0.0,
             "requests_resident": len(self.block_tables),
             "blocks_shared": sum(1 for r in self._refcnt if r > 1),
+            "streams_active": self.max_streams - len(self._stream_free),
         }
         if heap is not None:
             out["heap"] = heap.stats()

@@ -30,6 +30,14 @@ The hand-off protocol for one prefill (DESIGN.md §8, streamed form §9):
    previous chunk's queue prefix while the next chunk's prefill compute
    runs — migration hides under prefill exactly as the paper's
    device-initiated pipelines hide communication inside kernels.
+
+   Streams are *slot-less* while their blocks drain: ``open_stream`` may
+   carry a pool *stream-signal* word (``KVPool.stream_sig_ptr``) instead of
+   a decode slot's signal, so the streamed blocks park in the pool with no
+   decode slot held.  The slot binds only at ``stream_close`` (set
+   ``st.slot`` first), which sends just the tail + header — with one slot
+   per decode PE the slot is occupied for the final two signal increments
+   instead of the whole chunk drain (DESIGN.md §10).
 3. **admit** — the decode PE polls ``signal_wait_until(sig, ">=", expected)``
    where ``expected = blocks_sent + 2`` (every wire block + tail + header).
    Queue order makes the signal the *last* update to land, so observing it
@@ -49,6 +57,7 @@ from typing import List, Optional
 import jax.numpy as jnp
 
 from repro.core import cutover, rma, signal as signal_mod
+from repro.core.heap import SymPtr
 from repro.serve.kvpool import HEADER_WORDS, KVPool, pack_blocks, pack_tail
 
 #: signal increments beyond the data blocks: one for the tail, one for the
@@ -76,6 +85,7 @@ class MigrationReport:
     bytes_skipped: int          # shared blocks already resident at dst
     expected_signal: int
     chunks: int = 1             # wire installments (1 = whole-prefill)
+    bytes_dcn: int = 0          # wire bytes that crossed pods (proxy ring)
 
     @property
     def bytes_total(self) -> int:
@@ -84,7 +94,12 @@ class MigrationReport:
 
 @dataclasses.dataclass
 class StreamState:
-    """One in-flight chunked migration (prefill still 'computing')."""
+    """One in-flight chunked migration (prefill still 'computing').
+
+    ``slot`` may be -1 while the stream is slot-less (parked): blocks
+    accumulate against ``sig`` (a pool stream-signal word) and the slot is
+    assigned only just before ``stream_close`` sends the tail + header.
+    """
     req_id: int
     src_pe: int
     dst_pe: int
@@ -94,10 +109,12 @@ class StreamState:
     pending: List[int]          # staged blocks not yet on the wire
     n_staged: int               # payload-bearing blocks (header n_blocks)
     n_skipped: int              # resident-at-dst blocks never sent
+    sig: Optional[SymPtr] = None  # admission signal word (slot sig if None)
     sent: int = 0               # wire blocks issued so far (signal progress)
     chunks: int = 0
     runs: int = 0               # contiguous runs issued across all chunks
     final_wire: int = 0         # signal increments of the closing chunk
+    bytes_dcn: int = 0          # cross-pod wire bytes so far
 
     @property
     def expected(self) -> int:
@@ -173,16 +190,23 @@ class KVMigrator:
     # ----------------------------------------------------------- migration
     def _send_runs(self, heap, ids: List[int], sig, dst_pe: int) -> tuple:
         """Issue one signal-bearing deferred transfer per contiguous run;
-        each block is read from its home row.  Returns (heap, n_runs)."""
+        each block is read from its home row.  Returns
+        (heap, n_runs, dcn_bytes) — the last is how many of the wire bytes
+        crossed a pod boundary (shared-prefix blocks homed on another pod's
+        prefill PE travel the host-proxy ring)."""
         runs = _contiguous_runs(ids)
+        dcn = 0
         for run in runs:
             for bid in run[:-1]:
                 ptr = self.pool.block_ptr(bid)
+                home = self.pool.home_of(bid)
                 heap = rma.put_nbi(self.ctx, heap, ptr,
-                                   heap.read(ptr, self.pool.home_of(bid)),
-                                   dst_pe, src_pe=self.pool.home_of(bid),
+                                   heap.read(ptr, home),
+                                   dst_pe, src_pe=home,
                                    work_items=self.work_items)
-                self._note_block(ptr.nbytes, self.pool.home_of(bid), dst_pe)
+                self._note_block(ptr.nbytes, home, dst_pe)
+                if self.ctx.tier(home, dst_pe) == "dcn":
+                    dcn += ptr.nbytes
             last = self.pool.block_ptr(run[-1])
             home = self.pool.home_of(run[-1])
             heap = signal_mod.put_signal_nbi(
@@ -190,14 +214,18 @@ class KVMigrator:
                 len(run), signal_mod.SIGNAL_ADD, dst_pe, src_pe=home,
                 work_items=self.work_items)
             self._note_block(last.nbytes, home, dst_pe)
-        return heap, len(runs)
+            if self.ctx.tier(home, dst_pe) == "dcn":
+                dcn += last.nbytes
+        return heap, len(runs), dcn
 
     def _send_tail_header(self, heap, req_id: int, slot: int, src_pe: int,
                           dst_pe: int, prompt_len: int, first_token: int,
-                          n_staged: int):
+                          n_staged: int, sig=None):
         """Signal-bearing tail then header; the header's increment is the
-        last queue entry, i.e. the admission threshold."""
-        sig = self.pool.sig_ptr(slot)
+        last queue entry, i.e. the admission threshold.  ``sig`` overrides
+        the slot's signal word (parked streams ramp a pool stream signal)."""
+        if sig is None:
+            sig = self.pool.sig_ptr(slot)
         tail_vec = self._staged_tails.pop(req_id)
         heap = signal_mod.put_signal_nbi(
             self.ctx, heap, self.pool.tail_ptr(slot), tail_vec, sig,
@@ -221,66 +249,79 @@ class KVMigrator:
         lay = self.pool.layout
         send, n_staged, n_skipped = self._wire_plan(req_id, skip)
         tier = self.ctx.tier(src_pe, dst_pe)
-        heap, n_runs = self._send_runs(heap, send, self.pool.sig_ptr(slot),
-                                       dst_pe)
+        heap, n_runs, dcn = self._send_runs(heap, send,
+                                            self.pool.sig_ptr(slot), dst_pe)
         heap = self._send_tail_header(heap, req_id, slot, src_pe, dst_pe,
                                       prompt_len, first_token, n_staged)
+        if tier == "dcn":
+            dcn += lay.tail_words * 4 + HEADER_WORDS * 4
         report = MigrationReport(
             req_id=req_id, slot=slot, src_pe=src_pe, dst_pe=dst_pe,
             tier=tier, n_blocks=n_staged, n_wire=len(send), n_runs=n_runs,
             bytes_paged=len(send) * lay.block_bytes,
             bytes_tail=lay.tail_words * 4,
             bytes_skipped=n_skipped * lay.block_bytes,
-            expected_signal=expected_signal(len(send)))
+            expected_signal=expected_signal(len(send)), bytes_dcn=dcn)
         return heap, report
 
     # ----------------------------------------------------- chunked streaming
     def open_stream(self, req_id: int, *, src_pe: int, dst_pe: int,
                     slot: int, prompt_len: int, first_token: int,
-                    skip=frozenset()) -> StreamState:
+                    skip=frozenset(), sig_ptr=None) -> StreamState:
         """Begin a chunked migration of an already-staged request.  Pure
-        control plane: the wire plan is computed, nothing is issued yet."""
+        control plane: the wire plan is computed, nothing is issued yet.
+        Pass ``sig_ptr`` (a pool stream-signal word) with ``slot=-1`` for a
+        slot-less parked stream; the slot binds before ``stream_close``."""
         send, n_staged, n_skipped = self._wire_plan(req_id, skip)
+        if sig_ptr is None:
+            sig_ptr = self.pool.sig_ptr(slot)
         return StreamState(req_id=req_id, src_pe=src_pe, dst_pe=dst_pe,
                            slot=slot, prompt_len=prompt_len,
                            first_token=first_token, pending=send,
-                           n_staged=n_staged, n_skipped=n_skipped)
+                           n_staged=n_staged, n_skipped=n_skipped,
+                           sig=sig_ptr)
 
     def stream_chunk(self, heap, st: StreamState, chunk_blocks: int):
         """Put the next ``chunk_blocks`` filled blocks on the wire as
-        signal-bearing runs.  ``SIGNAL_ADD`` keeps the slot signal
+        signal-bearing runs.  ``SIGNAL_ADD`` keeps the stream signal
         monotonically increasing across chunks, so the decode side watches
         one word ramp toward the admission threshold."""
         take, st.pending = (st.pending[:chunk_blocks],
                             st.pending[chunk_blocks:])
-        heap, n_runs = self._send_runs(heap, take, self.pool.sig_ptr(st.slot),
-                                       st.dst_pe)
+        heap, n_runs, dcn = self._send_runs(heap, take, st.sig, st.dst_pe)
         st.sent += len(take)
         st.runs += n_runs
         st.chunks += 1
+        st.bytes_dcn += dcn
         return heap
 
     def stream_flush(self, heap, st: StreamState):
         """Drain the wire under the next chunk's prefill compute: complete
-        exactly the queue prefix this slot's signal depends on (the chunks
+        exactly the queue prefix this stream's signal depends on (the chunks
         issued so far) — other requests' in-flight traffic stays deferred,
         and the modeled comm clock charges the chunk's transfer *before*
         prefill finishes, which is where streaming's TTFD win comes from."""
         return self.ctx.pending.flush_dependency(
-            self.ctx, heap, self.pool.sig_ptr(st.slot), st.dst_pe,
-            proxy=self.proxy)
+            self.ctx, heap, st.sig, st.dst_pe, proxy=self.proxy)
 
     def stream_close(self, heap, st: StreamState) -> tuple:
         """Final installment: any remaining blocks, then tail + header.  The
         header's signal increment completes the admission threshold
-        ``sent + 2``.  Returns ``(heap, MigrationReport)``."""
+        ``sent + 2``.  A parked stream must have its decode slot bound
+        (``st.slot``) by now — the tail/header land in that slot's region
+        while the signal keeps ramping on ``st.sig``.  Returns
+        ``(heap, MigrationReport)``."""
         lay = self.pool.layout
+        if st.slot < 0:
+            raise ValueError("stream_close before a decode slot was bound")
         st.final_wire = len(st.pending) + EXTRA_SIGNALS
         if st.pending:
             heap = self.stream_chunk(heap, st, len(st.pending))
         heap = self._send_tail_header(heap, st.req_id, st.slot, st.src_pe,
                                       st.dst_pe, st.prompt_len,
-                                      st.first_token, st.n_staged)
+                                      st.first_token, st.n_staged, sig=st.sig)
+        if self.ctx.tier(st.src_pe, st.dst_pe) == "dcn":
+            st.bytes_dcn += lay.tail_words * 4 + HEADER_WORDS * 4
         report = MigrationReport(
             req_id=st.req_id, slot=st.slot, src_pe=st.src_pe,
             dst_pe=st.dst_pe, tier=self.ctx.tier(st.src_pe, st.dst_pe),
@@ -289,7 +330,7 @@ class KVMigrator:
             bytes_tail=lay.tail_words * 4,
             bytes_skipped=st.n_skipped * lay.block_bytes,
             expected_signal=expected_signal(st.sent),
-            chunks=st.chunks)
+            chunks=st.chunks, bytes_dcn=st.bytes_dcn)
         return heap, report
 
     def _note_block(self, nbytes: int, src_pe: int, dst_pe: int) -> None:
@@ -319,21 +360,24 @@ class KVMigrator:
         return len(self.ctx.pending)
 
     # ----------------------------------------------------------- admission
-    def try_admit(self, heap, slot: int, dst_pe: int, expected: int):
+    def try_admit(self, heap, slot: int, dst_pe: int, expected: int, *,
+                  sig_ptr=None):
         """Signal-gated admission: returns ``(heap, header|None)``.  The
         wait is the completion point — observing ``sig >= expected`` forces
         the queue prefix the signal depends on, which includes every data
-        block of this request (data-before-flag)."""
+        block of this request (data-before-flag).  ``sig_ptr`` overrides
+        the slot signal for parked streams."""
+        if sig_ptr is None:
+            sig_ptr = self.pool.sig_ptr(slot)
         if self.proxy is not None:
-            # cross-pod: complete ONLY the queue prefix this slot's signal
-            # depends on, through the host-proxy ring machinery — other
-            # requests' in-flight migrations stay deferred (their wire cost
-            # is not charged to this admission)
+            # cross-pod: complete ONLY the queue prefix this request's
+            # signal depends on, through the host-proxy ring machinery —
+            # other requests' in-flight migrations stay deferred (their wire
+            # cost is not charged to this admission)
             heap = self.ctx.pending.flush_dependency(
-                self.ctx, heap, self.pool.sig_ptr(slot), dst_pe,
-                proxy=self.proxy)
+                self.ctx, heap, sig_ptr, dst_pe, proxy=self.proxy)
         heap, _, ok = signal_mod.signal_wait_until(
-            self.ctx, heap, self.pool.sig_ptr(slot), dst_pe, "ge", expected)
+            self.ctx, heap, sig_ptr, dst_pe, "ge", expected)
         if not bool(ok):
             return heap, None
         hdr = [int(v) for v in heap.read(self.pool.header_ptr(slot), dst_pe)]
@@ -358,5 +402,8 @@ class KVMigrator:
     def reset_slot(self, heap, slot: int, pe: int):
         """Re-arm a slot for its next request: zero the signal word (a local
         store on the decode PE)."""
-        return rma.p(self.ctx, heap, self.pool.sig_ptr(slot), 0, pe,
-                     src_pe=pe)
+        return self.reset_signal(heap, self.pool.sig_ptr(slot), pe)
+
+    def reset_signal(self, heap, sig_ptr, pe: int):
+        """Zero an arbitrary signal word (recycled parked-stream signals)."""
+        return rma.p(self.ctx, heap, sig_ptr, 0, pe, src_pe=pe)

@@ -91,6 +91,14 @@ class PagedDecodeView:
             return 0
         return self.pool.release_ids(list(sm.cow.values()))
 
+    def detach_keep(self, slot: int) -> Dict[int, int]:
+        """Disarm a *preempted* slot WITHOUT releasing its un-triggered COW
+        reservations — the request keeps decoding later, so the reserves
+        (and their references) travel with it and re-arm at resume via
+        ``attach(cow=...)``.  Returns that surviving cow map."""
+        sm = self.slots.pop(slot, None)
+        return {} if sm is None else dict(sm.cow)
+
     def table_of(self, slot: int) -> List[int]:
         return self.pool.blocks_of(self.slots[slot].req_id)
 

@@ -7,23 +7,44 @@ decode slots, paged decode straight out of the block pool
 (``serve/paged_attn.py``), shared-prefix block reuse with copy-on-write,
 slot rotation mid-flight, and refcount-correct eviction back to the pool.
 
-Request state machine (DESIGN.md §9):
+Request state machine (DESIGN.md §9, frontend extensions §10):
 
     QUEUED --prefill+stage--> STAGED --migrate(nbi)-----------> MIGRATING
-        |                       \\--open_stream--> STREAMING --close--/
-        |                                            (chunk k flushes under
-        |                                             chunk k+1's compute)
+        |                       \\--open_stream--> STREAMING --> PARKED
+        |                                 (chunks drain slot-less;   |
+        |                                  slot binds at close ------/
+        |                                  tail+header -> MIGRATING)
+        |--policy shed--> SHED
         --signal >= threshold--> DECODING --max_new/eos--> FINISHED
-                                     \\--evict: refs dropped, slot re-armed
+                 |   ^               \\--evict: refs dropped, slot re-armed
+        policy   v   | slot frees
+             PREEMPTED (KV parked in the pool, slot surrendered)
+
+Admission is *pluggable*: every point where the scheduler chooses what to
+run next — shed-at-submit, which queued request prefills, the order slot
+waiters bind, and whether a decoding request is preempted to free a slot —
+consults an :class:`AdmissionPolicy`.  The default is strict FCFS with no
+shedding and no preemption (the A/B baseline); ``serve/frontend/slo.py``
+implements deadline-class scheduling on the same hooks.
+
+Preemption parks a DECODING request back into the pool: its paged KV
+already lives there (decode writes back block-wise), so only the little
+non-paged tail (SSM states, ring positions, cross-KV) is snapshotted
+host-side; the slot is surrendered and the request re-binds a slot on the
+same decode PE later, resuming at its exact cursor — under greedy decoding
+the resumed stream is bitwise-identical to an uninterrupted run (property-
+tested in ``tests/test_fleet.py``).
 
 One ``step()`` advances every stage once — the order (stream, prefill,
-admit, decode) means a migration issued this step stays *pending* (deferred
-nbi traffic) while decode keeps stepping resident requests, and a streaming
-request's previous chunk drains while its next chunk "computes": migration
-overlaps prefill AND decode exactly the way the completion engine overlaps
-any nbi transfer.  The admission flush only pays for what is still in
-flight — under streaming that is just the final chunk, which is the
-time-to-first-decode win ``stats.ttfd_model_s`` measures.
+admit, resume, decode) means a migration issued this step stays *pending*
+(deferred nbi traffic) while decode keeps stepping resident requests, and a
+streaming request's previous chunk drains while its next chunk "computes":
+migration overlaps prefill AND decode exactly the way the completion engine
+overlaps any nbi transfer.  Streams are slot-less while draining (blocks
+park in the pool against a stream-signal word); the admission flush only
+pays for what is still in flight — under streaming that is just the tail +
+header of the close, which is the time-to-first-decode win
+``stats.ttfd_model_s`` measures, now even at one slot per decode PE.
 
 The scheduler is the control plane a real deployment runs host-side; the
 data plane (block payloads, signals, headers) moves exclusively through the
@@ -43,8 +64,12 @@ from repro.serve.engine import Engine, ServeConfig
 from repro.serve.kvxfer import EXTRA_SIGNALS, KVMigrator, StreamState
 from repro.serve.paged_attn import PagedDecodeView
 
-QUEUED, STAGED, STREAMING, MIGRATING, DECODING, FINISHED = (
-    "queued", "staged", "streaming", "migrating", "decoding", "finished")
+(QUEUED, STAGED, STREAMING, PARKED, MIGRATING, DECODING, PREEMPTED,
+ FINISHED, SHED) = ("queued", "staged", "streaming", "parked", "migrating",
+                    "decoding", "preempted", "finished", "shed")
+
+#: terminal request states (``done()`` waits for every request to reach one)
+TERMINAL = (FINISHED, SHED)
 
 
 @dataclasses.dataclass
@@ -60,9 +85,13 @@ class Request:
     expected_sig: int = 0
     out: List[int] = dataclasses.field(default_factory=list)
     submit_step: int = -1
+    arrival_step: int = -1          # frontend arrival (queue time counts)
+    prefill_step: int = -1
     migrate_step: int = -1
     admit_step: int = -1
+    finish_step: int = -1
     admit_ready_step: int = 0       # modeled wire latency gate
+    slo: Optional[object] = None    # frontend deadline class (policy-owned)
     # prefill result parked here while the request waits for pool blocks, so
     # a stall never re-runs the model
     prefill_cache: Optional[dict] = None
@@ -72,9 +101,18 @@ class Request:
     shared_ids: List[int] = dataclasses.field(default_factory=list)
     cow_plan: Dict[int, int] = dataclasses.field(default_factory=dict)
     stream: Optional[StreamState] = None
-    # modeled comm clock when the migration finished issuing (whole-prefill:
-    # the staging step; streamed: stream close) — t_admit - t_submit is the
-    # wire window admission still has to wait out
+    park_sig: int = -1              # pool stream-signal id while slot-less
+    # preemption snapshot: decode cursor + the non-paged tail (the paged KV
+    # stays in the pool, written back block-wise every step)
+    resume_pos: int = -1
+    resume_tok: int = -1
+    park_tail: Optional[object] = None
+    preemptions: int = 0
+    # modeled comm clock at arrival / when the migration finished issuing
+    # (whole-prefill: the staging step; streamed: stream close) — t_admit -
+    # t_submit is the wire window admission still has to wait out, t_admit -
+    # t_arrival the frontend-visible TTFD including queue time
+    t_arrival: float = 0.0
     t_submit: float = 0.0
     t_admit: float = 0.0
 
@@ -98,6 +136,36 @@ class PrefixEntry:
     refs: int = 0                   # live requests mapping these blocks
 
 
+class AdmissionPolicy:
+    """Pluggable admission/scheduling policy — strict FCFS baseline.
+
+    The scheduler calls these hooks at every choice point; overriding them
+    (``serve/frontend/slo.py``) turns the same machinery into a deadline-
+    class scheduler without touching the migration protocol.  The baseline
+    never sheds, never reorders, never preempts — the A/B control.
+    """
+
+    def admit(self, req: Request, queue_len: int) -> bool:
+        """Gate at submit time; False sheds the request (state SHED)."""
+        return True
+
+    def select(self, queue) -> int:
+        """Index into the queue of the next request to prefill."""
+        return 0
+
+    def waiting_order(self, reqs: List[Request]) -> List[Request]:
+        """Order in which slot waiters (parked streams, preempted
+        requests) try to bind freed slots."""
+        return list(reqs)
+
+    def preempt_victim(self, req: Request,
+                       decoding: List[Request]) -> Optional[Request]:
+        """A slot-starved ``req`` may evict one of ``decoding``; return the
+        victim or None.  Only paged decode can preempt (the KV must live in
+        the pool, not the slot bank)."""
+        return None
+
+
 @dataclasses.dataclass
 class SchedStats:
     prefills: int = 0
@@ -107,15 +175,27 @@ class SchedStats:
     decode_steps: int = 0
     decode_tokens: int = 0
     bytes_migrated: int = 0
+    bytes_cross_pod: int = 0        # wire bytes that crossed pods (dcn tier)
     stalled_on_pool: int = 0        # prefills deferred because no free blocks
     stalled_on_slots: int = 0       # migrations deferred because no free slot
+    stalled_on_streams: int = 0     # stream signals exhausted (parked storm)
     stream_chunks: int = 0          # mid-prefill wire installments issued
     prefix_hits: int = 0            # requests that mapped an existing prefix
     blocks_prefix_shared: int = 0   # physical blocks reused via incref
     bytes_wire_saved: int = 0       # resident-at-dst blocks never re-sent
     cow_copies: int = 0             # divergent writes that copied a block
+    sheds: int = 0                  # requests rejected by the policy
+    preempts: int = 0               # decoding requests parked back to pool
+    resumes: int = 0                # preempted requests re-bound to a slot
     ttfd_steps: List[int] = dataclasses.field(default_factory=list)
     ttfd_model_s: List[float] = dataclasses.field(default_factory=list)
+    # frontend-visible latencies: measured from *arrival*, so queue time
+    # before prefill counts (the satellite fix — percentiles over these)
+    queue_delay_steps: List[int] = dataclasses.field(default_factory=list)
+    ttfd_arrival_steps: List[int] = dataclasses.field(default_factory=list)
+    ttfd_arrival_model_s: List[float] = dataclasses.field(
+        default_factory=list)
+    e2e_steps: List[int] = dataclasses.field(default_factory=list)
 
 
 class DisaggScheduler:
@@ -126,7 +206,10 @@ class DisaggScheduler:
                  num_slots: int, scfg: ServeConfig = ServeConfig(),
                  prefills_per_step: Optional[int] = None,
                  admit_delay_steps: int = 0, paged: bool = True,
-                 stream_chunks: int = 0, shared_prefix: bool = False):
+                 stream_chunks: int = 0, shared_prefix: bool = False,
+                 policy: Optional[AdmissionPolicy] = None,
+                 prefix_index: Optional[Dict[tuple, PrefixEntry]] = None,
+                 rid_base: int = 0):
         if num_slots > pool.max_slots:
             raise ValueError(
                 f"num_slots ({num_slots}) exceeds the pool's per-PE slot "
@@ -153,6 +236,7 @@ class DisaggScheduler:
         self.paged = paged
         self.stream_chunks = stream_chunks      # blocks per installment; 0=off
         self.shared_prefix = shared_prefix
+        self.policy = policy if policy is not None else AdmissionPolicy()
         self.views: Dict[int, PagedDecodeView] = (
             {pe: PagedDecodeView(pool, pe, num_slots) for pe in decode_pes}
             if paged else {})
@@ -160,8 +244,14 @@ class DisaggScheduler:
         self.requests: Dict[int, Request] = {}
         self.staged: deque = deque()            # blocks held, awaiting a slot
         self.streaming: List[Request] = []      # chunked migrations in flight
+        self.parked: List[Request] = []         # streams drained, no slot yet
+        self.preempted: List[Request] = []      # evicted mid-decode, resumable
         self.migrating: List[Request] = []
-        self.prefix_index: Dict[tuple, PrefixEntry] = {}
+        # fleet mode shares ONE prefix index across every pod's scheduler, so
+        # a request routed anywhere can map blocks staged by any pod (the
+        # router's affinity policy tries to keep it on the home pod)
+        self.prefix_index: Dict[tuple, PrefixEntry] = (
+            {} if prefix_index is None else prefix_index)
         # per-decode-PE slot banks (each decode PE owns num_slots slots)
         self.banks = {pe: engine.init_slots(num_slots) for pe in decode_pes}
         self.slot_req: Dict[int, List[Optional[int]]] = {
@@ -170,15 +260,20 @@ class DisaggScheduler:
         self._rr_prefill = 0
         self._rr_decode = 0
         self._step = 0
-        self._next_rid = 0
+        self._next_rid = rid_base
         self._key = jax.random.key(scfg.seed)
 
     # ------------------------------------------------------------- intake
     def submit(self, batch: dict, *, max_new: Optional[int] = None,
-               prefix_len: int = 0) -> int:
+               prefix_len: int = 0, arrival_step: Optional[int] = None,
+               t_arrival: Optional[float] = None,
+               slo: Optional[object] = None) -> int:
         """Enqueue one request ({\"tokens\": (1,S)} [+ frontend embeds]).
         ``prefix_len`` declares the first N prompt tokens shareable with
-        other requests declaring the same tokens (shared-prefix policy)."""
+        other requests declaring the same tokens (shared-prefix policy).
+        ``arrival_step``/``t_arrival`` carry the frontend arrival time so
+        latency percentiles include queue delay (defaults: now); ``slo`` is
+        an opaque deadline class the admission policy interprets."""
         if max_new is None:
             max_new = self.scfg.max_new_tokens
         S = int(batch["tokens"].shape[1])
@@ -200,10 +295,20 @@ class DisaggScheduler:
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, batch=batch, max_new=max_new,
-                      prefix_len=prefix_len if self.shared_prefix else 0)
+                      prefix_len=prefix_len if self.shared_prefix else 0,
+                      slo=slo)
         req.submit_step = self._step
-        self.queue.append(req)
+        req.arrival_step = (self._step if arrival_step is None
+                            else arrival_step)
+        req.t_arrival = (self._comm_clock() if t_arrival is None
+                         else t_arrival)
         self.requests[rid] = req
+        if not self.policy.admit(req, len(self.queue)):
+            req.state = SHED
+            req.finish_step = self._step
+            self.stats.sheds += 1
+            return rid
+        self.queue.append(req)
         return rid
 
     def _comm_clock(self) -> float:
@@ -274,7 +379,8 @@ class DisaggScheduler:
     # -------------------------------------------------------------- phases
     def _next_prefill_pe(self) -> Optional[int]:
         """Round-robin over prefill PEs not occupied by a chunked stream
-        (a streaming PE is still 'computing' its current request)."""
+        (a streaming PE is still 'computing' its current request; parked
+        streams have finished prefilling and free their PE)."""
         busy = {r.prefill_pe for r in self.streaming}
         for _ in range(len(self.prefill_pes)):
             pe = self.prefill_pes[self._rr_prefill % len(self.prefill_pes)]
@@ -286,44 +392,55 @@ class DisaggScheduler:
     def _phase_stream(self) -> None:
         """Advance every chunked migration one installment: drain the
         previous chunk's queue prefix (the wire works while this chunk's
-        prefill compute runs), then either issue the next chunk or close
-        the stream (remaining blocks + tail + header)."""
+        prefill compute runs), then either issue the next chunk or park the
+        stream — all blocks issued, waiting slot-less for a decode slot.
+        Parked streams keep draining under other requests' compute and bind
+        a slot the moment one frees (tail + header only)."""
         for req in list(self.streaming):
             st = req.stream
             self.heap = self.migrator.stream_flush(self.heap, st)
-            if len(st.pending) > self.stream_chunks:
+            if st.pending:
                 self.heap = self.migrator.stream_chunk(self.heap, st,
                                                        self.stream_chunks)
-            else:
-                self.heap, report = self.migrator.stream_close(self.heap, st)
+            if not st.pending:
                 self.streaming.remove(req)
-                total = st.sent + EXTRA_SIGNALS
-                delay = -(-self.admit_delay_steps * st.final_wire // total)
-                self._finish_migrate(req, report, delay=delay)
+                req.state = PARKED
+                self.parked.append(req)
+        for req in self.policy.waiting_order(list(self.parked)):
+            self.heap = self.migrator.stream_flush(self.heap, req.stream)
+            self._try_bind(req)
 
     def _phase_prefill(self) -> None:
         """Advance streams, retry slot assignment for already-staged
         requests, then pop queued requests onto free prefill PEs
-        (round-robin), prefill each, stage + start its migration."""
+        (round-robin), prefill each, stage + start its migration.  The
+        admission policy picks WHICH queued request runs next (FCFS
+        baseline: the head)."""
         self._phase_stream()
         for _ in range(len(self.staged)):
             self._try_migrate(self.staged.popleft())
         for _ in range(self.prefills_per_step):
             if not self.queue:
                 return
-            req = self.queue.popleft()
+            idx = self.policy.select(self.queue)
+            req = self.queue[idx]
             if req.prefill_cache is None:            # not prefilled yet
                 pe = self._next_prefill_pe()
                 if pe is None:                       # every PE mid-stream
-                    self.queue.appendleft(req)
                     return
+                del self.queue[idx]
                 req.prefill_pe = pe
+                req.prefill_step = self._step
+                self.stats.queue_delay_steps.append(
+                    self._step - req.arrival_step)
                 key = jax.random.fold_in(self._key, req.rid)
                 tok, _, cache1 = self.engine.prefill_request(
                     req.batch, key, self.scfg.temperature)
                 req.first_token = tok
                 req.prefill_cache = cache1
                 self.stats.prefills += 1
+            else:
+                del self.queue[idx]
             if not self._stage(req):                 # pool exhausted: park
                 self.stats.stalled_on_pool += 1      # the prefilled request
                 self.queue.appendleft(req)
@@ -374,9 +491,15 @@ class DisaggScheduler:
         return True
 
     def _try_migrate(self, req: Request) -> None:
-        """Assign a (decode PE, slot) and put the request on the wire —
-        one shot, or as the first installment of a chunked stream."""
+        """Put a staged request on the wire: as a slot-less parked stream
+        (streaming mode) or whole-prefill into an assigned (decode PE,
+        slot) — preempting an over-budget victim if the policy offers one."""
+        if self.stream_chunks > 0:
+            self._open_stream(req)
+            return
         pe, slot = self._pick_slot()
+        if slot is None:
+            pe, slot = self._preempt_for(req)
         if slot is None:
             self.stats.stalled_on_slots += 1
             self.staged.append(req)
@@ -384,32 +507,84 @@ class DisaggScheduler:
         req.decode_pe, req.slot = pe, slot
         self.slot_req[pe][slot] = req.rid
         skip = self._resident_skip(req, pe)
-        if self.stream_chunks > 0:
-            st = self.migrator.open_stream(
-                req.rid, src_pe=req.prefill_pe, dst_pe=pe, slot=slot,
-                prompt_len=req.prompt_len, first_token=req.first_token,
-                skip=skip)
-            if not st.pending:
-                # fully resident prefix: no blocks to stream — close now
-                # (tail + header only) instead of burning a scheduler step
-                # on a phantom zero-block installment, matching the
-                # whole-prefill path's admission timing
-                self.heap, report = self.migrator.stream_close(self.heap, st)
-                self._finish_migrate(req, report,
-                                     delay=self.admit_delay_steps)
-                return
-            req.stream = st
-            req.state = STREAMING
-            self.streaming.append(req)
-            # first installment leaves the same step its blocks "fill"
-            self.heap = self.migrator.stream_chunk(self.heap, st,
-                                                   self.stream_chunks)
-            return
         self.heap, report = self.migrator.migrate(
             self.heap, req.rid, src_pe=req.prefill_pe, dst_pe=pe,
             slot=slot, prompt_len=req.prompt_len,
             first_token=req.first_token, skip=skip)
         self._finish_migrate(req, report, delay=self.admit_delay_steps)
+
+    def _open_stream(self, req: Request) -> None:
+        """Open a slot-less chunked stream: pick the decode PE now (the
+        wire needs a destination), ramp a pool stream-signal word, and put
+        the first installment out.  No decode slot is held while the
+        blocks drain — the slot binds at close (``_try_bind``)."""
+        sig_id = self.pool.alloc_stream_sig()
+        if sig_id is None:                       # every stream word carried
+            self.stats.stalled_on_streams += 1
+            self.staged.append(req)
+            return
+        pe = self._pick_stream_pe()
+        req.decode_pe = pe
+        req.park_sig = sig_id
+        skip = self._resident_skip(req, pe)
+        st = self.migrator.open_stream(
+            req.rid, src_pe=req.prefill_pe, dst_pe=pe, slot=-1,
+            prompt_len=req.prompt_len, first_token=req.first_token,
+            skip=skip, sig_ptr=self.pool.stream_sig_ptr(sig_id))
+        req.stream = st
+        if not st.pending:
+            # fully resident prefix: nothing to stream — park immediately
+            # and bind this same step if a slot is free (tail + header
+            # only), matching the whole-prefill path's admission timing
+            req.state = PARKED
+            self.parked.append(req)
+            self._try_bind(req)
+            return
+        req.state = STREAMING
+        self.streaming.append(req)
+        # first installment leaves the same step its blocks "fill"
+        self.heap = self.migrator.stream_chunk(self.heap, st,
+                                               self.stream_chunks)
+
+    def _pick_stream_pe(self) -> int:
+        """Decode PE for a new stream: most free slots wins (ties resolved
+        round-robin) — slot-less streams pick their destination before any
+        slot exists, so this is load balancing, not slot assignment."""
+        n = len(self.decode_pes)
+        best, best_free = None, -1
+        for k in range(n):
+            pe = self.decode_pes[(self._rr_decode + k) % n]
+            free = sum(1 for o in self.slot_req[pe] if o is None)
+            if free > best_free:
+                best, best_free = pe, free
+        self._rr_decode += 1
+        return best
+
+    def _try_bind(self, req: Request) -> None:
+        """Bind a parked stream to a decode slot on its PE and close the
+        stream (tail + header — the only wire left).  Preempts a policy-
+        chosen victim when the PE is full."""
+        pe = req.decode_pe
+        slot = next((s for s, o in enumerate(self.slot_req[pe])
+                     if o is None), None)
+        if slot is None:
+            _, slot = self._preempt_for(req, pe=pe)
+        if slot is None:
+            self.stats.stalled_on_slots += 1
+            return
+        st = req.stream
+        st.slot = slot
+        req.slot = slot
+        self.slot_req[pe][slot] = req.rid
+        self.parked.remove(req)
+        self.heap, report = self.migrator.stream_close(self.heap, st)
+        # modeled wire latency scaled by the close's share of the stream —
+        # for a parked stream that is just tail + header (two words), which
+        # rounds DOWN: the admission poll may run the same step the slot
+        # binds, because the payload drained while the request was parked
+        total = st.sent + EXTRA_SIGNALS
+        delay = self.admit_delay_steps * st.final_wire // total
+        self._finish_migrate(req, report, delay=delay)
 
     def _resident_skip(self, req: Request, dst_pe: int) -> frozenset:
         """Shared blocks already migrated to this decode PE by an earlier
@@ -433,6 +608,7 @@ class DisaggScheduler:
         self.migrating.append(req)
         self.stats.migrations += 1
         self.stats.bytes_migrated += report.bytes_total
+        self.stats.bytes_cross_pod += report.bytes_dcn
         self.stats.bytes_wire_saved += report.bytes_skipped
         if self.stream_chunks > 0:
             # report.chunks counts the stream's block-carrying installments
@@ -450,6 +626,85 @@ class DisaggScheduler:
                     return pe, s
         return None, None
 
+    # ---------------------------------------------------------- preemption
+    def _preempt_for(self, req: Request, pe: Optional[int] = None):
+        """Ask the policy for an over-budget victim (optionally pinned to
+        one decode PE) and park it; returns the freed (pe, slot) or
+        (None, None).  Dense-rehydrate mode cannot preempt: the victim's KV
+        lives in the slot bank, not the pool."""
+        if not self.paged:
+            return None, None
+        # candidates are exactly the slot owners (bounded by the slot
+        # banks), not the ever-growing request history
+        decoding = [self.requests[rid]
+                    for p in ([pe] if pe is not None else self.decode_pes)
+                    for rid in self.slot_req[p] if rid is not None]
+        decoding = [r for r in decoding if r.state == DECODING]
+        victim = self.policy.preempt_victim(req, decoding)
+        if victim is None:
+            return None, None
+        assert victim.state == DECODING, "policy picked a non-decoding victim"
+        vpe, vslot = victim.decode_pe, victim.slot
+        self._preempt(victim)
+        return vpe, vslot
+
+    def _preempt(self, req: Request) -> None:
+        """Park a DECODING request back into the pool: snapshot the decode
+        cursor and the non-paged tail (the paged KV is already written back
+        to pool blocks every step), surrender the slot, keep every block
+        reference (including un-triggered COW reserves) so the KV survives
+        until resume."""
+        pe, slot = req.decode_pe, req.slot
+        bank = self.banks[pe]
+        req.resume_pos = int(bank.pos[slot])
+        req.resume_tok = int(bank.tok[slot])
+        req.park_tail = kvpool_mod.pack_tail(self.pool.layout, bank.cache,
+                                             batch_idx=slot)
+        req.cow_plan = self.views[pe].detach_keep(slot)
+        self.banks[pe] = self.engine.evict_slot(bank, slot)
+        self.heap = self.migrator.reset_slot(self.heap, slot, pe)
+        self.slot_req[pe][slot] = None
+        req.slot = -1
+        req.state = PREEMPTED
+        req.preemptions += 1
+        self.preempted.append(req)
+        self.stats.preempts += 1
+
+    def _phase_resume(self) -> None:
+        """Re-bind preempted requests onto freed slots of their decode PE
+        (their pool blocks never moved).  Runs AFTER admissions, so waiting
+        higher-priority requests grab slots first."""
+        for req in self.policy.waiting_order(list(self.preempted)):
+            pe = req.decode_pe
+            slot = next((s for s, o in enumerate(self.slot_req[pe])
+                         if o is None), None)
+            if slot is None:
+                continue
+            self.preempted.remove(req)
+            self._resume(req, slot)
+
+    def _resume(self, req: Request, slot: int) -> None:
+        """Inverse of _preempt: restore the tail into the new slot, re-arm
+        the view (no blocks are zeroed — they all carry live KV), and
+        resume decoding at the exact saved cursor."""
+        pe = req.decode_pe
+        bank = self.banks[pe]
+        cache = kvpool_mod.insert_tail(self.pool.layout, bank.cache, slot,
+                                       req.park_tail)
+        bank = dataclasses.replace(bank, cache=cache)
+        self.heap = self.views[pe].attach(self.heap, slot, req.rid,
+                                          fresh_ids=[], cow=req.cow_plan)
+        req.cow_plan = {}
+        req.park_tail = None
+        bank = self.engine.activate_slot(bank, slot, pos=req.resume_pos,
+                                         token=req.resume_tok)
+        self.banks[pe] = bank
+        self.slot_req[pe][slot] = req.rid
+        req.slot = slot
+        req.state = DECODING
+        self.stats.resumes += 1
+
+    # ----------------------------------------------------------- admission
     def _phase_admit(self) -> None:
         """Signal-threshold-gated admission: a MIGRATING request enters its
         decode slot only once ``signal_wait_until`` observes the threshold
@@ -459,12 +714,23 @@ class DisaggScheduler:
             if self._step < req.admit_ready_step:
                 still.append(req)               # wire still "in flight"
                 continue
+            sig_ptr = (self.pool.stream_sig_ptr(req.park_sig)
+                       if req.park_sig >= 0 else None)
             self.heap, hdr = self.migrator.try_admit(
-                self.heap, req.slot, req.decode_pe, req.expected_sig)
+                self.heap, req.slot, req.decode_pe, req.expected_sig,
+                sig_ptr=sig_ptr)
             if hdr is None:
                 still.append(req)
                 continue
             assert hdr["req_id"] == req.rid, "slot/header mismatch"
+            if req.park_sig >= 0:
+                # admission observed the parked stream's signal; recycle the
+                # word (zeroed on the decode PE row) for the next stream
+                self.heap = self.migrator.reset_signal(
+                    self.heap, self.pool.stream_sig_ptr(req.park_sig),
+                    req.decode_pe)
+                self.pool.free_stream_sig(req.park_sig)
+                req.park_sig = -1
             bank = self.banks[req.decode_pe]
             lay = self.pool.layout
             if self.paged:
@@ -509,6 +775,10 @@ class DisaggScheduler:
             self.stats.admissions += 1
             self.stats.ttfd_steps.append(req.admit_step - req.submit_step)
             self.stats.ttfd_model_s.append(req.t_admit - req.t_submit)
+            self.stats.ttfd_arrival_steps.append(
+                req.admit_step - req.arrival_step)
+            self.stats.ttfd_arrival_model_s.append(
+                req.t_admit - req.t_arrival)
             self._maybe_finish(req)
         self.migrating = still
 
@@ -553,6 +823,8 @@ class DisaggScheduler:
             req.out = (req.out[:req.max_new]
                        + [0] * (req.max_new - len(req.out)))
             req.state = FINISHED
+            req.finish_step = self._step
+            self.stats.e2e_steps.append(req.finish_step - req.arrival_step)
             self._evict(req)
 
     def _evict(self, req: Request) -> None:
@@ -585,17 +857,19 @@ class DisaggScheduler:
         """Advance every pipeline stage once (see module docstring)."""
         self._phase_prefill()
         self._phase_admit()
+        self._phase_resume()
         self._phase_decode()
         self._step += 1
 
     def done(self) -> bool:
         return (not self.queue and not self.staged and not self.streaming
+                and not self.parked and not self.preempted
                 and not self.migrating
-                and all(r.state == FINISHED for r in self.requests.values()))
+                and all(r.state in TERMINAL for r in self.requests.values()))
 
     def run(self, *, max_steps: int = 10_000) -> Dict[int, np.ndarray]:
-        """Drive until every submitted request finishes; returns
-        {rid: generated token ids}."""
+        """Drive until every submitted request finishes (or was shed);
+        returns {rid: generated token ids} (shed requests: empty)."""
         while not self.done():
             if self._step >= max_steps:
                 raise RuntimeError(f"scheduler wedged after {max_steps} steps")

@@ -88,3 +88,46 @@ def test_disagg_partition_on_shared_pod():
     assert dec.pes() == [12, 13, 14, 15]
     assert pre.translate(0) == 8 and dec.translate(0) == 12
     assert pre.rank_of(12) == -1 and dec.rank_of(11) == -1
+
+
+def test_pods_partition_three_pods():
+    """The fleet topology: >2 contiguous pods tile the world, each further
+    disagg-partitionable into its prefill/decode fleets."""
+    pods = teams.pods_partition(teams.world(9), [3, 3, 3])
+    assert [p.pes() for p in pods] == [[0, 1, 2], [3, 4, 5], [6, 7, 8]]
+    fleets = [teams.disagg_partition(p, 1) for p in pods]
+    assert [pre.pes() for pre, _ in fleets] == [[0], [3], [6]]
+    assert [dec.pes() for _, dec in fleets] == [[1, 2], [4, 5], [7, 8]]
+    # no pod sees another pod's PEs
+    for i, p in enumerate(pods):
+        for j, q in enumerate(pods):
+            if i != j:
+                assert all(p.rank_of(pe) == -1 for pe in q.pes())
+
+
+def test_pods_partition_uneven_and_partial():
+    """Uneven pod sizes (a fat prefill pod + thin decode pods) are legal,
+    as is leaving trailing PEs unassigned; uneven prefill/decode splits
+    inside each pod compose on top."""
+    pods = teams.pods_partition(teams.world(10), [5, 2, 2])   # PE 9 spare
+    assert [p.size for p in pods] == [5, 2, 2]
+    assert pods[2].pes() == [7, 8]
+    pre, dec = teams.disagg_partition(pods[0], 4)             # 4P + 1D
+    assert pre.pes() == [0, 1, 2, 3] and dec.pes() == [4]
+    pre, dec = teams.disagg_partition(pods[1], 1)             # 1P + 1D
+    assert pre.pes() == [5] and dec.pes() == [6]
+
+
+def test_pods_partition_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        teams.pods_partition(teams.world(8), [])               # no pods
+    with pytest.raises(ValueError):
+        teams.pods_partition(teams.world(8), [4, 0])           # empty pod
+    with pytest.raises(ValueError):
+        teams.pods_partition(teams.world(8), [5, 4])           # overflow
+    with pytest.raises(ValueError):
+        teams.pods_partition(teams.world(8), [-2, 4])          # negative
+    # a pod team of size 1 cannot be disagg-partitioned (needs both fleets)
+    solo = teams.pods_partition(teams.world(4), [1, 3])[0]
+    with pytest.raises(ValueError):
+        teams.disagg_partition(solo, 1)
