@@ -109,3 +109,34 @@ assert profiles > 0, "kvxfer telemetry produced no fitted transport profiles"
 print(f"migration overlap {ovl:.2f}x, coalescing {ratio:.1f}, "
       f"{bw:.1f} GB/s modeled, {profiles} fitted profiles -> OK")
 EOF
+
+echo "== observability smoke (tracer overhead / trace schema / online re-fit) =="
+python -m benchmarks.bench_obs --smoke BENCH_obs.json
+python - <<'EOF'
+import json
+doc = json.load(open("BENCH_obs.json"))
+ov = doc["overhead"]
+assert ov["overhead_pct"] < 2.0, \
+    f"observability work exceeds 2% of the fleet smoke wall clock " \
+    f"({ov['overhead_pct']:.2f}% of {ov['off_best_s']:.2f}s)"
+assert ov["outputs_bitwise_identical"], \
+    "tracer-on outputs diverged from tracer-off (observer effect)"
+tr = doc["trace"]
+assert tr["validation_errors"] == [], \
+    f"exported trace failed schema validation: {tr['validation_errors'][:5]}"
+assert tr["chains"] == tr["requests"] > 0 and not tr["chains_missing"], \
+    f"request lifelines missing from trace: {tr['chains_missing']}"
+assert tr["chain_gaps"] == 0, \
+    f"{tr['chain_gaps']} untraced holes in request lifelines"
+assert tr["flow_events"] % 2 == 0 and tr["flow_events"] > 0, \
+    "migration flow arrows missing or unpaired"
+rf = doc["refit"]
+assert rf["refits"] > 0, "online re-fit never fired in the smoke run"
+assert rf["decisions_changed"] >= 1, \
+    "online re-fit corrected no cutover decisions against the stale " \
+    "warm-start table"
+print(f"obs work {ov['overhead_pct']:.2f}% of wall clock, "
+      f"{tr['events']} events / {tr['chains']} lifelines validate clean, "
+      f"{rf['refits']} re-fits flipped {rf['decisions_changed']} "
+      f"decisions -> OK")
+EOF

@@ -19,6 +19,7 @@ from typing import Optional
 
 from repro.core import cutover, heap as heap_mod, pending as pending_mod, \
     teams
+from repro.obs import tracer as tracer_mod
 from repro.tune import env as env_mod, telemetry as telemetry_mod
 
 # canonical definition lives in the telemetry module; re-exported here for
@@ -39,6 +40,9 @@ class ShmemContext:
     # point (quiet/barrier/dependent signal_wait) flushes it — see pending.py
     pending: pending_mod.CompletionQueue = dataclasses.field(
         default_factory=pending_mod.CompletionQueue)
+    # span tracer (repro.obs): the shared Null tracer unless a driver
+    # attaches a recording one — hot paths guard on ``tracer.enabled``
+    tracer: tracer_mod.Tracer = tracer_mod.NULL_TRACER
 
     # ------------------------------------------------------------ topology
     def node_of(self, pe: int) -> int:

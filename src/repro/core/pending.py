@@ -211,6 +211,11 @@ class CompletionQueue:
         remainder = self.ops[keep_from:]
         coalesce = getattr(ctx.tuning, "nbi_coalesce", True)
         transfers = _combine(ops) if coalesce else [[o] for o in ops]
+        tracer = getattr(ctx, "tracer", None)
+        traced = tracer is not None and tracer.enabled
+        if traced:
+            tracer.begin("flush", "cq", "core", "cq",
+                         ops=len(ops), transfers=len(transfers))
         undrained = False
         for group in transfers:
             if undrained and not self._routes_to_proxy(group, proxy):
@@ -231,6 +236,11 @@ class CompletionQueue:
         self.ops = remainder
         for o in ops:
             _retag_marker(o, "done")
+        if traced:
+            tracer.end("flush", "cq", "core", "cq",
+                       bytes=sum(_group_nbytes(g) for g in transfers))
+            tracer.counter("cq_pending", "core", "cq",
+                           pending=len(remainder))
         return heap
 
     @staticmethod
@@ -257,6 +267,8 @@ class CompletionQueue:
                        head.tier, head.work_items)
             return heap.write(head.ptr, head.pe, new), False
         # PUT: materialize the coalesced payload
+        tracer = getattr(ctx, "tracer", None)
+        traced = tracer is not None and tracer.enabled
         ptr, value = _merge_puts(group)
         if head.tier == "dcn" and proxy is not None:
             if proxy.ring_full():
@@ -268,7 +280,14 @@ class CompletionQueue:
                 # a legal completion schedule.
                 heap = proxy.drain(heap)
                 proxy.backpressure += 1
+                if traced:
+                    tracer.instant("ring_backpressure", "cq", "core", "cq",
+                                   pe=head.pe)
             proxy.put(ptr, value, head.pe)    # ring message; drained once
+            if traced:
+                tracer.instant("xfer", "cq", "core", "cq", path="proxy",
+                               tier="dcn", nbytes=ptr.nbytes, pe=head.pe,
+                               coalesced=len(group))
             return heap, True
         wi = max(o.work_items for o in group)
         if head.tier == "dcn":
@@ -278,6 +297,10 @@ class CompletionQueue:
                                        tier=head.tier, hw=ctx.hw,
                                        tuning=ctx.tuning)
         ctx.record(head.op, ptr.nbytes, path, head.tier, wi)
+        if traced:
+            tracer.instant("xfer", "cq", "core", "cq", path=path,
+                           tier=head.tier, nbytes=ptr.nbytes, pe=head.pe,
+                           work_items=wi, coalesced=len(group))
         return write_row(ctx, heap, ptr, head.pe, value), False
 
 

@@ -86,6 +86,44 @@ def _make_batch(cfg, key, batch: int, prompt_len: int) -> dict:
     return b
 
 
+def _make_obs(args):
+    """Build the observability bundle from ISHMEM_OBS_* merged with the CLI
+    flags (CLI wins).  Returns (obs|None, trace_path, metrics_path)."""
+    from repro import obs as obs_mod
+
+    cfg = obs_mod.load_obs_env()
+    trace = bool(args.trace) or cfg.trace
+    metrics = bool(args.metrics) or cfg.metrics
+    refit = args.refit if args.refit is not None else cfg.refit_period
+    if not (trace or metrics or refit > 0):
+        return None, None, None
+    obs = obs_mod.Obs(
+        trace=trace, metrics=metrics, refit_period=refit,
+        refit_min_samples=(args.refit_min_samples
+                           if args.refit_min_samples is not None
+                           else cfg.refit_min_samples),
+        trace_limit=cfg.trace_limit)
+    return obs, (args.trace or cfg.trace_path), \
+        (args.metrics or cfg.metrics_path)
+
+
+def _emit_obs(obs, trace_path, metrics_path) -> None:
+    if obs is None:
+        return
+    if trace_path:
+        doc = obs.write_trace(trace_path)
+        print(f"[serve]   trace: {len(doc['traceEvents'])} events -> "
+              f"{trace_path} (load in ui.perfetto.dev)")
+    if metrics_path:
+        obs.write_metrics(metrics_path)
+        print(f"[serve]   metrics: {len(obs.metrics.series)} step rows -> "
+              f"{metrics_path}")
+    if obs.refitter is not None and obs.refitter.history:
+        n = obs.refitter.decisions_changed()
+        print(f"[serve]   online re-fit: {len(obs.refitter.history)} "
+              f"re-fit(s), {n} cutover decision(s) changed")
+
+
 def _run_disagg(args, cfg, params) -> None:
     import jax
     from repro.core import context, teams
@@ -98,6 +136,9 @@ def _run_disagg(args, cfg, params) -> None:
     npes = args.prefill_pes + args.decode_pes
     node_size = args.prefill_pes if args.cross_pod else npes
     ctx, heap = context.init(npes=npes, node_size=node_size)
+    obs, trace_path, metrics_path = _make_obs(args)
+    if obs is not None:
+        obs.attach(ctx)
     pre, dec = teams.disagg_partition(teams.world(npes), args.prefill_pes)
     max_len = args.prompt_len + args.max_new
     eng = Engine(cfg, params, max_len=max_len)
@@ -155,6 +196,7 @@ def _run_disagg(args, cfg, params) -> None:
           f"{ps['heap']['bytes_free']} B free")
     for rid in sorted(outs)[:4]:
         print(f"[serve]   req {rid}: {outs[rid].tolist()}")
+    _emit_obs(obs, trace_path, metrics_path)
 
 
 def _run_fleet(args, cfg, params) -> None:
@@ -173,7 +215,8 @@ def _run_fleet(args, cfg, params) -> None:
         admit_delay=args.admit_delay, admission=args.admission,
         queue_bound=args.queue_bound, router=args.router, seed=args.seed)
     engine = Engine(cfg, params, max_len=fcfg.max_len)
-    fleet = Fleet(fcfg, engine=engine)
+    obs, trace_path, metrics_path = _make_obs(args)
+    fleet = Fleet(fcfg, engine=engine, obs=obs)
     tenants = [
         TenantSpec("chat", weight=2.0, prompt_lens=(args.prompt_len,),
                    max_new=(args.max_new,), slo="interactive"),
@@ -219,6 +262,7 @@ def _run_fleet(args, cfg, params) -> None:
     if "proxy" in rep:
         print(f"[serve]   proxy ring: {rep['proxy']['delivered']} messages, "
               f"{rep['proxy']['backpressure']} backpressure drains")
+    _emit_obs(obs, trace_path, metrics_path)
 
 
 def main():
@@ -299,6 +343,22 @@ def main():
     ap.add_argument("--queue-bound", type=int, default=fenv.queue_bound,
                     help="per-pod queue bound before the SLO policy sheds")
     ap.add_argument("--seed", type=int, default=fenv.seed)
+    # --- observability (repro.obs; defaults from ISHMEM_OBS_*) ------------
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="record causal spans and write a Chrome-trace/"
+                         "Perfetto JSON (tracks = pods/PEs, async request "
+                         "lifelines, migration flow arrows)")
+    ap.add_argument("--metrics", metavar="OUT.json", default=None,
+                    help="per-fleet-step metrics time series (heap "
+                         "fragmentation, ring occupancy, pool residency, "
+                         "per-class goodput)")
+    ap.add_argument("--refit", type=int, default=None, metavar="STEPS",
+                    help="online tuner re-fit period in fleet steps: re-run "
+                         "the estimator over live telemetry and hot-swap "
+                         "the cutover table mid-run (0 = off)")
+    ap.add_argument("--refit-min-samples", type=int, default=None,
+                    help="minimum retained telemetry samples before a due "
+                         "re-fit runs")
     args = ap.parse_args()
     if args.fleet and fenv_err is not None:
         raise fenv_err

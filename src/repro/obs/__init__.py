@@ -1,0 +1,116 @@
+"""Fleet-wide observability: causal spans, Chrome-trace export, metrics
+time series, and online tuner re-fit (DESIGN.md §11).
+
+The one-stop entry point is :class:`Obs` — a bundle of (tracer, metrics
+registry, refitter config) that the fleet driver and launchers thread
+through the stack:
+
+    obs = Obs(trace=True, refit_period=50)
+    fleet = Fleet(fcfg, obs=obs)          # installs tracer on fleet.ctx
+    fleet.run(specs)
+    obs.write_trace("out.json")           # load in ui.perfetto.dev
+
+Everything is opt-in: with no ``Obs`` (or ``Obs()`` with all features off)
+the context keeps the :data:`~repro.obs.tracer.NULL_TRACER` and runs are
+bitwise-identical to the uninstrumented stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.obs.env import ObsConfig, load_obs_env
+from repro.obs.export import (chrome_trace, request_chains, validate,
+                              write_chrome_trace)
+from repro.obs.metrics import MetricsRegistry, sample_fleet
+from repro.obs.refit import OnlineRefitter, RefitEvent
+from repro.obs.tracer import NULL_TRACER, SpanTracer, TraceEvent, Tracer
+
+__all__ = [
+    "Obs", "ObsConfig", "load_obs_env",
+    "Tracer", "SpanTracer", "TraceEvent", "NULL_TRACER",
+    "MetricsRegistry", "sample_fleet",
+    "OnlineRefitter", "RefitEvent",
+    "chrome_trace", "write_chrome_trace", "validate", "request_chains",
+]
+
+
+class Obs:
+    """Observability bundle a driver attaches to a run.
+
+    Parameters mirror :class:`ObsConfig`; :meth:`from_env` builds one from
+    the ``ISHMEM_OBS_*`` variables.  ``attach(ctx)`` installs the tracer on
+    a context and (when a re-fit period is set) creates the
+    :class:`OnlineRefitter` against it.
+    """
+
+    def __init__(self, *, trace: bool = False, metrics: bool = False,
+                 refit_period: int = 0, refit_min_samples: int = 64,
+                 trace_limit: int = 1 << 20):
+        self.tracer = SpanTracer(max_events=trace_limit) if trace \
+            else NULL_TRACER
+        self.metrics = MetricsRegistry() if metrics else None
+        self.refit_period = refit_period
+        self.refit_min_samples = refit_min_samples
+        self.refitter: Optional[OnlineRefitter] = None
+
+    @classmethod
+    def from_env(cls, cfg: Optional[ObsConfig] = None) -> "Obs":
+        cfg = load_obs_env() if cfg is None else cfg
+        return cls(trace=cfg.trace, metrics=cfg.metrics,
+                   refit_period=cfg.refit_period,
+                   refit_min_samples=cfg.refit_min_samples,
+                   trace_limit=cfg.trace_limit)
+
+    @classmethod
+    def from_config(cls, cfg: ObsConfig) -> "Obs":
+        return cls.from_env(cfg)
+
+    # ------------------------------------------------------------- wiring
+    def attach(self, ctx) -> None:
+        """Install the tracer on a context and arm the refit loop."""
+        ctx.tracer = self.tracer
+        if self.refit_period > 0:
+            self.refitter = OnlineRefitter(
+                ctx, period_steps=self.refit_period,
+                min_samples=self.refit_min_samples, tracer=self.tracer)
+
+    # ------------------------------------------------- fleet step hooks
+    def begin_step(self, step: int) -> None:
+        if self.tracer.enabled:
+            self.tracer.clock.set_step(step)
+            self.tracer.begin("step", "fleet", "fleet", "steps", step=step)
+
+    def end_step(self, fleet) -> None:
+        if self.refitter is not None:
+            self.refitter.maybe_refit(fleet.elapsed_steps)
+        if self.metrics is not None:
+            sample_fleet(self.metrics, fleet, tracer=self.tracer)
+        if self.tracer.enabled:
+            self.tracer.end("step", "fleet", "fleet", "steps")
+
+    # ------------------------------------------------------------- output
+    def write_trace(self, path: str) -> dict:
+        if not self.tracer.enabled:
+            raise RuntimeError("tracing was not enabled on this Obs")
+        return write_chrome_trace(self.tracer, path)
+
+    def write_metrics(self, path: str) -> dict:
+        if self.metrics is None:
+            raise RuntimeError("metrics were not enabled on this Obs")
+        return self.metrics.write(path)
+
+    def summary(self) -> dict:
+        """Small JSON-able roll-up for benchmark emission."""
+        out = {}
+        if self.tracer.enabled:
+            out["trace_events"] = len(self.tracer.events)
+            out["trace_dropped"] = self.tracer.dropped
+        if self.metrics is not None:
+            out["metrics_series_rows"] = len(self.metrics.series)
+        if self.refitter is not None:
+            out["refits"] = len(self.refitter.history)
+            out["refit_decisions_changed"] = self.refitter.decisions_changed()
+            out["refit_events"] = [ev.to_json()
+                                   for ev in self.refitter.history]
+        return out

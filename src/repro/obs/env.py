@@ -1,0 +1,96 @@
+"""``ISHMEM_OBS_*`` environment surface — observability's init-time knobs.
+
+Mirrors the ``ISHMEM_*`` convention from ``repro.tune.env``: everything
+defaults to *off* (Null tracer, no metrics, no re-fit), so an unconfigured
+run is bitwise-identical to one built before this subsystem existed.
+
+===============================  ============================================
+``ISHMEM_OBS_TRACE``             ``1`` (collect in memory) or a path —
+                                 enable the span tracer; a path also writes
+                                 the Chrome-trace JSON there at shutdown
+``ISHMEM_OBS_METRICS``           ``1`` or a path — per-fleet-step metrics
+                                 registry (counters/gauges/histograms)
+``ISHMEM_OBS_REFIT``             re-fit period in fleet steps (``0``/unset =
+                                 online re-fit off)
+``ISHMEM_OBS_REFIT_MIN_SAMPLES`` minimum retained telemetry samples before a
+                                 due re-fit runs (default 64)
+``ISHMEM_OBS_TRACE_LIMIT``       tracer event-buffer bound (default 2^20);
+                                 accepts K/M suffixes
+===============================  ============================================
+
+CLI flags on ``launch/serve.py`` (``--trace``/``--metrics``/``--refit``)
+override the environment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Mapping, Optional
+
+from repro.tune.env import parse_bytes
+
+PREFIX = "ISHMEM_OBS_"
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    trace: bool = False
+    trace_path: Optional[str] = None
+    metrics: bool = False
+    metrics_path: Optional[str] = None
+    refit_period: int = 0               # fleet steps; 0 = off
+    refit_min_samples: int = 64
+    trace_limit: int = 1 << 20
+
+    @property
+    def enabled(self) -> bool:
+        return self.trace or self.metrics or self.refit_period > 0
+
+
+def _flag_or_path(val: Optional[str]) -> tuple:
+    """``None``/``0`` -> (False, None); ``1`` -> (True, None);
+    anything else -> (True, path)."""
+    if val is None:
+        return False, None
+    s = val.strip()
+    if s in ("0", "", "off", "false", "no"):
+        return False, None
+    if s in ("1", "on", "true", "yes"):
+        return True, None
+    return True, s
+
+
+def load_obs_env(environ: Optional[Mapping[str, str]] = None) -> ObsConfig:
+    env = os.environ if environ is None else environ
+
+    def get(name: str) -> Optional[str]:
+        val = env.get(PREFIX + name)
+        return val if val not in (None, "") else None
+
+    trace, trace_path = _flag_or_path(get("TRACE"))
+    metrics, metrics_path = _flag_or_path(get("METRICS"))
+    refit = get("REFIT")
+    try:
+        refit_period = int(refit) if refit is not None else 0
+    except ValueError:
+        raise ValueError(f"ISHMEM_OBS_REFIT: expected a step count, "
+                         f"got {refit!r}") from None
+    if refit_period < 0:
+        raise ValueError("ISHMEM_OBS_REFIT must be >= 0")
+    min_samples = get("REFIT_MIN_SAMPLES")
+    try:
+        refit_min = int(min_samples) if min_samples is not None else 64
+    except ValueError:
+        raise ValueError(f"ISHMEM_OBS_REFIT_MIN_SAMPLES: expected an "
+                         f"integer, got {min_samples!r}") from None
+    limit = get("TRACE_LIMIT")
+    try:
+        trace_limit = parse_bytes(limit) if limit is not None else 1 << 20
+    except ValueError:
+        raise ValueError(f"ISHMEM_OBS_TRACE_LIMIT: expected a count like "
+                         f"65536/1M, got {limit!r}") from None
+    return ObsConfig(trace=trace, trace_path=trace_path,
+                     metrics=metrics, metrics_path=metrics_path,
+                     refit_period=refit_period,
+                     refit_min_samples=refit_min,
+                     trace_limit=trace_limit)

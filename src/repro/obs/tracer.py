@@ -1,0 +1,216 @@
+"""Span tracer: causal, step-clocked structured events across every layer.
+
+The observability counterpart of the paper's per-op instrumentation: the
+stack already *computes* everything a trace needs (scheduler steps, modeled
+comm seconds, byte counts, path decisions) — this module only gives those
+numbers a shared event vocabulary so one request's lifeline is
+reconstructible across the completion queue, the migration engine, the
+scheduler state machine, the router, and the fleet driver.
+
+Design rules (DESIGN.md §11):
+
+- **No wall clock.**  Timestamps come from a :class:`StepClock`: each
+  scheduler/fleet step is one quantum (rendered as 1 ms in Perfetto), and
+  events within a step get strictly increasing sub-ticks — so traces are
+  bit-reproducible for a fixed seed and diffable across runs.  Modeled comm
+  seconds ride along in event ``args`` where attribution needs them.
+- **Null by default.**  Every context carries a tracer; the default is the
+  shared :data:`NULL_TRACER` whose methods are no-ops and whose ``enabled``
+  flag lets hot paths skip building args entirely.  Tracer off ⇒ the run is
+  bitwise-identical to an uninstrumented one (the tracer only ever *reads*).
+- **Chrome-trace-shaped.**  Events carry the Trace Event Format phases
+  directly (``B/E`` thread slices, ``b/e`` async spans correlated by
+  request id, ``i`` instants, ``C`` counters, ``s/f`` flows), so export
+  (``repro.obs.export``) is a serialization, not a transformation.
+
+Event taxonomy (cat / name):
+
+====== ======================= =========================================
+cat    names                   emitted by
+====== ======================= =========================================
+cq     flush, xfer, nbi        core/pending.py — coalesce + flush + path
+kvx    stage, migrate,         serve/kvxfer.py — wire installments, with
+       stream_chunk,           ``s/f`` flows (id = request id) linking
+       stream_close, admit     issue on the src PE to admit on the dst PE
+req    queued, prefill,        serve/scheduler.py — async spans (id =
+       staged, streaming,      request id): the causal lifeline; ends
+       parked, migrating,      carry queue/wire/compute attribution args
+       decoding, preempted
+sched  decode, prefill         serve/scheduler.py — per-PE thread slices
+fleet  step, route, refit      serve/frontend/fleet.py + obs.refit
+====== ======================= =========================================
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+#: sub-ticks per scheduler step; exported ts = step * quantum + seq.  1000
+#: renders one step as 1 ms in Perfetto's us-denominated timeline.
+STEP_QUANTUM = 1000
+
+
+class StepClock:
+    """Deterministic step-based clock: ``now()`` is monotonically increasing
+    and advances by sub-ticks within a step, quanta across steps."""
+
+    def __init__(self):
+        self.step = 0
+        self._seq = 0
+
+    def set_step(self, step: int) -> None:
+        """Advance to a scheduler/fleet step (monotonic: going 'back' in
+        step — e.g. two pod schedulers sharing one clock — is a no-op)."""
+        if step > self.step:
+            self.step = step
+            self._seq = 0
+
+    def now(self) -> float:
+        """Current timestamp; every call returns a strictly larger value
+        within a step (sub-tick), capped below the next step's quantum."""
+        ts = self.step * STEP_QUANTUM + min(self._seq, STEP_QUANTUM - 1)
+        self._seq += 1
+        return float(ts)
+
+
+@dataclasses.dataclass
+class TraceEvent:
+    """One Trace-Event-Format record (see module docstring for phases)."""
+    ph: str                       # B E b e i C s f
+    name: str
+    cat: str
+    ts: float
+    pid: object                   # process track (pod / "core" / "fleet")
+    tid: object                   # thread track ("pe3" / "cq" / "requests")
+    id: Optional[int] = None      # async-span / flow correlation id (rid)
+    args: Optional[dict] = None
+
+
+class Tracer:
+    """No-op base tracer (the production default).
+
+    ``enabled`` is False so instrumentation sites can guard arg
+    construction: ``if tracer.enabled: tracer.instant(...)``.  All methods
+    exist and do nothing, so un-guarded calls are still safe.
+    """
+
+    enabled: bool = False
+
+    def __init__(self):
+        self.clock = StepClock()
+
+    # every emission is a no-op on the base class
+    def begin(self, name, cat, pid, tid, **args) -> None:
+        pass
+
+    def end(self, name, cat, pid, tid, **args) -> None:
+        pass
+
+    def async_begin(self, name, cat, id, pid, tid, **args) -> None:
+        pass
+
+    def async_end(self, name, cat, id, pid, tid, **args) -> None:
+        pass
+
+    def instant(self, name, cat, pid, tid, **args) -> None:
+        pass
+
+    def counter(self, name, pid, tid, **values) -> None:
+        pass
+
+    def flow_start(self, id, name, pid, tid) -> None:
+        pass
+
+    def flow_end(self, id, name, pid, tid) -> None:
+        pass
+
+
+#: shared do-nothing tracer — safe as a default because it is stateless
+#: beyond its clock, which nobody advances when tracing is off
+NULL_TRACER = Tracer()
+
+
+class SpanTracer(Tracer):
+    """Recording tracer: bounded in-memory event list + open-span ledger.
+
+    ``max_events`` bounds memory; past it new events are *counted*
+    (``dropped``) but not stored — a truncated trace stays valid (it never
+    drops an already-recorded begin's end: ends of known-open spans are
+    always admitted)."""
+
+    enabled = True
+
+    def __init__(self, max_events: int = 1 << 20):
+        super().__init__()
+        self.max_events = max_events
+        self.events: List[TraceEvent] = []
+        self.dropped = 0
+        # open-span bookkeeping (validation + always-close-on-truncate)
+        self._open_slices: Dict[tuple, List[str]] = {}   # (pid,tid) -> stack
+        self._open_async: Dict[tuple, int] = {}          # (cat,id,name) -> n
+
+    # ------------------------------------------------------------ plumbing
+    def _emit(self, ev: TraceEvent, *, force: bool = False) -> None:
+        if len(self.events) >= self.max_events and not force:
+            self.dropped += 1
+            return
+        self.events.append(ev)
+
+    def now(self) -> float:
+        return self.clock.now()
+
+    # ------------------------------------------------------ thread slices
+    def begin(self, name, cat, pid, tid, **args) -> None:
+        self._open_slices.setdefault((pid, tid), []).append(name)
+        self._emit(TraceEvent("B", name, cat, self.now(), pid, tid,
+                              args=args or None))
+
+    def end(self, name, cat, pid, tid, **args) -> None:
+        stack = self._open_slices.get((pid, tid))
+        if stack and stack[-1] == name:
+            stack.pop()
+        self._emit(TraceEvent("E", name, cat, self.now(), pid, tid,
+                              args=args or None), force=True)
+
+    # ------------------------------------------------------- async spans
+    def async_begin(self, name, cat, id, pid, tid, **args) -> None:
+        key = (cat, id, name)
+        self._open_async[key] = self._open_async.get(key, 0) + 1
+        self._emit(TraceEvent("b", name, cat, self.now(), pid, tid, id=id,
+                              args=args or None))
+
+    def async_end(self, name, cat, id, pid, tid, **args) -> None:
+        key = (cat, id, name)
+        open_n = self._open_async.get(key, 0)
+        if open_n:
+            self._open_async[key] = open_n - 1
+        self._emit(TraceEvent("e", name, cat, self.now(), pid, tid, id=id,
+                              args=args or None), force=open_n > 0)
+
+    # ---------------------------------------------------------- the rest
+    def instant(self, name, cat, pid, tid, **args) -> None:
+        self._emit(TraceEvent("i", name, cat, self.now(), pid, tid,
+                              args=args or None))
+
+    def counter(self, name, pid, tid, **values) -> None:
+        self._emit(TraceEvent("C", name, "counter", self.now(), pid, tid,
+                              args=values))
+
+    def flow_start(self, id, name, pid, tid) -> None:
+        self._emit(TraceEvent("s", name, "flow", self.now(), pid, tid,
+                              id=id))
+
+    def flow_end(self, id, name, pid, tid) -> None:
+        self._emit(TraceEvent("f", name, "flow", self.now(), pid, tid,
+                              id=id))
+
+    # -------------------------------------------------------------- query
+    def open_spans(self) -> dict:
+        """Spans begun but not ended — must be empty at end of a clean run
+        (the causality invariant tests assert this)."""
+        slices = {k: list(v) for k, v in self._open_slices.items() if v}
+        asyncs = {k: n for k, n in self._open_async.items() if n}
+        return {"slices": slices, "async": asyncs}
+
+    def __len__(self) -> int:
+        return len(self.events)

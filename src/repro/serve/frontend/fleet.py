@@ -78,7 +78,8 @@ class Fleet:
 
     def __init__(self, fcfg: FleetConfig, *, arch_cfg=None, params=None,
                  engine: Optional[Engine] = None,
-                 classes: Optional[Dict[str, slo_mod.SLOClass]] = None):
+                 classes: Optional[Dict[str, slo_mod.SLOClass]] = None,
+                 obs=None):
         import jax
         from repro.configs import base as cfgbase
         from repro.models import model
@@ -97,6 +98,11 @@ class Fleet:
         # one world: pods are nodes, inter-pod traffic is dcn via the proxy
         self.ctx, self.heap = context.init(npes=fcfg.npes,
                                            node_size=fcfg.pod_size)
+        # observability bundle (repro.obs.Obs): installs the span tracer on
+        # the shared context and arms the online tuner re-fit loop
+        self.obs = obs
+        if obs is not None:
+            obs.attach(self.ctx)
         self.pool = KVPool.create(
             self.heap, self.cfg, fcfg.max_len, num_blocks=fcfg.kv_blocks,
             max_slots=fcfg.num_slots, block_tokens=fcfg.block_tokens,
@@ -144,6 +150,11 @@ class Fleet:
     # ---------------------------------------------------------------- drive
     def _submit(self, spec: RequestSpec, step: int) -> None:
         pod = self.router.route(spec)
+        tracer = self.ctx.tracer
+        if tracer.enabled:
+            tracer.instant("route", "fleet", "fleet", "router",
+                           idx=spec.idx, pod=pod.name,
+                           policy=self.fcfg.router, slo=str(spec.slo))
         rid = pod.sched.submit(
             {"tokens": spec.tokens}, max_new=spec.max_new,
             prefix_len=spec.prefix_len, arrival_step=step, slo=spec.slo)
@@ -161,6 +172,8 @@ class Fleet:
         may complete ops pod A submitted.  Handing each pod the canonical
         heap and taking its result back is what makes those cross-pod
         flushes land in the memory every other pod reads."""
+        if self.obs is not None:
+            self.obs.begin_step(self.elapsed_steps)
         for spec in arrivals or ():
             self._submit(spec, self.elapsed_steps)
         for pod in self.pods:
@@ -168,6 +181,8 @@ class Fleet:
             pod.sched.step()
             self.heap = pod.sched.heap
         self.elapsed_steps += 1
+        if self.obs is not None:
+            self.obs.end_step(self)
 
     def run(self, specs: List[RequestSpec], *,
             max_steps: int = 10_000) -> dict:
@@ -196,6 +211,8 @@ class Fleet:
                 "backpressure": self.proxy.backpressure,
                 "delivered": len(self.proxy.ring.delivered),
             }
+        if self.obs is not None:
+            doc["obs"] = self.obs.summary()
         return doc
 
     def outputs(self) -> Dict[int, object]:

@@ -143,6 +143,15 @@ class KVMigrator:
         self.work_items = work_items
         self._staged_tails = {}     # req_id -> packed tail vector
 
+    def _tracer(self):
+        """Context tracer when recording, else None (guard hot paths)."""
+        tr = getattr(self.ctx, "tracer", None)
+        return tr if tr is not None and tr.enabled else None
+
+    def _track(self, pe: int) -> tuple:
+        """(pid, tid) trace track for a PE: its pod's process row."""
+        return f"pod{self.ctx.node_of(pe)}", f"pe{pe}"
+
     # ------------------------------------------------------------- staging
     def stage(self, heap, req_id: int, cache, *, prompt_len: int,
               src_pe: int, batch_idx: int = 0, max_new: int = 0,
@@ -176,6 +185,11 @@ class KVMigrator:
         self.pool.set_home(ids[start:n_prompt], src_pe)
         self._staged_tails[req_id] = pack_tail(lay, cache,
                                                batch_idx=batch_idx)
+        tr = self._tracer()
+        if tr is not None:
+            pid, tid = self._track(src_pe)
+            tr.instant("stage", "kvx", pid, tid, rid=req_id,
+                       blocks=n_prompt - start, shared=len(shared_ids))
         return heap, ids
 
     def _wire_plan(self, req_id: int, skip) -> tuple:
@@ -262,6 +276,14 @@ class KVMigrator:
             bytes_tail=lay.tail_words * 4,
             bytes_skipped=n_skipped * lay.block_bytes,
             expected_signal=expected_signal(len(send)), bytes_dcn=dcn)
+        tr = self._tracer()
+        if tr is not None:
+            pid, tid = self._track(src_pe)
+            tr.instant("migrate", "kvx", pid, tid, rid=req_id,
+                       dst_pe=dst_pe, tier=tier, runs=n_runs,
+                       bytes=report.bytes_total, bytes_dcn=dcn)
+            # flow arrow: issue here -> admit on the destination PE
+            tr.flow_start(req_id, "migration", pid, tid)
         return heap, report
 
     # ----------------------------------------------------- chunked streaming
@@ -293,6 +315,12 @@ class KVMigrator:
         st.runs += n_runs
         st.chunks += 1
         st.bytes_dcn += dcn
+        tr = self._tracer()
+        if tr is not None:
+            pid, tid = self._track(st.src_pe)
+            tr.instant("stream_chunk", "kvx", pid, tid, rid=st.req_id,
+                       chunk=st.chunks, blocks=len(take),
+                       remaining=len(st.pending))
         return heap
 
     def stream_flush(self, heap, st: StreamState):
@@ -331,6 +359,13 @@ class KVMigrator:
             bytes_skipped=st.n_skipped * lay.block_bytes,
             expected_signal=expected_signal(st.sent),
             chunks=st.chunks, bytes_dcn=st.bytes_dcn)
+        tr = self._tracer()
+        if tr is not None:
+            pid, tid = self._track(st.src_pe)
+            tr.instant("stream_close", "kvx", pid, tid, rid=st.req_id,
+                       dst_pe=st.dst_pe, chunks=st.chunks,
+                       bytes=report.bytes_total, bytes_dcn=st.bytes_dcn)
+            tr.flow_start(st.req_id, "migration", pid, tid)
         return heap, report
 
     def _note_block(self, nbytes: int, src_pe: int, dst_pe: int) -> None:
@@ -381,6 +416,12 @@ class KVMigrator:
         if not bool(ok):
             return heap, None
         hdr = [int(v) for v in heap.read(self.pool.header_ptr(slot), dst_pe)]
+        tr = self._tracer()
+        if tr is not None:
+            pid, tid = self._track(dst_pe)
+            tr.instant("admit", "kvx", pid, tid, rid=hdr[0], slot=slot,
+                       expected_signal=expected)
+            tr.flow_end(hdr[0], "migration", pid, tid)
         return heap, {"req_id": hdr[0], "prompt_len": hdr[1],
                       "first_token": hdr[2], "n_blocks": hdr[3]}
 

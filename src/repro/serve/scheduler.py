@@ -115,6 +115,8 @@ class Request:
     t_arrival: float = 0.0
     t_submit: float = 0.0
     t_admit: float = 0.0
+    # currently open lifeline span (obs tracing; None = no span open)
+    trace_phase: Optional[str] = None
 
     @property
     def prompt_len(self) -> int:
@@ -262,6 +264,31 @@ class DisaggScheduler:
         self._step = 0
         self._next_rid = rid_base
         self._key = jax.random.key(scfg.seed)
+        # trace process track: this scheduler's pod (fleet pods are nodes)
+        self._trace_pid = f"pod{ctx.node_of(self.prefill_pes[0])}"
+
+    # ------------------------------------------------------------- tracing
+    def _tracer(self):
+        """Context tracer when recording, else None (guard hot paths)."""
+        tr = getattr(self.ctx, "tracer", None)
+        return tr if tr is not None and tr.enabled else None
+
+    def _trace_phase(self, req: Request, phase: Optional[str],
+                     end_args: Optional[dict] = None, **begin_args) -> None:
+        """Advance a request's causal lifeline: close the open phase span
+        (attribution rides on ``end_args``) and open ``phase`` (None = the
+        lifeline ends).  All phases are async spans keyed by rid on the
+        pod's ``requests`` track, so overlapping requests never nest."""
+        tr = self._tracer()
+        if tr is None:
+            return
+        if req.trace_phase is not None:
+            tr.async_end(req.trace_phase, "req", req.rid, self._trace_pid,
+                         "requests", **(end_args or {}))
+        req.trace_phase = phase
+        if phase is not None:
+            tr.async_begin(phase, "req", req.rid, self._trace_pid,
+                           "requests", **begin_args)
 
     # ------------------------------------------------------------- intake
     def submit(self, batch: dict, *, max_new: Optional[int] = None,
@@ -307,8 +334,13 @@ class DisaggScheduler:
             req.state = SHED
             req.finish_step = self._step
             self.stats.sheds += 1
+            self._trace_phase(req, "shed", prompt_len=S,
+                              queue_depth=len(self.queue))
+            self._trace_phase(req, None, end_args={"outcome": "shed"})
             return rid
         self.queue.append(req)
+        self._trace_phase(req, "queued", prompt_len=S, max_new=max_new,
+                          arrival_step=req.arrival_step)
         return rid
 
     def _comm_clock(self) -> float:
@@ -406,6 +438,9 @@ class DisaggScheduler:
                 self.streaming.remove(req)
                 req.state = PARKED
                 self.parked.append(req)
+                self._trace_phase(req, "parked",
+                                  end_args={"chunks": st.chunks,
+                                            "blocks_sent": st.sent})
         for req in self.policy.waiting_order(list(self.parked)):
             self.heap = self.migrator.stream_flush(self.heap, req.stream)
             self._try_bind(req)
@@ -433,12 +468,22 @@ class DisaggScheduler:
                 req.prefill_step = self._step
                 self.stats.queue_delay_steps.append(
                     self._step - req.arrival_step)
+                self._trace_phase(
+                    req, "prefill",
+                    end_args={"queue_steps": self._step - req.arrival_step},
+                    pe=pe)
+                tr = self._tracer()
+                if tr is not None:
+                    tr.begin("prefill", "sched", self._trace_pid, f"pe{pe}",
+                             rid=req.rid, prompt_len=req.prompt_len)
                 key = jax.random.fold_in(self._key, req.rid)
                 tok, _, cache1 = self.engine.prefill_request(
                     req.batch, key, self.scfg.temperature)
                 req.first_token = tok
                 req.prefill_cache = cache1
                 self.stats.prefills += 1
+                if tr is not None:
+                    tr.end("prefill", "sched", self._trace_pid, f"pe{pe}")
             else:
                 del self.queue[idx]
             if not self._stage(req):                 # pool exhausted: park
@@ -487,6 +532,8 @@ class DisaggScheduler:
             req.cow_plan[b] = self.pool.reserve(1)[0]
         req.prefill_cache = None                 # staged in the pool now
         req.state = STAGED
+        self._trace_phase(req, "staged", pe=req.prefill_pe,
+                          shared_blocks=len(shared_ids))
         self._try_migrate(req)
         return True
 
@@ -537,10 +584,13 @@ class DisaggScheduler:
             # and bind this same step if a slot is free (tail + header
             # only), matching the whole-prefill path's admission timing
             req.state = PARKED
+            self._trace_phase(req, "parked", dst_pe=pe, resident=True)
             self.parked.append(req)
             self._try_bind(req)
             return
         req.state = STREAMING
+        self._trace_phase(req, "streaming", dst_pe=pe,
+                          blocks=len(st.pending))
         self.streaming.append(req)
         # first installment leaves the same step its blocks "fill"
         self.heap = self.migrator.stream_chunk(self.heap, st,
@@ -605,6 +655,10 @@ class DisaggScheduler:
         req.migrate_step = self._step
         req.admit_ready_step = self._step + delay
         req.t_submit = self._comm_clock()
+        self._trace_phase(req, "migrating", src_pe=report.src_pe,
+                          dst_pe=report.dst_pe, tier=report.tier,
+                          bytes=report.bytes_total,
+                          bytes_dcn=report.bytes_dcn, chunks=report.chunks)
         self.migrating.append(req)
         self.stats.migrations += 1
         self.stats.bytes_migrated += report.bytes_total
@@ -667,6 +721,10 @@ class DisaggScheduler:
         req.slot = -1
         req.state = PREEMPTED
         req.preemptions += 1
+        self._trace_phase(req, "preempted",
+                          end_args={"decode_pos": req.resume_pos,
+                                    "tokens_out": len(req.out)},
+                          pe=pe)
         self.preempted.append(req)
         self.stats.preempts += 1
 
@@ -702,6 +760,7 @@ class DisaggScheduler:
         self.slot_req[pe][slot] = req.rid
         req.slot = slot
         req.state = DECODING
+        self._trace_phase(req, "decoding", pe=pe, slot=slot, resumed=True)
         self.stats.resumes += 1
 
     # ----------------------------------------------------------- admission
@@ -772,6 +831,15 @@ class DisaggScheduler:
             req.out.append(hdr["first_token"])
             req.admit_step = self._step
             req.t_admit = self._comm_clock()
+            # lifeline attribution: queue = arrival->prefill, wire = the
+            # modeled comm seconds between migration issue and admission,
+            # compute = everything from here to finish (decode steps)
+            self._trace_phase(
+                req, "decoding",
+                end_args={"wire_model_s": req.t_admit - req.t_submit,
+                          "ttfd_steps": req.admit_step - req.arrival_step,
+                          "ttfd_model_s": req.t_admit - req.t_arrival},
+                pe=req.decode_pe, slot=req.slot)
             self.stats.admissions += 1
             self.stats.ttfd_steps.append(req.admit_step - req.submit_step)
             self.stats.ttfd_model_s.append(req.t_admit - req.t_submit)
@@ -787,10 +855,14 @@ class DisaggScheduler:
         (the PEs step in parallel on real hardware: one decode iteration)."""
         self._step_key = jax.random.fold_in(self._key, 10_000 + self._step)
         stepped = False
+        tr = self._tracer()
         for pe in self.decode_pes:
             bank = self.banks[pe]
             if not bank.active.any():
                 continue
+            if tr is not None:
+                tr.begin("decode", "sched", self._trace_pid, f"pe{pe}",
+                         slots=int(bank.active.sum()))
             # per-PE fold: decode PEs must not share sampling noise
             key = jax.random.fold_in(self._step_key, pe)
             if self.paged:
@@ -802,6 +874,8 @@ class DisaggScheduler:
                     bank, key, self.scfg.temperature)
             self.banks[pe] = bank
             stepped = True
+            if tr is not None:
+                tr.end("decode", "sched", self._trace_pid, f"pe{pe}")
             for s, rid in enumerate(self.slot_req[pe]):
                 if rid is None:
                     continue
@@ -825,6 +899,14 @@ class DisaggScheduler:
             req.state = FINISHED
             req.finish_step = self._step
             self.stats.e2e_steps.append(req.finish_step - req.arrival_step)
+            # compute attribution: admission -> finish is pure decode
+            self._trace_phase(
+                req, None,
+                end_args={"outcome": "finished",
+                          "decode_steps": req.finish_step - req.admit_step,
+                          "e2e_steps": req.finish_step - req.arrival_step,
+                          "tokens": len(req.out),
+                          "preemptions": req.preemptions})
             self._evict(req)
 
     def _evict(self, req: Request) -> None:
@@ -855,6 +937,11 @@ class DisaggScheduler:
     # --------------------------------------------------------------- drive
     def step(self) -> None:
         """Advance every pipeline stage once (see module docstring)."""
+        tr = self._tracer()
+        if tr is not None:
+            # monotonic-max: in fleet mode the driver already advanced the
+            # shared clock to this step, so this is a no-op there
+            tr.clock.set_step(self._step)
         self._phase_prefill()
         self._phase_admit()
         self._phase_resume()

@@ -93,10 +93,12 @@ class Sink:
 class NullSink(Sink):
     """Discards everything (zero-overhead mode for production serving)."""
 
-    buckets: Dict[Key, StatBucket] = {}
-
     def __init__(self):
-        self.trace: List[OpRecord] = []    # per-instance: callers may index it
+        # both per-instance: callers may index the trace or iterate the
+        # buckets, and a class-level dict would alias every NullSink (a
+        # consumer mutating one sink's view would corrupt all of them)
+        self.trace: List[OpRecord] = []
+        self.buckets: Dict[Key, StatBucket] = {}
 
     def record(self, rec: OpRecord) -> None:
         pass
@@ -193,12 +195,19 @@ class TelemetrySink(Sink):
             mine.t_max = max(mine.t_max, b.t_max)
             for h, c in b.size_hist.items():
                 mine.size_hist[h] = mine.size_hist.get(h, 0) + c
-            # combine reservoirs, decimating like add() so both runs stay
-            # represented when the union exceeds the bound
-            combined = mine.samples + b.samples
-            while len(combined) >= mine.max_samples:
-                combined = combined[::2]
-            mine.samples = combined
+            # combine reservoirs under the bound WITHOUT over-dropping:
+            # decimate the larger side only, so both runs stay represented
+            # (concatenate-then-halve could strip one side to nothing when
+            # both reservoirs arrive full — stride-2 over an interleave
+            # deletes every sample of one parent)
+            sa, sb = list(mine.samples), list(b.samples)
+            while (len(sa) + len(sb) >= mine.max_samples
+                   and (len(sa) > 1 or len(sb) > 1)):
+                if len(sa) >= len(sb) and len(sa) > 1:
+                    sa = sa[::2]
+                else:
+                    sb = sb[::2]
+            mine.samples = sa + sb
             mine._stride = max(mine._stride, b._stride)
             mine._seen += b._seen
 

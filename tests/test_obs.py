@@ -1,0 +1,433 @@
+"""Observability acceptance (repro.obs):
+
+- StepClock determinism + SpanTracer span bookkeeping and truncation,
+- Chrome-trace export schema validation (positive + adversarial negatives),
+- trace causality invariants under a stressed fleet (preemption, shed,
+  chunked streaming): every span closes, every per-request lifeline is
+  gap-free and reconstructs with queue/wire/compute attribution,
+- tracer off => bitwise-identical outputs and report,
+- online re-fit: a stale warm-start table is corrected from live telemetry
+  and at least one cutover decision flips,
+- ISHMEM_OBS_* env surface + metrics registry units.
+"""
+import functools
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base as cfgbase
+from repro.core import context, cutover
+from repro.models import model
+from repro.obs import (NULL_TRACER, Obs, OnlineRefitter, SpanTracer,
+                       chrome_trace, load_obs_env, request_chains, validate)
+from repro.obs.export import chain_gaps, write_chrome_trace
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import STEP_QUANTUM, StepClock
+from repro.serve.engine import Engine
+from repro.serve.frontend import Fleet, FleetConfig, TenantSpec, TrafficEngine
+from repro.tune import estimator, table as table_mod
+
+MAXLEN = 24
+NEW = 4
+
+
+@functools.lru_cache(maxsize=1)
+def _engine():
+    cfg = cfgbase.reduced(cfgbase.get_config("qwen3_4b"))
+    params = model.init_params(jax.random.key(0), cfg)
+    return cfg, Engine(cfg, params, max_len=MAXLEN)
+
+
+def _fleet(obs=None, **over):
+    cfg, engine = _engine()
+    kw = dict(n_pods=2, prefill_per_pod=1, decode_per_pod=2, num_slots=2,
+              kv_blocks=96, block_tokens=4, max_len=MAXLEN, max_new=NEW,
+              stream_chunks=1, admission="slo", router="affinity", seed=11)
+    kw.update(over)
+    return Fleet(FleetConfig(**kw), engine=engine, obs=obs)
+
+
+# ---------------------------------------------------------------------------
+# step clock
+# ---------------------------------------------------------------------------
+
+
+def test_step_clock_deterministic_and_monotonic():
+    clk = StepClock()
+    a, b, c = clk.now(), clk.now(), clk.now()
+    assert a < b < c                               # sub-ticks strictly grow
+    clk.set_step(3)
+    t = clk.now()
+    assert t == 3 * STEP_QUANTUM                   # fresh quantum, seq reset
+    clk.set_step(1)                                # going back is a no-op
+    assert clk.step == 3
+    assert clk.now() > t
+    # sub-ticks never bleed into the next step's quantum
+    for _ in range(2 * STEP_QUANTUM):
+        last = clk.now()
+    assert last < 4 * STEP_QUANTUM
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+# ---------------------------------------------------------------------------
+
+
+def test_span_tracer_bookkeeping_and_export():
+    tr = SpanTracer()
+    tr.begin("flush", "cq", "core", "cq", ops=3)
+    tr.instant("xfer", "cq", "core", "cq", path="direct")
+    tr.end("flush", "cq", "core", "cq", bytes=128)
+    tr.async_begin("queued", "req", 7, "pod0", "requests")
+    tr.async_end("queued", "req", 7, "pod0", "requests")
+    tr.flow_start(7, "migration", "pod0", "pe0")
+    tr.flow_end(7, "migration", "pod1", "pe2")
+    tr.counter("cq_pending", "core", "cq", pending=0)
+    assert tr.open_spans() == {"slices": {}, "async": {}}
+    doc = chrome_trace(tr)
+    assert validate(doc) == []
+    # metadata rows name every process/thread track exactly once
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert {(m["name"], m["pid"]) for m in meta} >= \
+        {("process_name", "core"), ("process_name", "pod0")}
+
+
+def test_span_tracer_open_spans_reports_leaks():
+    tr = SpanTracer()
+    tr.begin("flush", "cq", "core", "cq")
+    tr.async_begin("decoding", "req", 3, "pod0", "requests")
+    leaks = tr.open_spans()
+    assert leaks["slices"] == {("core", "cq"): ["flush"]}
+    assert leaks["async"] == {("req", 3, "decoding"): 1}
+    assert validate(chrome_trace(tr))              # and validate agrees
+
+
+def test_span_tracer_truncation_still_closes_spans():
+    tr = SpanTracer(max_events=4)
+    tr.begin("step", "fleet", "fleet", "steps")
+    tr.async_begin("decoding", "req", 1, "pod0", "requests")
+    for _ in range(50):
+        tr.instant("xfer", "cq", "core", "cq")
+    assert tr.dropped > 0 and len(tr.events) <= 4 + 2
+    # ends of known-open spans are force-admitted past the bound, so the
+    # truncated trace still validates clean
+    tr.async_end("decoding", "req", 1, "pod0", "requests")
+    tr.end("step", "fleet", "fleet", "steps")
+    assert tr.open_spans() == {"slices": {}, "async": {}}
+    doc = chrome_trace(tr)
+    assert validate(doc) == []
+    assert doc["otherData"]["dropped_events"] == tr.dropped > 0
+
+
+# ---------------------------------------------------------------------------
+# export validation: adversarial documents
+# ---------------------------------------------------------------------------
+
+
+def _doc(events):
+    return {"traceEvents": events}
+
+
+def test_validate_rejects_malformed_documents():
+    ok = {"name": "x", "cat": "t", "ph": "i", "ts": 1, "pid": "p", "tid": "t"}
+    assert validate(_doc([ok])) == []
+    assert validate({"nope": 1})                   # traceEvents missing
+    assert validate(_doc([{"ph": "i", "ts": 1}]))  # missing name/pid
+    assert validate(_doc([dict(ok, ts=None)]))     # non-numeric ts
+    bad_tid = dict(ok)
+    del bad_tid["tid"]
+    assert validate(_doc([bad_tid]))
+    # ts regression on one (pid, tid) track
+    assert validate(_doc([dict(ok, ts=5), dict(ok, ts=3)]))
+    # unmatched E / E under wrong name
+    assert validate(_doc([dict(ok, ph="E", name="f")]))
+    assert validate(_doc([dict(ok, ph="B", name="a", ts=1),
+                          dict(ok, ph="E", name="b", ts=2)]))
+    # unclosed B at end of trace
+    assert validate(_doc([dict(ok, ph="B", name="a")]))
+    # async end before begin / async without id / unclosed async
+    assert validate(_doc([dict(ok, ph="e", id="1")]))
+    assert validate(_doc([dict(ok, ph="b")]))
+    assert validate(_doc([dict(ok, ph="b", id="1")]))
+    # flows: start without finish, finish without start, count mismatch
+    assert validate(_doc([dict(ok, ph="s", id="9")]))
+    assert validate(_doc([dict(ok, ph="f", id="9")]))
+    assert validate(_doc([dict(ok, ph="s", id="9", ts=1),
+                          dict(ok, ph="s", id="9", ts=2),
+                          dict(ok, ph="f", id="9", ts=3)]))
+
+
+def test_request_chains_and_gap_detection():
+    tr = SpanTracer()
+    tr.async_begin("queued", "req", 5, "pod0", "requests", prompt_len=8)
+    tr.async_end("queued", "req", 5, "pod0", "requests", queue_steps=0)
+    tr.async_begin("prefill", "req", 5, "pod0", "requests")
+    tr.async_end("prefill", "req", 5, "pod0", "requests", pe=0)
+    # untraced hole: next phase opens 500 ticks later
+    tr.clock.set_step(2)
+    tr.async_begin("decoding", "req", 5, "pod0", "requests")
+    tr.async_end("decoding", "req", 5, "pod0", "requests",
+                 outcome="finished")
+    chains = request_chains(tr)
+    assert list(chains) == [5]
+    phases = [e["phase"] for e in chains[5]]
+    assert phases == ["queued", "prefill", "decoding"]
+    # end-side args override/merge onto the begin-side ones
+    assert chains[5][0]["args"] == {"prompt_len": 8, "queue_steps": 0}
+    gaps = chain_gaps(chains[5])
+    assert len(gaps) == 1 and gaps[0][1] == 2 * STEP_QUANTUM
+    # adjacent sub-tick handoffs (the normal case) are NOT gaps
+    assert chain_gaps(chains[5][:2]) == []
+
+
+# ---------------------------------------------------------------------------
+# causality invariants under a stressed fleet
+# ---------------------------------------------------------------------------
+
+TERMINAL = {"finished", "shed"}
+
+
+@functools.lru_cache(maxsize=1)
+def _stressed_run():
+    """One overloaded fleet run (sheds + preempts + chunked streaming),
+    traced and metered — shared by the invariant tests below."""
+    cfg, _ = _engine()
+    heavy = (TenantSpec("chat", prompt_lens=(8,), max_new=(NEW,),
+                        slo="interactive"),
+             TenantSpec("scan", prompt_lens=(12,), max_new=(12,),
+                        slo="batch"))
+    obs = Obs(trace=True, metrics=True)
+    fleet = _fleet(obs=obs, admission="slo", router="least_loaded",
+                   num_slots=1, queue_bound=3, kv_blocks=128,
+                   stream_chunks=2)
+    traffic = TrafficEngine(list(heavy), rate=3.0, vocab=cfg.vocab_size,
+                            seed=23)
+    report = fleet.run(traffic.schedule(16), max_steps=2500)
+    return fleet, obs, report
+
+
+def test_stressed_trace_all_spans_close_and_validate(tmp_path):
+    fleet, obs, report = _stressed_run()
+    assert report["preempts"] >= 1 and report["shed"] > 0   # stress happened
+    assert obs.tracer.open_spans() == {"slices": {}, "async": {}}
+    doc = write_chrome_trace(obs.tracer, str(tmp_path / "trace.json"))
+    assert validate(doc) == []
+    # the file round-trips and still validates (what CI gate (b) runs)
+    loaded = json.loads((tmp_path / "trace.json").read_text())
+    assert validate(loaded) == []
+    assert loaded["otherData"]["schema_version"] >= 1
+
+
+def test_stressed_trace_chains_cover_every_request():
+    fleet, obs, report = _stressed_run()
+    chains = request_chains(obs.tracer)
+    # every submitted request (routed through placements) has a lifeline
+    rids = {rid for _, rid in fleet.placements.values()}
+    assert rids and rids == set(chains)
+    saw_preempt = saw_shed = saw_stream = False
+    for rid, chain in chains.items():
+        # parent-before-child: phases begin in order, no overlaps missing
+        t0s = [e["t0"] for e in chain]
+        assert t0s == sorted(t0s)
+        assert all(e["t1"] is not None and e["t1"] >= e["t0"]
+                   for e in chain), f"rid {rid}: unclosed phase"
+        assert chain_gaps(chain) == [], f"rid {rid}: lifeline has holes"
+        last = chain[-1]["args"].get("outcome")
+        assert last in TERMINAL, f"rid {rid}: ended in {last!r}"
+        phases = [e["phase"] for e in chain]
+        if last == "shed":
+            assert phases == ["shed"]
+            saw_shed = True
+        else:
+            assert phases[0] == "queued"
+            assert phases[-1] == "decoding"
+            saw_preempt |= "preempted" in phases
+            saw_stream |= "streaming" in phases
+            # attribution rides on the phase that measured it
+            by = {e["phase"]: e["args"] for e in chain}
+            assert by["queued"]["queue_steps"] >= 0
+            assert by["migrating"]["bytes"] > 0
+            assert by["migrating"]["wire_model_s"] >= 0.0
+            assert by["decoding"]["decode_steps"] >= 0
+    assert saw_shed and saw_preempt and saw_stream
+
+
+def test_stressed_metrics_series_track_fleet_steps():
+    fleet, obs, report = _stressed_run()
+    rows = obs.metrics.series
+    assert len(rows) == fleet.elapsed_steps
+    assert [r["step"] for r in rows] == list(range(1, len(rows) + 1))
+    last = rows[-1]
+    # drained: pool empty, queues empty, per-class goodput tallied
+    assert last["pool.blocks_in_use"] == 0
+    assert last["pod0.queue_depth"] == 0 and last["pod1.queue_depth"] == 0
+    assert last["class.interactive.offered"] > 0
+    assert 0.0 <= last["class.interactive.goodput"] <= 1.0
+    assert last["class.batch.shed"] + last["class.interactive.shed"] == \
+        report["shed"]
+    # mid-run rows saw real occupancy
+    assert max(r.get("pool.blocks_in_use", 0) for r in rows) > 0
+    assert report["obs"]["trace_events"] == len(obs.tracer.events)
+
+
+# ---------------------------------------------------------------------------
+# tracer off => bitwise identical
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_off_is_bitwise_identical():
+    """The overhead contract: attaching a recording tracer must not change
+    one bit of scheduling, outputs, or the report — and NO tracer (the
+    default Null path) must equal the pre-obs stack exactly."""
+    cfg, _ = _engine()
+
+    def run(obs):
+        fleet = _fleet(obs=obs, num_slots=1, queue_bound=64, seed=17)
+        traffic = TrafficEngine(
+            [TenantSpec("chat", weight=2.0, prompt_lens=(8,),
+                        max_new=(NEW,), slo="interactive"),
+             TenantSpec("scan", weight=1.0, prompt_lens=(12,),
+                        max_new=(NEW,), slo="batch", shared_prefix_prob=0.5,
+                        prefix_groups=1)],
+            rate=1.0, vocab=cfg.vocab_size, seed=17)
+        rep = fleet.run(traffic.schedule(8), max_steps=1500)
+        rep.pop("obs", None)
+        return fleet.outputs(), rep
+
+    outs_off, rep_off = run(None)
+    outs_null, rep_null = run(Obs())               # bundle present, all off
+    outs_on, rep_on = run(Obs(trace=True, metrics=True))
+    assert rep_off == rep_null == rep_on
+    assert set(outs_off) == set(outs_null) == set(outs_on)
+    for idx in outs_off:
+        np.testing.assert_array_equal(outs_off[idx], outs_null[idx])
+        np.testing.assert_array_equal(outs_off[idx], outs_on[idx])
+
+
+# ---------------------------------------------------------------------------
+# online re-fit
+# ---------------------------------------------------------------------------
+
+
+def _stale_table():
+    """A warm-start table whose cutovers are absurdly high: every probe
+    point decides 'direct', contradicting both the analytic model and what
+    live telemetry supports at large sizes / small work-groups."""
+    big = 1 << 30
+    return table_mod.TuningTable(cutovers={
+        ("local", 1): big, ("local", 512): big,
+        ("ici", 1): big, ("ici", 512): big})
+
+
+def test_online_refit_corrects_stale_warm_start():
+    ctx, _ = context.init(npes=4, node_size=2,
+                          tuning=cutover.Tuning(table=_stale_table()))
+    estimator.synthetic_sweep(ctx.hw, sink=ctx.telemetry)
+    rf = OnlineRefitter(ctx, period_steps=10, min_samples=8)
+    assert rf.maybe_refit(5) is None               # period not yet elapsed
+    ev = rf.maybe_refit(20)
+    assert ev is not None and len(ev.changed) >= 1
+    assert rf.decisions_changed() >= 1
+    # the stale table was hot-swapped out, and the corrected decisions
+    # agree with the analytic model the live samples were priced by
+    assert ctx.tuning.table is not None
+    assert ctx.tuning.table.cutovers != _stale_table().cutovers
+    assert all(old != new for (_, _, _, old, new) in ev.changed)
+    # far from any boundary the corrected decision must match the analytic
+    # model the live samples were priced by: 4 MiB at 1 work-item is engine
+    big = max(rf.probe_sizes)
+    assert ("ici", 1, big, "direct", "engine") in ev.changed
+    # serialization carries the flip list (what the bench emits)
+    j = ev.to_json()
+    assert j["nsamples"] >= 8 and len(j["changed"]) == len(ev.changed)
+    assert rf.maybe_refit(21) is None              # period re-arms
+
+
+def test_online_refit_gates_on_samples_and_period():
+    ctx, _ = context.init(npes=2, node_size=2)
+    rf = OnlineRefitter(ctx, period_steps=1, min_samples=8)
+    assert rf.maybe_refit(100) is None             # empty sink: no re-fit
+    assert rf.history == []
+    with pytest.raises(ValueError):
+        OnlineRefitter(ctx, period_steps=0)
+
+
+def test_refit_from_clean_start_is_a_stable_noop():
+    """Honesty check on the demo design: with NO stale table, live samples
+    are priced by the same analytic model choose_path falls back to, so a
+    re-fit converges to the decisions already being made.  (Probed at the
+    work-item sizes the sweep covered: in between, the table's nearest-key
+    lookup intentionally quantizes and may differ from the analytic model.)
+    """
+    ctx, _ = context.init(npes=4, node_size=2, tuning=cutover.Tuning())
+    estimator.synthetic_sweep(ctx.hw, work_items=(1, 128),
+                              sink=ctx.telemetry)
+    rf = OnlineRefitter(ctx, period_steps=1, min_samples=8,
+                        probe_wis=(1, 128))
+    ev = rf.refit(0)
+    assert ev.changed == []
+
+
+# ---------------------------------------------------------------------------
+# Obs bundle + env surface
+# ---------------------------------------------------------------------------
+
+
+def test_obs_bundle_wiring():
+    obs = Obs()
+    assert obs.tracer is NULL_TRACER and obs.metrics is None
+    with pytest.raises(RuntimeError):
+        obs.write_trace("/dev/null")
+    with pytest.raises(RuntimeError):
+        obs.write_metrics("/dev/null")
+    ctx, _ = context.init(npes=2, node_size=2)
+    assert ctx.tracer is NULL_TRACER               # the default default
+    on = Obs(trace=True, refit_period=25, trace_limit=4096)
+    on.attach(ctx)
+    assert ctx.tracer is on.tracer and on.tracer.enabled
+    assert on.tracer.max_events == 4096
+    assert on.refitter is not None
+    assert on.refitter.period_steps == 25
+
+
+def test_obs_env_surface():
+    cfg = load_obs_env({})
+    assert not cfg.enabled and not cfg.trace and cfg.refit_period == 0
+    cfg = load_obs_env({"ISHMEM_OBS_TRACE": "1",
+                        "ISHMEM_OBS_METRICS": "m.json",
+                        "ISHMEM_OBS_REFIT": "50",
+                        "ISHMEM_OBS_REFIT_MIN_SAMPLES": "16",
+                        "ISHMEM_OBS_TRACE_LIMIT": "64K"})
+    assert cfg.enabled and cfg.trace and cfg.trace_path is None
+    assert cfg.metrics and cfg.metrics_path == "m.json"
+    assert (cfg.refit_period, cfg.refit_min_samples) == (50, 16)
+    assert cfg.trace_limit == 64 << 10
+    assert load_obs_env({"ISHMEM_OBS_TRACE": "off"}).trace is False
+    assert load_obs_env({"ISHMEM_OBS_TRACE": "t.json"}).trace_path == "t.json"
+    with pytest.raises(ValueError):
+        load_obs_env({"ISHMEM_OBS_REFIT": "often"})
+    with pytest.raises(ValueError):
+        load_obs_env({"ISHMEM_OBS_REFIT": "-1"})
+    with pytest.raises(ValueError):
+        load_obs_env({"ISHMEM_OBS_TRACE_LIMIT": "lots"})
+    obs = Obs.from_config(load_obs_env({"ISHMEM_OBS_TRACE": "1"}))
+    assert obs.tracer.enabled
+
+
+def test_metrics_registry_units(tmp_path):
+    reg = MetricsRegistry()
+    reg.count("flushes")
+    reg.count("flushes", 2)
+    reg.gauge("queue_depth", 7)
+    for v in (1, 2, 1000):
+        reg.observe("xfer_bytes", v)
+    row = reg.sample(step=3)
+    assert row == {"step": 3, "queue_depth": 7.0, "flushes": 3.0}
+    doc = reg.write(str(tmp_path / "metrics.json"))
+    loaded = json.loads((tmp_path / "metrics.json").read_text())
+    assert loaded == doc
+    assert loaded["counters"]["flushes"] == 3.0
+    assert loaded["histograms"]["xfer_bytes"] == {"0": 1, "1": 1, "9": 1}
+    assert loaded["series"] == [row]

@@ -325,3 +325,68 @@ def test_best_of_records_measured_wall_clock():
     assert all(t >= 0.0 for _, t in samples)
     prof = estimator.fit_linear(samples)
     assert prof is not None and prof.nsamples == 3
+
+
+# ---------------------------------------------------------------------------
+# sink merge: reservoir retention + exact additivity (observability PR)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # clean interpreter: deterministic
+    from _minihyp import given, settings, strategies as st
+
+
+def test_null_sink_state_is_per_instance():
+    """NullSink.buckets/trace used to be class-level mutable defaults: a
+    consumer mutating one sink's view corrupted every other NullSink."""
+    a, b = telemetry.NullSink(), telemetry.NullSink()
+    a.buckets[("put", "direct", "ici", 1)] = telemetry.StatBucket()
+    a.trace.append(telemetry.OpRecord("put", 64, "direct", "ici", 1e-6))
+    assert b.buckets == {} and b.trace == []
+    assert telemetry.NullSink().buckets == {}
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 600), st.integers(1, 600))
+def test_merge_retains_samples_from_both_runs(na, nb):
+    """Merging two reservoirs (full or not) keeps samples from BOTH
+    parents: the old concatenate-then-halve stride could delete every
+    sample of one side when both arrived full."""
+    a = telemetry.TelemetrySink(max_samples_per_bucket=32)
+    b = telemetry.TelemetrySink(max_samples_per_bucket=32)
+    for _ in range(na):                  # run a tags its samples nbytes=64
+        a.record(telemetry.OpRecord("put", 64, "direct", "ici", 1e-6, 16))
+    for _ in range(nb):                  # run b tags nbytes=65
+        b.record(telemetry.OpRecord("put", 65, "direct", "ici", 2e-6, 16))
+    a.merge(b)
+    bucket = a.buckets[("put", "direct", "ici", 16)]
+    xs = {x for x, _ in bucket.samples}
+    assert xs == {64, 65}                # both runs stay represented
+    assert len(bucket.samples) <= bucket.max_samples
+    assert bucket.count == na + nb
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, 1 << 20), min_size=1, max_size=50),
+       st.lists(st.integers(1, 1 << 20), min_size=1, max_size=50))
+def test_merge_time_total_exactly_additive(xs_a, xs_b):
+    """Per-bucket time_total after a merge is ONE float add of the parents'
+    totals — exact equality, not approx — so fleet-wide attribution sums
+    survive any number of sink merges bit-for-bit."""
+    a = telemetry.TelemetrySink()
+    b = telemetry.TelemetrySink()
+    for n in xs_a:
+        a.record(telemetry.OpRecord("put", n, "direct", "ici", n * 1e-9, 1))
+    for n in xs_b:
+        b.record(telemetry.OpRecord("put", n, "direct", "ici", n * 1e-9, 1))
+    key = ("put", "direct", "ici", 1)
+    ta, tb = a.buckets[key].time_total, b.buckets[key].time_total
+    a.merge(b)
+    assert a.buckets[key].time_total == ta + tb
+    assert a.total_count() == len(xs_a) + len(xs_b)
+    # merging into an empty sink is the identity on totals
+    fresh = telemetry.TelemetrySink()
+    fresh.merge(b)
+    assert fresh.buckets[key].time_total == tb
+    assert [s for s in fresh.buckets[key].samples] == list(b.buckets[key].samples)
