@@ -5,10 +5,13 @@ from __future__ import annotations
 
 from benchmarks.common import emit
 from repro.core import cutover
+from repro.tune import env as env_mod
 
 
 def run():
     hw = cutover.HwParams()
+    # paper figure default is 128 work-items; ISHMEM_WORK_GROUP_SIZE moves it
+    wgs = env_mod.tuning_from_env().work_group_size
     # (a) tuned fcollect, 12 PEs
     for wi in (256, 512, 1024):
         for le in range(4, 21):
@@ -30,13 +33,13 @@ def run():
             if npes == 2:
                 # same-device pair: no inter-chip hop (paper: two tiles)
                 t = cutover.t_collective("broadcast", nbytes, 2,
-                                         work_items=128, path="direct",
+                                         work_items=wgs, path="direct",
                                          hw=cutover.HwParams(
                                              direct_bw_cap=hw.hbm_bw,
                                              direct_bw_per_item=6.4e9))
             else:
                 td = cutover.t_collective("broadcast", nbytes, npes,
-                                          work_items=128, path="direct",
+                                          work_items=wgs, path="direct",
                                           hw=hw_b)
                 te = cutover.t_collective("broadcast", nbytes, npes,
                                           path="engine", hw=hw_b)

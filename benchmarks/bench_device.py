@@ -1,0 +1,265 @@
+"""Device-initiated SHMEM (DESIGN.md §12): the four headline checks.
+
+1. **fused vs barrier TTFD** — one long-prompt request served twice through
+   the real scheduler/migrator/pool machine: barrier admission (wait for
+   ``sent + 2``) vs fused admission (``migrate_fused`` + per-block device
+   waits).  Outputs must be bitwise-identical; the fused mode must strictly
+   shrink both the modeled comm window (``stats.ttfd_model_s`` — first-block
+   flush instead of whole-request flush) and the step-level TTFD (the admit
+   delay scales with the admission threshold).  Single request on purpose:
+   per-block signals forfeit write-combined runs, so the cumulative
+   multi-request comm clock is the wrong objective — the win fused buys is
+   *per-request* time-to-first-token, which is what this gate pins.
+2. **ring-attention overlap** — numeric check of the sequence-parallel ring
+   (``kernels.ishmem_device.ring_attention``) against full flash attention,
+   plus the modeled long-context overlap ratio
+   (``cutover.ring_attention_overlap``): the device-initiated rotate-while-
+   compute schedule must beat blocking by >= 1.2x at 32k context.
+3. **work-group-resolved cutover fit** — a ``device.put`` sweep at several
+   collaboration widths through a telemetry-armed context; the fitted table
+   must contain a measured (tier, work_group_size) cutover for every width
+   swept — proof the device ops feed the autotuner at their own width.
+4. **trace coverage** — the same device ops under a recording SpanTracer:
+   the exported Chrome trace must carry ``device_*`` events.
+
+``smoke(json_path)`` writes BENCH_device.json; scripts/ci.sh gates on it.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import base as cfgbase
+from repro.core import context, cutover, device as device_mod, rma
+from repro.kernels import ops
+from repro.models import model
+from repro.obs import export as export_mod
+from repro.obs.tracer import SpanTracer
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.kvpool import KVPool
+from repro.serve.kvxfer import KVMigrator
+from repro.serve.scheduler import DisaggScheduler
+
+ARCH = "qwen3_4b"
+PROMPT = 20                      # 5 wire blocks at T=4: real per-block ramp
+NEW = 4
+MAXLEN = PROMPT + NEW
+BLOCK_TOKENS = 4
+ADMIT_DELAY = 3                  # step-level TTFD visible only with delay > 0
+WG_SIZES = (32, 128, 512)        # collaboration widths the sweep fits
+SWEEP_SIZES = tuple(1 << b for b in range(7, 25, 2))    # 128 B .. 8 MB
+RING_NPES = 4
+RING_SEQ_MODEL = 32768           # long-context operating point (modeled)
+RING_SEQ_NUMERIC = 256           # small instance for the bitwise-ish check
+
+
+# ---------------------------------------------------------------------------
+# 1. fused vs barrier admission A/B
+# ---------------------------------------------------------------------------
+
+
+def _serve_once(*, fused: bool):
+    """One long-prompt request end to end; returns (tokens, ttfd_model_s,
+    ttfd_steps, first_block_steps)."""
+    cfg = cfgbase.reduced(cfgbase.get_config(ARCH))
+    params = model.init_params(jax.random.key(0), cfg)
+    ctx, heap = context.init(npes=4, node_size=4)
+    eng = Engine(cfg, params, max_len=MAXLEN)
+    pool = KVPool.create(heap, cfg, MAXLEN, num_blocks=32, max_slots=3,
+                         block_tokens=BLOCK_TOKENS)
+    mig = KVMigrator(ctx, pool)
+    sched = DisaggScheduler(
+        ctx, heap, eng, pool, mig, prefill_pes=[0, 1], decode_pes=[2],
+        num_slots=1, scfg=ServeConfig(max_new_tokens=NEW),
+        admit_delay_steps=ADMIT_DELAY, paged=True, fused_attn=fused)
+    p = jax.random.randint(jax.random.key(1), (1, PROMPT), 0, cfg.vocab_size)
+    sched.submit({"tokens": p})
+    outs = sched.run()
+    req = next(iter(sched.requests.values()))
+    return (np.asarray(outs[0]),
+            float(np.mean(sched.stats.ttfd_model_s)),
+            req.admit_step - req.arrival_step,
+            req.first_block_step - req.arrival_step)
+
+
+def _fused_ab() -> dict:
+    tok_b, model_b, steps_b, fb_b = _serve_once(fused=False)
+    tok_f, model_f, steps_f, fb_f = _serve_once(fused=True)
+    return {
+        "bitwise_identical": bool(np.array_equal(tok_b, tok_f)),
+        "barrier": {"ttfd_model_s": model_b, "ttfd_steps": steps_b,
+                    "first_block_steps": fb_b},
+        "fused": {"ttfd_model_s": model_f, "ttfd_steps": steps_f,
+                  "first_block_steps": fb_f},
+        "ttfd_model_improvement": model_b / model_f if model_f else 0.0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 2. sequence-parallel ring attention
+# ---------------------------------------------------------------------------
+
+
+def _ring_overlap() -> dict:
+    # numeric: the ring schedule reproduces full causal flash attention
+    B, H, hd = 1, 2, 32
+    key = jax.random.key(7)
+    kq, kk, kv = jax.random.split(key, 3)
+    shape = (B, RING_SEQ_NUMERIC, H, hd)
+    q = jax.random.normal(kq, shape, jnp.float32)
+    k = jax.random.normal(kk, shape, jnp.float32)
+    v = jax.random.normal(kv, shape, jnp.float32)
+    ring = ops.ring_attention(q, k, v, npes=RING_NPES)
+    ref = ops.flash_attention(q, k, v)
+    max_err = float(jnp.max(jnp.abs(ring - ref)))
+
+    # modeled: long-context operating point at the FULL (unreduced) config —
+    # flash is bandwidth-bound, so a step's compute cost is the bytes it
+    # touches (q + k + v + o of the resident shard), not its FLOPs
+    full = cfgbase.get_config(ARCH)
+    sh = RING_SEQ_MODEL // RING_NPES
+    kv_bytes = 2 * sh * full.d_model * 4
+    compute_bytes = 4 * sh * full.d_model * 4
+    kw = dict(npes=RING_NPES, tier="ici")
+    tb = cutover.t_ring_attention(kv_bytes, compute_bytes, overlap=False,
+                                  **kw)
+    tn = cutover.t_ring_attention(kv_bytes, compute_bytes, overlap=True, **kw)
+    return {
+        "npes": RING_NPES,
+        "seq_numeric": RING_SEQ_NUMERIC,
+        "numeric_max_err": max_err,
+        "seq_model": RING_SEQ_MODEL,
+        "kv_bytes_per_shard": kv_bytes,
+        "compute_bytes_per_step": compute_bytes,
+        "t_blocking_s": tb,
+        "t_overlap_s": tn,
+        "overlap_ratio": tb / tn if tn else 1.0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 3. work-group-resolved cutover fit
+# ---------------------------------------------------------------------------
+
+
+def _cutover_fit() -> dict:
+    """device.put sweep at each collaboration width -> fitted table; the
+    measured (ici, wgs) cutover must exist for every width swept."""
+    ctx, heap = context.init(npes=4, node_size=4, heap_words=1 << 22)
+    buf = heap.malloc((max(SWEEP_SIZES) // 4,), jnp.float32)
+    for wgs in WG_SIZES:
+        wg = device_mod.work_group(ctx, size=wgs, pe=0)
+        for nbytes in SWEEP_SIZES:
+            view = rma.SymPtr("float32", buf.offset, (nbytes // 4,))
+            heap = device_mod.put(wg, heap, view,
+                                  jnp.zeros(nbytes // 4, jnp.float32), 1)
+    tbl = ctx.fit_tuning_table(arm=True)
+    fitted = {f"{tier}/{wi}": int(co)
+              for (tier, wi), co in sorted(tbl.cutovers.items())}
+    present = [("ici", wgs) in tbl.cutovers for wgs in WG_SIZES]
+    return {
+        "work_group_sizes": list(WG_SIZES),
+        "sweep_sizes": len(SWEEP_SIZES),
+        "fitted_cutovers": fitted,
+        "all_widths_fitted": all(present),
+        "armed": ctx.tuning.table is not None,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 4. trace coverage
+# ---------------------------------------------------------------------------
+
+
+def _trace_smoke() -> dict:
+    """Every device op family under a recording tracer -> exported Chrome
+    trace; counts the ``device_*`` events the observability gate needs."""
+    ctx, heap = context.init(npes=4, node_size=4)
+    ctx.tracer = SpanTracer()
+    wg = device_mod.work_group(ctx, size=128, pe=0)
+    buf = heap.malloc((256,), jnp.float32)
+    sig = heap.malloc((1,), jnp.int32)
+    heap = device_mod.put(wg, heap, buf, jnp.ones(256, jnp.float32), 1)
+    _ = device_mod.get(wg, heap, buf, 1)
+    heap = device_mod.put_signal_nbi(wg, heap, buf,
+                                     jnp.full(256, 2.0, jnp.float32),
+                                     sig, 1, device_mod.SIGNAL_ADD, 1)
+    heap, _, ok = device_mod.signal_wait_until(wg, heap, sig, 1, "ge", 1)
+    assert ok, "trace smoke: signal wait must satisfy"
+    heap = device_mod.broadcast(wg, heap, buf, 0, ctx.team_world)
+    heap = device_mod.reduce(wg, heap, buf, buf, "sum", ctx.team_world)
+    doc = export_mod.chrome_trace(ctx.tracer)
+    events = doc["traceEvents"]
+    dev = [e for e in events if str(e.get("name", "")).startswith("device_")]
+    return {
+        "device_events": len(dev),
+        "device_names": sorted({e["name"] for e in dev}),
+        "total_events": len(events),
+    }
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def run():
+    ab = _fused_ab()
+    for mode in ("barrier", "fused"):
+        emit("device_fused_ttfd", f"mode={mode}",
+             ab[mode]["ttfd_model_s"] * 1e6,
+             steps=ab[mode]["ttfd_steps"],
+             first_block_steps=ab[mode]["first_block_steps"],
+             bitwise=ab["bitwise_identical"])
+    ring = _ring_overlap()
+    emit("device_ring_attention", f"npes={RING_NPES},S={RING_SEQ_MODEL}",
+         ring["t_overlap_s"] * 1e6,
+         blocking_us=f"{ring['t_blocking_s'] * 1e6:.1f}",
+         overlap=f"{ring['overlap_ratio']:.2f}",
+         numeric_err=f"{ring['numeric_max_err']:.2e}")
+    fit = _cutover_fit()
+    for key, co in fit["fitted_cutovers"].items():
+        emit("device_cutover_fit", key, 0.0, cutover_B=co)
+    tr = _trace_smoke()
+    emit("device_trace", "span-coverage", 0.0,
+         device_events=tr["device_events"], total=tr["total_events"])
+
+
+def smoke(json_path: str = "BENCH_device.json") -> dict:
+    """CI smoke: all four checks -> JSON artifact (scripts/ci.sh gates)."""
+    doc = {
+        "bench": "device_smoke",
+        "arch": cfgbase.reduced(cfgbase.get_config(ARCH)).name,
+        "fused_vs_barrier": _fused_ab(),
+        "ring_attention": _ring_overlap(),
+        "cutover_fit": _cutover_fit(),
+        "trace": _trace_smoke(),
+    }
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    ab = doc["fused_vs_barrier"]
+    emit("device_smoke", json_path, ab["fused"]["ttfd_model_s"] * 1e6,
+         ttfd_improvement=f"{ab['ttfd_model_improvement']:.2f}",
+         bitwise=ab["bitwise_identical"],
+         ring_overlap=f"{doc['ring_attention']['overlap_ratio']:.2f}",
+         device_events=doc["trace"]["device_events"])
+    return doc
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", nargs="?", const="BENCH_device.json",
+                    default=None, metavar="PATH",
+                    help="CI smoke: fused-vs-barrier TTFD + ring overlap + "
+                         "cutover fit + trace coverage -> JSON artifact")
+    cli = ap.parse_args()
+    if cli.smoke is not None:
+        smoke(cli.smoke)
+    else:
+        run()

@@ -31,10 +31,14 @@ NPES = 8
 SIZES = tuple(1 << b for b in range(12, 25, 2))          # 4 KB .. 16 MB
 
 
-def _overlap_row(nbytes, *, work_items=128, hw=None):
+def _overlap_row(nbytes, *, work_items=None, hw=None):
     """Ring allreduce where each arriving chunk feeds the next tile's
     compute (consumer tile = 4 chunks: the chunk read against resident
-    weights) — the §III-F scenario the nbi ring step exists for."""
+    weights) — the §III-F scenario the nbi ring step exists for.
+    ``work_items=None`` follows ISHMEM_WORK_GROUP_SIZE."""
+    from repro.tune import env as env_mod
+    work_items = cutover.resolve_work_items(work_items,
+                                            env_mod.tuning_from_env())
     hw = hw or cutover.HwParams()
     kw = dict(work_items=work_items, hw=hw,
               step_compute_bytes=4 * nbytes / NPES)

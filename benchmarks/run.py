@@ -28,8 +28,8 @@ def main() -> None:
 
     if args.json is not None:
         import os
-        from benchmarks import (bench_cutover, bench_fleet, bench_kvxfer,
-                                bench_paged_decode)
+        from benchmarks import (bench_cutover, bench_device, bench_fleet,
+                                bench_kvxfer, bench_paged_decode)
         print("bench,config,us_per_call,derived")
         doc = bench_cutover.profile(args.json)
         print(f"# wrote {args.json}: {doc['samples']} samples, "
@@ -45,6 +45,13 @@ def main() -> None:
         print(f"# wrote {pg_path}: streaming TTFD "
               f"{pg['ttfd']['improvement']:.2f}x, "
               f"{pg['shared_prefix']['blocks_shared']} blocks shared")
+        dv_path = os.path.join(out_dir, "BENCH_device.json")
+        dv = bench_device.smoke(dv_path)
+        ab_dv = dv["fused_vs_barrier"]
+        print(f"# wrote {dv_path}: fused TTFD "
+              f"{ab_dv['ttfd_model_improvement']:.2f}x "
+              f"(bitwise={ab_dv['bitwise_identical']}), ring overlap "
+              f"{dv['ring_attention']['overlap_ratio']:.2f}x")
         fl_path = os.path.join(out_dir, "BENCH_fleet.json")
         fl = bench_fleet.smoke(fl_path)
         ab = fl["slo_vs_fcfs"]
@@ -54,10 +61,10 @@ def main() -> None:
               f"{fl['goodput']['points'][-1]['shed']} shed past saturation")
         return
 
-    from benchmarks import (bench_broadcast, bench_cutover, bench_fcollect,
-                            bench_fleet, bench_kernels, bench_kvxfer,
-                            bench_overlap, bench_paged_decode, bench_ring,
-                            bench_rma, bench_workgroup, common)
+    from benchmarks import (bench_broadcast, bench_cutover, bench_device,
+                            bench_fcollect, bench_fleet, bench_kernels,
+                            bench_kvxfer, bench_overlap, bench_paged_decode,
+                            bench_ring, bench_rma, bench_workgroup, common)
     suites = [
         ("fig3_rma", bench_rma.run),
         ("fig4_workgroup", bench_workgroup.run),
@@ -69,6 +76,7 @@ def main() -> None:
         ("overlap", bench_overlap.run),
         ("kvxfer", bench_kvxfer.run),
         ("paged_decode", bench_paged_decode.run),
+        ("device", bench_device.run),
         ("fleet", bench_fleet.run),
     ]
     only = args.only.split(",") if args.only else None

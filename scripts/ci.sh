@@ -140,3 +140,40 @@ print(f"obs work {ov['overhead_pct']:.2f}% of wall clock, "
       f"{rf['refits']} re-fits flipped {rf['decisions_changed']} "
       f"decisions -> OK")
 EOF
+
+echo "== device-initiated smoke (fused admission / ring attention) =="
+python -m benchmarks.bench_device --smoke BENCH_device.json
+python - <<'EOF'
+import json
+doc = json.load(open("BENCH_device.json"))
+ab = doc["fused_vs_barrier"]
+assert ab["bitwise_identical"], \
+    "fused paged-attention decode diverged from the barrier baseline"
+f, b = ab["fused"], ab["barrier"]
+assert f["ttfd_model_s"] < b["ttfd_model_s"], \
+    f"fused admission no longer beats the barrier on the modeled comm " \
+    f"clock ({f['ttfd_model_s']*1e6:.2f}us >= {b['ttfd_model_s']*1e6:.2f}us)"
+assert f["ttfd_steps"] < b["ttfd_steps"], \
+    f"fused admission no longer beats the barrier on step-level TTFD " \
+    f"({f['ttfd_steps']} >= {b['ttfd_steps']} steps)"
+assert f["first_block_steps"] < b["first_block_steps"], \
+    f"time-to-first-resident-block regressed ({f['first_block_steps']} >= " \
+    f"{b['first_block_steps']} steps)"
+ring = doc["ring_attention"]
+assert ring["overlap_ratio"] >= 1.2, \
+    f"ring-attention overlap below acceptance floor at long context " \
+    f"({ring['overlap_ratio']:.2f} < 1.2)"
+assert ring["numeric_max_err"] < 1e-4, \
+    f"ring attention diverged from flash ({ring['numeric_max_err']:.2e})"
+fit = doc["cutover_fit"]
+assert fit["all_widths_fitted"], \
+    f"device-op telemetry missing fitted (tier, work_group) cutovers: " \
+    f"{fit['fitted_cutovers']}"
+tr = doc["trace"]
+assert tr["device_events"] > 0, "no device_* spans in the exported trace"
+print(f"fused TTFD {ab['ttfd_model_improvement']:.2f}x modeled "
+      f"({f['ttfd_steps']} vs {b['ttfd_steps']} steps, bitwise ok), ring "
+      f"overlap {ring['overlap_ratio']:.2f}x, "
+      f"{len(fit['fitted_cutovers'])} fitted width cutovers, "
+      f"{tr['device_events']} device trace events -> OK")
+EOF

@@ -63,6 +63,14 @@ class Tuning:
 TIERS = ("local", "ici", "dcn")
 
 
+def resolve_work_items(work_items, tuning: Tuning) -> int:
+    """``None`` means "the configured work-group size": host-side call sites
+    that don't pick an explicit collaboration width inherit
+    ``Tuning.work_group_size`` (the ``ISHMEM_WORK_GROUP_SIZE`` knob) instead
+    of a hardcoded 128."""
+    return tuning.work_group_size if work_items is None else work_items
+
+
 def direct_bw(hw: HwParams, work_items: int) -> float:
     return min(hw.direct_bw_cap, max(1, work_items) * hw.direct_bw_per_item)
 
@@ -86,9 +94,11 @@ def t_proxy(hw: HwParams, nbytes: int, tier: str) -> float:
     return hw.alpha_proxy + nbytes / bw + hw.ring_msg_bytes / hw.dcn_bw
 
 
-def choose_path(nbytes: int, *, work_items: int = 128, tier: str = "ici",
-                hw: HwParams = HwParams(), tuning: Tuning = Tuning()) -> str:
+def choose_path(nbytes: int, *, work_items: int | None = None,
+                tier: str = "ici", hw: HwParams = HwParams(),
+                tuning: Tuning = Tuning()) -> str:
     """Pick the transport for one RMA op (the paper's tuned cutover)."""
+    work_items = resolve_work_items(work_items, tuning)
     if tuning.force_path:
         return tuning.force_path
     if tier == "dcn":
@@ -105,7 +115,7 @@ def choose_path(nbytes: int, *, work_items: int = 128, tier: str = "ici",
 
 
 def choose_collective_path(kind: str, nbytes: int, npes: int, *,
-                           work_items: int = 128, tier: str = "ici",
+                           work_items: int | None = None, tier: str = "ici",
                            hw: HwParams = HwParams(),
                            tuning: Tuning = Tuning()) -> str:
     """The single chooser for collectives — same precedence as
@@ -118,6 +128,7 @@ def choose_collective_path(kind: str, nbytes: int, npes: int, *,
     collective model; an armed table WITHOUT coverage for this tier must not
     reroute collectives through the point-to-point model.
     """
+    work_items = resolve_work_items(work_items, tuning)
     if tuning.force_path:
         return tuning.force_path
     if tuning.cutover_bytes is not None or (
@@ -209,10 +220,11 @@ def t_collective(kind: str, nbytes_per_pe: int, npes: int, *,
 # ---------------------------------------------------------------------------
 
 
-def t_ring_step(chunk_bytes: float, *, work_items: int = 128,
+def t_ring_step(chunk_bytes: float, *, work_items: int | None = None,
                 tier: str = "ici", hw: HwParams = HwParams(),
                 tuning: Tuning = Tuning()) -> float:
     """One neighbor transfer of the ring (path picked per chunk size)."""
+    work_items = resolve_work_items(work_items, tuning)
     path = choose_path(max(1, int(chunk_bytes)), work_items=work_items,
                        tier=tier, hw=hw, tuning=tuning)
     if path == "proxy":
@@ -221,7 +233,7 @@ def t_ring_step(chunk_bytes: float, *, work_items: int = 128,
                    hw=hw)
 
 
-def t_ring_allreduce(nbytes: int, npes: int, *, work_items: int = 128,
+def t_ring_allreduce(nbytes: int, npes: int, *, work_items: int | None = None,
                      tier: str = "ici", hw: HwParams = HwParams(),
                      tuning: Tuning = Tuning(), overlap: bool = False,
                      step_compute_bytes: float = 0.0) -> float:
@@ -256,7 +268,7 @@ def t_ring_allreduce(nbytes: int, npes: int, *, work_items: int = 128,
     return phase(t_rs_c) + phase(t_ag_c) + quiet
 
 
-def overlap_efficiency(nbytes: int, npes: int, *, work_items: int = 128,
+def overlap_efficiency(nbytes: int, npes: int, *, work_items: int | None = None,
                        tier: str = "ici", hw: HwParams = HwParams(),
                        tuning: Tuning = Tuning(),
                        step_compute_bytes: float = 0.0) -> float:
@@ -266,6 +278,48 @@ def overlap_efficiency(nbytes: int, npes: int, *, work_items: int = 128,
               step_compute_bytes=step_compute_bytes)
     tb = t_ring_allreduce(nbytes, npes, overlap=False, **kw)
     tn = t_ring_allreduce(nbytes, npes, overlap=True, **kw)
+    return tb / tn if tn > 0 else 1.0
+
+
+def t_ring_attention(kv_bytes_per_shard: int, compute_bytes_per_step: float,
+                     npes: int, *, overlap: bool = True,
+                     work_items: int | None = None, tier: str = "ici",
+                     hw: HwParams = HwParams(),
+                     tuning: Tuning = Tuning()) -> float:
+    """Sequence-parallel ring attention over ``npes`` decode PEs: each PE
+    holds one KV shard, computes a partial flash step against the resident
+    shard, and rotates shards around the ring ``npes - 1`` times.
+
+    ``overlap=False`` serializes each rotation's transfer and partial-attn
+    compute; ``overlap=True`` is the device-initiated schedule — the
+    work-group issues step k+1's K/V rotation (nbi put_signal) before
+    consuming step k's shard, so a steady-state step costs
+    ``max(t_xfer, t_compute)``.  The quiet closing the ring is two direct
+    launch latencies (issue + final signal wait), same as the allreduce
+    overlap model."""
+    work_items = resolve_work_items(work_items, tuning)
+    t_c = compute_bytes_per_step / hw.reduce_bw
+    if npes <= 1:
+        return t_c
+    t_x = t_ring_step(kv_bytes_per_shard, work_items=work_items, tier=tier,
+                      hw=hw, tuning=tuning)
+    if not overlap:
+        return t_c + (npes - 1) * (t_x + t_c)
+    return t_c + (npes - 1) * max(t_x, t_c) + 2 * hw.alpha_direct
+
+
+def ring_attention_overlap(kv_bytes_per_shard: int,
+                           compute_bytes_per_step: float, npes: int, *,
+                           work_items: int | None = None, tier: str = "ici",
+                           hw: HwParams = HwParams(),
+                           tuning: Tuning = Tuning()) -> float:
+    """Modeled speedup of device-initiated ring attention over the blocking
+    rotate-then-compute schedule (the ci.sh long-context gate)."""
+    kw = dict(work_items=work_items, tier=tier, hw=hw, tuning=tuning)
+    tb = t_ring_attention(kv_bytes_per_shard, compute_bytes_per_step, npes,
+                          overlap=False, **kw)
+    tn = t_ring_attention(kv_bytes_per_shard, compute_bytes_per_step, npes,
+                          overlap=True, **kw)
     return tb / tn if tn > 0 else 1.0
 
 

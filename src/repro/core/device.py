@@ -1,0 +1,250 @@
+"""Device-initiated, work-group-collaborative SHMEM ops (paper §III-F/G).
+
+The paper's headline extension is ``ishmemx_*_work_group``: SHMEM calls made
+*from inside a running kernel*, where all work-items of one work-group
+cooperate to move a block — and the runtime adapts between direct
+load/store (the work-items issue the remote stores themselves; bandwidth
+scales with the collaboration width) and the copy engine (reverse-offload
+a DMA descriptor; full link bandwidth but extra startup).
+
+This module is the host-visible simulation of that surface, structured the
+way a kernel would use it:
+
+- A :class:`WorkGroup` is the device-side caller identity: *which* PE the
+  kernel runs on and *how many* work-items collaborate
+  (``ISHMEM_WORK_GROUP_SIZE`` via ``Tuning.work_group_size`` by default).
+- Every op prices the direct-vs-engine decision **per collaborative op** via
+  ``cutover.choose_path(..., work_items=wg.size)`` and records ``device_*``
+  telemetry at that width, so the autotuner (``tune/estimator.py``) fits
+  work-group-resolved transport profiles and cutovers.
+- Non-blocking variants ride the same :class:`~repro.core.pending.
+  CompletionQueue` as the host ops — device and host nbi traffic share one
+  ordered stream per context, exactly like the real runtime's single
+  completion domain.
+- ``signal_wait_until`` differs from the host wait on purpose: a device
+  work-group *spins* on the signal word, so it forces only the MINIMAL
+  pending prefix that can advance the word (``pending_first``), one step per
+  spin, instead of the whole dependency prefix.  That is what lets a fused
+  kernel consume block k's bytes the moment block k's signal lands while
+  blocks k+1.. stay on the wire (see ``serve/kvxfer.py`` ``migrate_fused``).
+
+The Pallas kernels that *consume* these semantics (fused paged-attention
+gather, sequence-parallel ring attention) live in
+``repro.kernels.ishmem_device``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import cutover, pending as pending_mod
+from repro.core.heap import SymPtr
+from repro.core.pending import write_row
+from repro.core.signal import SIGNAL_ADD, SIGNAL_SET, _CMP, _sig_apply
+from repro.core.teams import Team
+
+__all__ = [
+    "WorkGroup", "work_group", "put", "get", "put_nbi", "put_signal_nbi",
+    "signal_wait_until", "broadcast", "reduce", "SIGNAL_SET", "SIGNAL_ADD",
+]
+
+
+@dataclasses.dataclass
+class WorkGroup:
+    """Device-side caller identity: a work-group of ``size`` work-items
+    executing on PE ``pe``.  All collaborative ops below take this first —
+    the device analog of passing ``ctx`` to a host op."""
+    ctx: object                      # ShmemContext
+    size: int                        # collaborating work-items
+    pe: int = 0                      # PE the kernel is running on
+
+    def tier(self, other_pe: int) -> str:
+        return self.ctx.tier(self.pe, other_pe)
+
+    # trace-track identity: device ops render on the issuing PE's lane
+    @property
+    def pid(self) -> str:
+        return f"pod{self.ctx.node_of(self.pe)}"
+
+    @property
+    def tid(self) -> str:
+        return f"pe{self.pe}"
+
+
+def work_group(ctx, size: int | None = None, pe: int = 0) -> WorkGroup:
+    """Enter a device work-group scope.  ``size=None`` inherits the
+    configured ``ISHMEM_WORK_GROUP_SIZE`` (``Tuning.work_group_size``)."""
+    if size is None:
+        size = ctx.tuning.work_group_size
+    return WorkGroup(ctx=ctx, size=int(size), pe=int(pe))
+
+
+def _instant(wg: WorkGroup, name: str, **args) -> None:
+    tracer = wg.ctx.tracer
+    if tracer.enabled:
+        tracer.instant(name, "dev", wg.pid, wg.tid, **args)
+
+
+# ---------------------------------------------------------------------------
+# collaborative RMA
+# ---------------------------------------------------------------------------
+
+
+def put(wg: WorkGroup, heap, dest: SymPtr, value, dst_pe: int):
+    """ishmemx_put_work_group: the work-group cooperatively stores a block
+    into ``dst_pe``'s row.  Direct vs copy-engine is decided at the group's
+    collaboration width — wider groups keep larger blocks on the
+    load/store path (paper Fig. 4a)."""
+    ctx = wg.ctx
+    value = jnp.asarray(value, jnp.dtype(dest.dtype)).reshape((dest.size,))
+    tier = wg.tier(dst_pe)
+    path = cutover.choose_path(dest.nbytes, work_items=wg.size, tier=tier,
+                               hw=ctx.hw, tuning=ctx.tuning)
+    ctx.record("device_put", dest.nbytes, path, tier, wg.size)
+    _instant(wg, "device_put", path=path, tier=tier, nbytes=dest.nbytes,
+             pe=dst_pe, work_items=wg.size)
+    heap = ctx.pending.resolve_store_conflicts(ctx, heap, dest, dst_pe)
+    return write_row(ctx, heap, dest, dst_pe, value)
+
+
+def get(wg: WorkGroup, heap, src: SymPtr, src_pe_remote: int):
+    """ishmemx_get_work_group: cooperative one-sided load."""
+    ctx = wg.ctx
+    tier = wg.tier(src_pe_remote)
+    path = cutover.choose_path(src.nbytes, work_items=wg.size, tier=tier,
+                               hw=ctx.hw, tuning=ctx.tuning)
+    ctx.record("device_get", src.nbytes, path, tier, wg.size)
+    _instant(wg, "device_get", path=path, tier=tier, nbytes=src.nbytes,
+             pe=src_pe_remote, work_items=wg.size)
+    return heap.read(src, src_pe_remote)
+
+
+def put_nbi(wg: WorkGroup, heap, dest: SymPtr, value, dst_pe: int):
+    """ishmemx_put_nbi_work_group: deferred collaborative put.  Parks on the
+    context's completion queue at the group's width; the transport is chosen
+    at flush time on the coalesced transfer size."""
+    ctx = wg.ctx
+    value = jnp.asarray(value, jnp.dtype(dest.dtype)).reshape((dest.size,))
+    tier = wg.tier(dst_pe)
+    marker_path = "proxy" if tier == "dcn" else "engine"
+    ctx.record("device_put_nbi(pending)", dest.nbytes, marker_path, tier,
+               wg.size, t_sec=0.0)
+    ctx.pending.submit(pending_mod.PUT, "device_put_nbi", dest, dst_pe, tier,
+                       work_items=wg.size, value=value,
+                       marker=ctx.ledger[-1] if ctx.ledger else None)
+    return heap
+
+
+def put_signal_nbi(wg: WorkGroup, heap, dest: SymPtr, value, sig_ptr: SymPtr,
+                   signal, sig_op: int, dst_pe: int):
+    """ishmemx_put_signal_nbi_work_group: deferred data put + deferred signal
+    update, ordered data-before-flag inside the flush (the signal entry is a
+    non-coalescible barrier right behind its data, so write combining can
+    never lift a later put across it)."""
+    ctx = wg.ctx
+    heap = put_nbi(wg, heap, dest, value, dst_pe)
+    tier = wg.tier(dst_pe)
+    ctx.record("signal(pending)", jnp.dtype(sig_ptr.dtype).itemsize,
+               "direct", tier, 1, t_sec=0.0)
+    ctx.pending.submit(pending_mod.SIGNAL, "signal", sig_ptr, dst_pe, tier,
+                       apply=_sig_apply(signal, sig_op),
+                       marker=ctx.ledger[-1] if ctx.ledger else None)
+    return heap
+
+
+# ---------------------------------------------------------------------------
+# device-side signal wait
+# ---------------------------------------------------------------------------
+
+
+def signal_wait_until(wg: WorkGroup, heap, sig_ptr: SymPtr, pe: int,
+                      cmp: str, value):
+    """ishmemx_signal_wait_until_work_group: the work-group spins on the
+    signal word until the predicate holds.
+
+    Completion forcing is MINIMAL: each spin forces only the FIRST pending
+    op that can advance the waited word and its preceding prefix
+    (``pending_first`` + ``flush_prefix``), then re-reads.  Contrast the
+    host-side wait, which completes the whole dependency prefix in one shot.
+    This is what makes per-block fusion real — waiting for block k's signal
+    completes exactly the queue prefix through block k, leaving blocks
+    k+1.. pending on the wire for later waits.
+
+    Returns ``(heap, last_value, satisfied)``; ``satisfied=False`` means no
+    pending traffic can ever satisfy the predicate (the caller's spin would
+    deadlock — the property tests assert gating on exactly this)."""
+    ctx = wg.ctx
+    target = None
+    spins = 0
+    while True:
+        cur = heap.read(sig_ptr, pe).reshape(())
+        if target is None:
+            target = jnp.asarray(value, cur.dtype)
+        if _CMP[cmp](cur, target):
+            ok = True
+            break
+        dep = ctx.pending.pending_first(sig_ptr, pe)
+        if dep is None:
+            ok = False
+            break
+        heap = ctx.pending.flush_prefix(ctx, heap, dep)
+        spins += 1
+    ctx.record("device_signal_wait", 0, "direct", "local", wg.size)
+    _instant(wg, "device_signal_wait", cmp=cmp, value=int(value),
+             observed=int(cur), spins=spins, ok=bool(ok))
+    return heap, cur, ok
+
+
+# ---------------------------------------------------------------------------
+# collaborative collectives
+# ---------------------------------------------------------------------------
+
+
+def broadcast(wg: WorkGroup, heap, ptr: SymPtr, root: int, team: Team):
+    """ishmemx_broadcast_work_group: root's work-group pushes its buffer to
+    every teammate (store inner loop over destinations), priced at the
+    group's collaboration width."""
+    ctx = wg.ctx
+    path = cutover.choose_collective_path(
+        "broadcast", ptr.nbytes, team.size, work_items=wg.size, tier="ici",
+        hw=ctx.hw, tuning=ctx.tuning)
+    src = heap.read(ptr, team.translate(root))
+    data = heap.read_all(ptr)
+    vals = jnp.broadcast_to(src[None], (team.size,) + ptr.shape)
+    data = data.at[jnp.array(team.pes())].set(vals)
+    heap = heap.write_all(ptr, data)
+    t = cutover.t_collective("broadcast", ptr.nbytes, team.size,
+                             work_items=wg.size, path=path, hw=ctx.hw)
+    ctx.record("device_broadcast", ptr.nbytes, path, "ici", wg.size, t_sec=t)
+    _instant(wg, "device_broadcast", path=path, nbytes=ptr.nbytes,
+             npes=team.size, work_items=wg.size)
+    return heap
+
+
+def reduce(wg: WorkGroup, heap, dest: SymPtr, src: SymPtr, op: str,
+           team: Team):
+    """ishmemx_<op>_reduce_work_group: address-split across the group's
+    work-items — every PE pulls all rows and reduces its slice locally."""
+    from repro.core.collectives import REDUCE_OPS
+    ctx = wg.ctx
+    fn, _ = REDUCE_OPS[op]
+    data = heap.read_all(src)
+    rows = data[jnp.array(team.pes())]
+    acc = rows[0]
+    for i in range(1, team.size):
+        acc = fn(acc, rows[i])
+    out = heap.read_all(dest)
+    vals = jnp.broadcast_to(acc[None], (team.size,) + src.shape)
+    out = out.at[jnp.array(team.pes())].set(
+        vals.reshape((team.size,) + dest.shape))
+    heap = heap.write_all(dest, out)
+    path = cutover.choose_collective_path(
+        "reduce", src.nbytes, team.size, work_items=wg.size, tier="ici",
+        hw=ctx.hw, tuning=ctx.tuning)
+    t = cutover.t_collective("reduce", src.nbytes, team.size,
+                             work_items=wg.size, path=path, hw=ctx.hw)
+    ctx.record("device_reduce", src.nbytes, path, "ici", wg.size, t_sec=t)
+    _instant(wg, "device_reduce", path=path, op=op, nbytes=src.nbytes,
+             npes=team.size, work_items=wg.size)
+    return heap

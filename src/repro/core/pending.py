@@ -175,6 +175,20 @@ class CompletionQueue:
                 last = i
         return last
 
+    def pending_first(self, ptr: SymPtr, pe: int) -> Optional[int]:
+        """Index (into ops) of the FIRST pending op whose target overlaps one
+        element at (ptr, pe).  A device-side ``signal_wait_until`` spins on
+        the word, so it only needs to force the MINIMAL prefix that can
+        advance the signal — one pending update at a time — instead of the
+        whole stream the host-side wait (``pending_for``) completes."""
+        pe = int(pe)
+        for i, o in enumerate(self.ops):
+            if (o.pe == pe and o.ptr.dtype == ptr.dtype
+                    and o.ptr.offset < ptr.offset + max(1, ptr.size)
+                    and ptr.offset < o.end):
+                return i
+        return None
+
     # -------------------------------------------------------------- flush
     def flush(self, ctx, heap, *, proxy=None):
         """Complete every pending op, in order, coalescing within epochs.

@@ -51,6 +51,17 @@ barrier_push = ring_collectives.barrier_push
 remote_put = rma_copy.remote_put
 
 
+def __getattr__(name):
+    # device-initiated attention entry points (lazy: ishmem_device pulls in
+    # serve-layer types, and most kernel consumers never need it)
+    _DEVICE = ("fused_paged_attn", "paged_gather", "flash_partial",
+               "merge_partials", "ring_attention")
+    if name in _DEVICE:
+        from repro.kernels import ishmem_device
+        return getattr(ishmem_device, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 def flash_attention(q, k, v, *, block_q: int = 256, block_k: int = 256):
     """Fused causal attention with GQA support (repeats KV heads)."""
     from repro.kernels import flash_attn

@@ -72,6 +72,103 @@ def _overlap_report(args) -> None:
                   f"({crossover * per_tok} B per decode step)")
 
 
+def _seq_parallel_report(args, cfg) -> None:
+    """Sequence-parallel ring attention demo (DESIGN.md §12.4): the context
+    is sharded across N decode PEs, each ring step's K/V rotation is issued
+    DEVICE-SIDE (work-group ``put_signal_nbi`` to the left neighbor, device
+    ``signal_wait_until`` before the partial-attention kernel reads the
+    landed shard), and the result is checked against single-PE flash
+    attention.  Ends with the modeled blocking-vs-overlapped step pricing
+    (``cutover.t_ring_attention``)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import context, device as device_mod
+    from repro.core.cutover import ring_attention_overlap, t_ring_attention
+    from repro.core.signal import SIGNAL_ADD
+    from repro.kernels import ishmem_device as dev_kern
+    from repro.kernels import ops
+
+    npes = args.seq_parallel
+    B, H, hd = 1, 4, 32
+    S = ((max(args.prompt_len, 8 * npes) + npes - 1) // npes) * npes
+    Sh = S // npes
+    key = jax.random.key(args.seed)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i),
+                                 (B, S, H, hd), jnp.float32) * 0.1
+               for i in range(3))
+    ctx, heap = context.init(npes=npes, node_size=npes)
+    shard_words = 2 * B * Sh * H * hd               # k + v, one shard
+    buf = heap.malloc((shard_words,), jnp.float32)
+    sig = heap.malloc((1,), jnp.int32)
+
+    def pack(j):
+        return jnp.concatenate([k[:, j * Sh:(j + 1) * Sh].reshape(-1),
+                                v[:, j * Sh:(j + 1) * Sh].reshape(-1)])
+
+    def unpack(flat):
+        kv = flat.reshape(2, B, Sh, H, hd)
+        return kv[0], kv[1]
+
+    for i in range(npes):                           # shard i starts at PE i
+        heap = heap.write(buf, i, pack(i))
+        heap = heap.write(sig, i, jnp.zeros((1,), jnp.int32))
+    parts = [[] for _ in range(npes)]
+    for t in range(npes):
+        for i in range(npes):
+            j = (i - t) % npes                      # shard resident at PE i
+            if j <= i:                              # causal: skip future kv
+                kj, vj = unpack(heap.read(buf, i))
+                parts[i].append(dev_kern.flash_partial(
+                    q[:, i * Sh:(i + 1) * Sh], kj, vj,
+                    q_off=i * Sh, k_off=j * Sh))
+        if t == npes - 1:
+            break
+        # device-side rotation: every PE's work-group pushes its current
+        # shard to the RIGHT neighbor with a signal (PE i then holds shard
+        # (i - t) % npes), then waits for the shard arriving from the left
+        # before the next step reads it
+        shards = [heap.read(buf, i) for i in range(npes)]
+        for i in range(npes):
+            wg = device_mod.work_group(ctx, pe=i)
+            heap = device_mod.put_signal_nbi(
+                wg, heap, buf, shards[i], sig, 1, SIGNAL_ADD,
+                (i + 1) % npes)
+        for i in range(npes):
+            wg = device_mod.work_group(ctx, pe=i)
+            heap, _, ok = device_mod.signal_wait_until(
+                wg, heap, sig, i, "ge", t + 1)
+            assert ok, "ring neighbor's shard never landed"
+    out = jnp.concatenate(
+        [dev_kern.merge_partials(parts[i]) for i in range(npes)], axis=1)
+    ref = ops.flash_attention(q, k, v)
+    err = float(jnp.abs(out - ref.astype(out.dtype)).max())
+    print(f"[serve] seq-parallel ring attention: npes={npes} S={S} "
+          f"(shard {Sh}) max|err| vs single-PE flash = {err:.2e}")
+    dev_ops = sorted({key[0] for key in ctx.telemetry.buckets
+                      if key[0].startswith("device_")})
+    print(f"[serve]   device ops on the wire: {', '.join(dev_ops)}")
+    # modeled step pricing at the FULL architecture's shapes and a
+    # production context length (the reduced demo above only checks math)
+    from repro.configs import base as cfgbase
+    full_cfg = cfgbase.get_config(args.arch)
+    S_prod = max(args.prompt_len, 32768)
+    # per ring step each PE moves one K/V shard and runs one partial-flash
+    # tile over it; flash is bandwidth-bound at these shapes, so the compute
+    # term is the q + k + v + o bytes the kernel touches
+    kv_bytes = 2 * (S_prod // npes) * full_cfg.d_model * 4
+    compute = 4 * (S_prod // npes) * full_cfg.d_model * 4
+    tb = t_ring_attention(kv_bytes, compute, npes, overlap=False,
+                          tuning=ctx.tuning)
+    to = t_ring_attention(kv_bytes, compute, npes, overlap=True,
+                          tuning=ctx.tuning)
+    ratio = ring_attention_overlap(kv_bytes, compute, npes,
+                                   tuning=ctx.tuning)
+    print(f"[serve]   modeled ring step: blocking {tb * 1e6:.1f} us vs "
+          f"overlapped {to * 1e6:.1f} us -> x{ratio:.2f} "
+          f"({'overlap wins' if ratio > 1 else 'alpha-bound'})")
+
+
 def _make_batch(cfg, key, batch: int, prompt_len: int) -> dict:
     """Random request batch with whatever frontend embeds the family needs."""
     import jax
@@ -155,6 +252,7 @@ def _run_disagg(args, cfg, params) -> None:
         admit_delay_steps=args.admit_delay,
         paged=not args.dense_rehydrate,
         stream_chunks=args.stream_chunks,
+        fused_attn=args.fused_attn,
         shared_prefix=args.shared_prefix)
     base = _make_batch(cfg, jax.random.key(1), 1, args.prompt_len)
     for i in range(args.requests):
@@ -179,6 +277,12 @@ def _run_disagg(args, cfg, params) -> None:
         avg_t = sum(st.ttfd_model_s) / len(st.ttfd_model_s)
         print(f"[serve]   time-to-first-decode-token: {avg_steps:.1f} sched "
               f"steps / {avg_t * 1e6:.1f} us modeled comm window")
+    if st.ttfd_first_block_steps:
+        avg_fb = (sum(st.ttfd_first_block_steps)
+                  / len(st.ttfd_first_block_steps))
+        mode_tag = "fused admission gate" if args.fused_attn else "observed"
+        print(f"[serve]   time-to-first-resident-block: {avg_fb:.1f} sched "
+              f"steps ({mode_tag})")
     if args.stream_chunks:
         print(f"[serve]   streaming: {st.stream_chunks} wire installments "
               f"of {args.stream_chunks} block(s)")
@@ -311,6 +415,16 @@ def main():
                     help="serve every request as a sample of one shared "
                          "prompt: prefix blocks are mapped (incref), not "
                          "re-staged, with copy-on-write on divergence")
+    ap.add_argument("--fused-attn", action="store_true",
+                    help="device-initiated fused decode protocol: per-block "
+                         "migration signals, first-block admission, and "
+                         "per-signal block consumption inside the decode "
+                         "gather (DESIGN.md §12; excludes --stream-chunks)")
+    ap.add_argument("--seq-parallel", type=int, default=0, metavar="N",
+                    help="sequence-parallel ring attention demo over N PEs: "
+                         "device-side K/V rotation per ring step, checked "
+                         "against single-PE flash, plus the modeled "
+                         "blocking-vs-overlap step pricing")
     ap.add_argument("--dense-rehydrate", action="store_true",
                     help="fall back to the PR-3 dense-cache admission "
                          "(gather+insert) instead of paged decode attention")
@@ -388,6 +502,8 @@ def main():
 
     if args.overlap_report:
         _overlap_report(args)
+    if args.seq_parallel:
+        _seq_parallel_report(args, cfg)
 
 
 if __name__ == "__main__":

@@ -62,6 +62,7 @@ def collect(pods, *, classes: Optional[Dict] = None,
     per_class: Dict[str, dict] = {}
     ttfd_all: List[float] = []
     ttfd_model_all: List[float] = []
+    ttfd_first_block_all: List[float] = []
     e2e_all: List[float] = []
     offered = completed = shed = good = 0
     per_pod = {}
@@ -109,6 +110,9 @@ def collect(pods, *, classes: Optional[Dict] = None,
             bucket["_e2e"].append(e2e)
             ttfd_all.append(ttfd)
             ttfd_model_all.append(ttfd_model)
+            if req.first_block_step >= 0:
+                ttfd_first_block_all.append(
+                    req.first_block_step - req.arrival_step)
             e2e_all.append(e2e)
             if ttfd <= cls.ttfd_deadline:
                 good += 1
@@ -124,6 +128,14 @@ def collect(pods, *, classes: Optional[Dict] = None,
         "good": good,
         "goodput": good / offered if offered else 0.0,
         "latency": _latency_block(ttfd_all, ttfd_model_all, e2e_all),
+        # time-to-first-resident-block percentiles (additive keys — the
+        # device-op PR's satellite stat; equals admission under the barrier
+        # protocol, strictly earlier under fused admission)
+        "ttfd_first_block": {
+            "p50_steps": percentile(ttfd_first_block_all, 50),
+            "p99_steps": percentile(ttfd_first_block_all, 99),
+            "count": len(ttfd_first_block_all),
+        },
         "by_class": per_class,
         "by_pod": per_pod,
         "wire": {

@@ -56,7 +56,8 @@ from typing import List, Optional
 
 import jax.numpy as jnp
 
-from repro.core import cutover, rma, signal as signal_mod
+from repro.core import cutover, device as device_mod, rma, \
+    signal as signal_mod
 from repro.core.heap import SymPtr
 from repro.serve.kvpool import HEADER_WORDS, KVPool, pack_blocks, pack_tail
 
@@ -67,6 +68,13 @@ EXTRA_SIGNALS = 2
 
 def expected_signal(n_blocks: int) -> int:
     return n_blocks + EXTRA_SIGNALS
+
+
+def fused_admit_signal(n_wire: int) -> int:
+    """Fused-protocol admission threshold: tail + header + the FIRST wire
+    block (or just tail + header when nothing travels).  The remaining
+    blocks are consumed per-signal by the decode-side device waits."""
+    return EXTRA_SIGNALS + min(1, n_wire)
 
 
 @dataclasses.dataclass
@@ -86,6 +94,7 @@ class MigrationReport:
     expected_signal: int
     chunks: int = 1             # wire installments (1 = whole-prefill)
     bytes_dcn: int = 0          # wire bytes that crossed pods (proxy ring)
+    fused: bool = False         # per-block signal protocol (migrate_fused)
 
     @property
     def bytes_total(self) -> int:
@@ -136,11 +145,14 @@ class KVMigrator:
     """Streams paged KV blocks between PEs with signal-carried completion."""
 
     def __init__(self, ctx, pool: KVPool, *, proxy=None,
-                 work_items: int = 128):
+                 work_items: Optional[int] = None):
         self.ctx = ctx
         self.pool = pool
         self.proxy = proxy          # HostProxy for dcn-tier flushes (optional)
-        self.work_items = work_items
+        # default to the configured work-group size (ISHMEM_WORK_GROUP_SIZE)
+        # instead of a hardcoded width — satellite of the device-op PR
+        self.work_items = (ctx.tuning.work_group_size
+                          if work_items is None else work_items)
         self._staged_tails = {}     # req_id -> packed tail vector
 
     def _tracer(self):
@@ -286,6 +298,59 @@ class KVMigrator:
             tr.flow_start(req_id, "migration", pid, tid)
         return heap, report
 
+    # --------------------------------------------------- fused migration
+    def migrate_fused(self, heap, req_id: int, *, src_pe: int, dst_pe: int,
+                      slot: int, prompt_len: int, first_token: int,
+                      skip=frozenset()) -> tuple:
+        """Per-block-signal migration for the fused decode path.
+
+        Wire order inverts :meth:`migrate`: the tail + header travel FIRST
+        (each ``SIGNAL_ADD(1)``), then every wire block goes out
+        INDIVIDUALLY with its own ``SIGNAL_ADD(1)``, in TABLE order, as a
+        device work-group collaborative ``put_signal_nbi``.  No run
+        coalescing — per-block signal granularity is the point: block k is
+        provably resident once ``sig >= EXTRA_SIGNALS + k``, so the decode
+        PE admits after the FIRST block signal
+        (:func:`fused_admit_signal`) and consumes the rest as they land
+        (``consume_blocks``), instead of stalling on the whole-request
+        barrier ``sent + 2``.  Total signal increments are unchanged
+        (``n_wire + 2``).  The honest trade: per-block sends forfeit the
+        barrier protocol's write-combined runs."""
+        lay = self.pool.layout
+        send, n_staged, n_skipped = self._wire_plan(req_id, skip)
+        tier = self.ctx.tier(src_pe, dst_pe)
+        sig = self.pool.sig_ptr(slot)
+        heap = self._send_tail_header(heap, req_id, slot, src_pe, dst_pe,
+                                      prompt_len, first_token, n_staged)
+        dcn = lay.tail_words * 4 + HEADER_WORDS * 4 if tier == "dcn" else 0
+        for bid in send:
+            ptr = self.pool.block_ptr(bid)
+            home = self.pool.home_of(bid)
+            wg = device_mod.work_group(self.ctx, size=self.work_items,
+                                       pe=home)
+            heap = device_mod.put_signal_nbi(
+                wg, heap, ptr, heap.read(ptr, home), sig, 1,
+                signal_mod.SIGNAL_ADD, dst_pe)
+            if self.ctx.tier(home, dst_pe) == "dcn":
+                dcn += ptr.nbytes
+        report = MigrationReport(
+            req_id=req_id, slot=slot, src_pe=src_pe, dst_pe=dst_pe,
+            tier=tier, n_blocks=n_staged, n_wire=len(send),
+            n_runs=len(send),
+            bytes_paged=len(send) * lay.block_bytes,
+            bytes_tail=lay.tail_words * 4,
+            bytes_skipped=n_skipped * lay.block_bytes,
+            expected_signal=expected_signal(len(send)), bytes_dcn=dcn,
+            fused=True)
+        tr = self._tracer()
+        if tr is not None:
+            pid, tid = self._track(src_pe)
+            tr.instant("migrate_fused", "kvx", pid, tid, rid=req_id,
+                       dst_pe=dst_pe, tier=tier, blocks=len(send),
+                       bytes=report.bytes_total, bytes_dcn=dcn)
+            tr.flow_start(req_id, "migration", pid, tid)
+        return heap, report
+
     # ----------------------------------------------------- chunked streaming
     def open_stream(self, req_id: int, *, src_pe: int, dst_pe: int,
                     slot: int, prompt_len: int, first_token: int,
@@ -424,6 +489,55 @@ class KVMigrator:
             tr.flow_end(hdr[0], "migration", pid, tid)
         return heap, {"req_id": hdr[0], "prompt_len": hdr[1],
                       "first_token": hdr[2], "n_blocks": hdr[3]}
+
+    def try_admit_fused(self, heap, slot: int, dst_pe: int, n_wire: int):
+        """First-block admission for a ``migrate_fused`` hand-off: the
+        decode-side work-group waits for ``fused_admit_signal(n_wire)`` —
+        tail + header + the first block — via the MINIMAL-prefix device
+        wait, so the modeled comm clock charges exactly one block of wire
+        time instead of the whole request.  Returns
+        ``(heap, header|None, blocks_resident)``."""
+        sig_ptr = self.pool.sig_ptr(slot)
+        if self.proxy is not None:
+            # cross-pod wire traffic must drain through the host-proxy
+            # ring; the ring drains whole — fused admission degrades to the
+            # dependency flush there (no minimal-prefix win over dcn)
+            heap = self.ctx.pending.flush_dependency(
+                self.ctx, heap, sig_ptr, dst_pe, proxy=self.proxy)
+        wg = device_mod.work_group(self.ctx, size=self.work_items, pe=dst_pe)
+        heap, cur, ok = device_mod.signal_wait_until(
+            wg, heap, sig_ptr, dst_pe, "ge", fused_admit_signal(n_wire))
+        if not bool(ok):
+            return heap, None, max(0, int(cur) - EXTRA_SIGNALS)
+        hdr = [int(v) for v in heap.read(self.pool.header_ptr(slot), dst_pe)]
+        tr = self._tracer()
+        if tr is not None:
+            pid, tid = self._track(dst_pe)
+            tr.instant("admit_fused", "kvx", pid, tid, rid=hdr[0], slot=slot,
+                       expected_signal=fused_admit_signal(n_wire),
+                       resident=int(cur) - EXTRA_SIGNALS)
+            tr.flow_end(hdr[0], "migration", pid, tid)
+        return heap, {"req_id": hdr[0], "prompt_len": hdr[1],
+                      "first_token": hdr[2], "n_blocks": hdr[3]}, \
+            max(0, int(cur) - EXTRA_SIGNALS)
+
+    def consume_blocks(self, heap, slot: int, dst_pe: int, have: int,
+                       need: int):
+        """Per-block device waits: block k of a fused migration is readable
+        once ``sig >= EXTRA_SIGNALS + k``.  Waits blocks ``have+1 .. need``
+        in order, each wait forcing only the minimal queue prefix that
+        delivers that block — the fusion protocol's consume side.  Returns
+        ``(heap, blocks_now_resident)``."""
+        sig_ptr = self.pool.sig_ptr(slot)
+        wg = device_mod.work_group(self.ctx, size=self.work_items, pe=dst_pe)
+        resident = have
+        for k in range(have + 1, need + 1):
+            heap, _, ok = device_mod.signal_wait_until(
+                wg, heap, sig_ptr, dst_pe, "ge", EXTRA_SIGNALS + k)
+            if not bool(ok):
+                break
+            resident = k
+        return heap, resident
 
     def gather_tail(self, heap, slot: int, pe: int):
         """Decode-side read of an admitted request's tail vector (paged

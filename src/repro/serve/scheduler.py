@@ -46,6 +46,16 @@ pays for what is still in flight — under streaming that is just the tail +
 header of the close, which is the time-to-first-decode win
 ``stats.ttfd_model_s`` measures, now even at one slot per decode PE.
 
+``fused_attn=True`` switches the whole migrate/admit/decode contract to the
+device-initiated fused protocol (DESIGN.md §12): migrations send tail +
+header first and then every block with its OWN signal
+(``KVMigrator.migrate_fused``), admission gates on the FIRST resident block
+instead of the ``sent + 2`` barrier (``try_admit_fused`` — the modeled comm
+clock charges one block of wire, which is the ``ttfd_model_s`` win), and the
+decode phase consumes the remaining blocks per-signal with minimal-prefix
+device waits before the gather reads them — so the emitted tokens stay
+bitwise-identical to the barrier baseline under any schedule.
+
 The scheduler is the control plane a real deployment runs host-side; the
 data plane (block payloads, signals, headers) moves exclusively through the
 symmetric heap via one-sided ops.
@@ -61,7 +71,8 @@ import numpy as np
 
 from repro.serve import kvpool as kvpool_mod
 from repro.serve.engine import Engine, ServeConfig
-from repro.serve.kvxfer import EXTRA_SIGNALS, KVMigrator, StreamState
+from repro.serve.kvxfer import (EXTRA_SIGNALS, KVMigrator, StreamState,
+                                fused_admit_signal)
 from repro.serve.paged_attn import PagedDecodeView
 
 (QUEUED, STAGED, STREAMING, PARKED, MIGRATING, DECODING, PREEMPTED,
@@ -108,6 +119,13 @@ class Request:
     resume_tok: int = -1
     park_tail: Optional[object] = None
     preemptions: int = 0
+    # fused-protocol bookkeeping (scheduler fused_attn=True): how many wire
+    # blocks the migration sent, how many the decode side still has to
+    # consume per-signal, and the first step the first block was observed
+    # resident (the ttfd_first_block_steps stat; -1 = not yet observed)
+    wire_blocks: int = 0
+    fused_pending: int = 0
+    first_block_step: int = -1
     # modeled comm clock at arrival / when the migration finished issuing
     # (whole-prefill: the staging step; streamed: stream close) — t_admit -
     # t_submit is the wire window admission still has to wait out, t_admit -
@@ -191,6 +209,12 @@ class SchedStats:
     resumes: int = 0                # preempted requests re-bound to a slot
     ttfd_steps: List[int] = dataclasses.field(default_factory=list)
     ttfd_model_s: List[float] = dataclasses.field(default_factory=list)
+    # time-to-first-resident-block, measured from arrival: the step the
+    # FIRST wire block of a request was provably resident at its decode PE
+    # (fused admission gates on exactly this; under the barrier protocol it
+    # collapses to the admission step, which is the A/B comparison)
+    ttfd_first_block_steps: List[int] = dataclasses.field(
+        default_factory=list)
     # frontend-visible latencies: measured from *arrival*, so queue time
     # before prefill counts (the satellite fix — percentiles over these)
     queue_delay_steps: List[int] = dataclasses.field(default_factory=list)
@@ -208,7 +232,8 @@ class DisaggScheduler:
                  num_slots: int, scfg: ServeConfig = ServeConfig(),
                  prefills_per_step: Optional[int] = None,
                  admit_delay_steps: int = 0, paged: bool = True,
-                 stream_chunks: int = 0, shared_prefix: bool = False,
+                 stream_chunks: int = 0, fused_attn: bool = False,
+                 shared_prefix: bool = False,
                  policy: Optional[AdmissionPolicy] = None,
                  prefix_index: Optional[Dict[tuple, PrefixEntry]] = None,
                  rid_base: int = 0):
@@ -237,6 +262,18 @@ class DisaggScheduler:
         # False falls back to the PR-3 dense-copy admission (A/B baseline)
         self.paged = paged
         self.stream_chunks = stream_chunks      # blocks per installment; 0=off
+        # fused decode path: migrations use the per-block-signal protocol
+        # (migrate_fused) and admission gates on the FIRST resident block
+        # (try_admit_fused) instead of the whole-request barrier; the decode
+        # phase consumes the remaining blocks per-signal before reading them
+        if fused_attn and not paged:
+            raise ValueError("fused_attn requires paged decode (the fused "
+                             "kernel gathers K/V straight from the pool)")
+        if fused_attn and stream_chunks > 0:
+            raise ValueError(
+                "fused_attn and chunked streaming are mutually exclusive — "
+                "per-block signals already stream at block granularity")
+        self.fused_attn = fused_attn
         self.shared_prefix = shared_prefix
         self.policy = policy if policy is not None else AdmissionPolicy()
         self.views: Dict[int, PagedDecodeView] = (
@@ -554,11 +591,20 @@ class DisaggScheduler:
         req.decode_pe, req.slot = pe, slot
         self.slot_req[pe][slot] = req.rid
         skip = self._resident_skip(req, pe)
-        self.heap, report = self.migrator.migrate(
+        send = (self.migrator.migrate_fused if self.fused_attn
+                else self.migrator.migrate)
+        self.heap, report = send(
             self.heap, req.rid, src_pe=req.prefill_pe, dst_pe=pe,
             slot=slot, prompt_len=req.prompt_len,
             first_token=req.first_token, skip=skip)
-        self._finish_migrate(req, report, delay=self.admit_delay_steps)
+        delay = self.admit_delay_steps
+        if self.fused_attn:
+            # the modeled wire window only covers what admission waits for:
+            # tail + header + the first block, not the whole request (same
+            # scaling _try_bind applies to a parked stream's close)
+            total = report.n_wire + EXTRA_SIGNALS
+            delay = delay * fused_admit_signal(report.n_wire) // total
+        self._finish_migrate(req, report, delay=delay)
 
     def _open_stream(self, req: Request) -> None:
         """Open a slot-less chunked stream: pick the decode PE now (the
@@ -651,6 +697,7 @@ class DisaggScheduler:
 
     def _finish_migrate(self, req: Request, report, *, delay: int) -> None:
         req.expected_sig = report.expected_signal
+        req.wire_blocks = report.n_wire
         req.state = MIGRATING
         req.migrate_step = self._step
         req.admit_ready_step = self._step + delay
@@ -709,6 +756,14 @@ class DisaggScheduler:
         reference (including un-triggered COW reserves) so the KV survives
         until resume."""
         pe, slot = req.decode_pe, req.slot
+        if self.fused_attn and req.fused_pending > 0:
+            # admitted-but-not-yet-decoded victim: its fused blocks are
+            # still on the wire — consume them before the slot signal is
+            # re-armed, or the signals would land against the NEXT request
+            have = req.wire_blocks - req.fused_pending
+            self.heap, resident = self.migrator.consume_blocks(
+                self.heap, slot, pe, have, req.wire_blocks)
+            req.fused_pending = req.wire_blocks - resident
         bank = self.banks[pe]
         req.resume_pos = int(bank.pos[slot])
         req.resume_tok = int(bank.tok[slot])
@@ -764,20 +819,46 @@ class DisaggScheduler:
         self.stats.resumes += 1
 
     # ----------------------------------------------------------- admission
+    def _poll_first_block(self, req: Request) -> None:
+        """Record the first step the request's FIRST wire block is provably
+        resident at its decode PE — a pure (non-forcing) read of the signal
+        word, modeling the decode PE watching it ramp.  Another request's
+        admission flush may have completed this request's early queue prefix,
+        so the word can advance before this request admits.  Wire order sets
+        the threshold: barrier migrations send blocks first (``sig >= 1``),
+        fused ones send tail + header first (``sig >= EXTRA_SIGNALS + 1``)."""
+        if req.first_block_step >= 0 or req.slot < 0 or req.wire_blocks == 0:
+            return
+        cur = int(np.asarray(self.heap.read(
+            self.pool.sig_ptr(req.slot), req.decode_pe)).reshape(()))
+        thr = (EXTRA_SIGNALS + 1) if self.fused_attn else 1
+        if cur >= thr:
+            req.first_block_step = self._step
+
     def _phase_admit(self) -> None:
         """Signal-threshold-gated admission: a MIGRATING request enters its
         decode slot only once ``signal_wait_until`` observes the threshold
-        its closed stream (or whole migration) established."""
+        its closed stream (or whole migration) established.  In fused mode
+        the threshold is the FIRST block's signal (``try_admit_fused``);
+        the remaining blocks are consumed per-signal by ``_phase_decode``."""
         still = []
         for req in self.migrating:
+            if req.park_sig < 0:
+                self._poll_first_block(req)
             if self._step < req.admit_ready_step:
                 still.append(req)               # wire still "in flight"
                 continue
-            sig_ptr = (self.pool.stream_sig_ptr(req.park_sig)
-                       if req.park_sig >= 0 else None)
-            self.heap, hdr = self.migrator.try_admit(
-                self.heap, req.slot, req.decode_pe, req.expected_sig,
-                sig_ptr=sig_ptr)
+            if self.fused_attn:
+                self.heap, hdr, resident = self.migrator.try_admit_fused(
+                    self.heap, req.slot, req.decode_pe, req.wire_blocks)
+                if hdr is not None:
+                    req.fused_pending = req.wire_blocks - resident
+            else:
+                sig_ptr = (self.pool.stream_sig_ptr(req.park_sig)
+                           if req.park_sig >= 0 else None)
+                self.heap, hdr = self.migrator.try_admit(
+                    self.heap, req.slot, req.decode_pe, req.expected_sig,
+                    sig_ptr=sig_ptr)
             if hdr is None:
                 still.append(req)
                 continue
@@ -831,6 +912,13 @@ class DisaggScheduler:
             req.out.append(hdr["first_token"])
             req.admit_step = self._step
             req.t_admit = self._comm_clock()
+            # the admission wait itself proves the first block resident
+            # (fused: by construction; barrier: everything landed), so the
+            # poll's fallback is the admission step
+            if req.first_block_step < 0:
+                req.first_block_step = self._step
+            self.stats.ttfd_first_block_steps.append(
+                req.first_block_step - req.arrival_step)
             # lifeline attribution: queue = arrival->prefill, wire = the
             # modeled comm seconds between migration issue and admission,
             # compute = everything from here to finish (decode steps)
@@ -850,6 +938,28 @@ class DisaggScheduler:
             self._maybe_finish(req)
         self.migrating = still
 
+    def _consume_fused(self, pe: int) -> None:
+        """Per-block device waits for every fused-admitted slot on this PE
+        with blocks still on the wire.  Decode's first step attends over the
+        WHOLE prompt (causal), so all pending blocks must be consumed before
+        the gather reads them — fusion moved the admission barrier, not the
+        read-after-signal invariant.  Each wait forces only the minimal
+        queue prefix that delivers its block (``consume_blocks``)."""
+        for s, rid in enumerate(self.slot_req[pe]):
+            if rid is None:
+                continue
+            req = self.requests[rid]
+            if req.state != DECODING or req.fused_pending <= 0:
+                continue
+            have = req.wire_blocks - req.fused_pending
+            self.heap, resident = self.migrator.consume_blocks(
+                self.heap, req.slot, pe, have, req.wire_blocks)
+            req.fused_pending = req.wire_blocks - resident
+            if req.fused_pending > 0:
+                raise RuntimeError(
+                    f"rid {rid}: {req.fused_pending} fused blocks never "
+                    f"landed — decode would read unmigrated bytes")
+
     def _phase_decode(self) -> None:
         """One decode step over every decode PE that has an active slot
         (the PEs step in parallel on real hardware: one decode iteration)."""
@@ -860,6 +970,8 @@ class DisaggScheduler:
             bank = self.banks[pe]
             if not bank.active.any():
                 continue
+            if self.fused_attn:
+                self._consume_fused(pe)
             if tr is not None:
                 tr.begin("decode", "sched", self._trace_pid, f"pe{pe}",
                          slots=int(bank.active.sum()))

@@ -11,6 +11,11 @@ Mirrors the knobs the real Intel SHMEM library reads at ``ishmem_init``:
                           ``4096``, ``16K``, ``2M``, ``1G`` suffixes
 ``ISHMEM_FORCE_PATH``     ``direct`` | ``engine`` | ``proxy`` — pin one path
 ``ISHMEM_WORK_GROUP_SIZE`` default work-group size for ``ishmemx_*_work_group``
+                          — honored by ``core.device.work_group`` AND by every
+                          host-side ``choose_path``/collective pricing site
+                          that does not pass an explicit width
+                          (``cutover.resolve_work_items``), so one variable
+                          moves both the device ops and the host cost model
 ``ISHMEM_TUNING_FILE``    JSON :class:`TuningTable` from a profiling run
                           (``benchmarks.run --json``) — arms measured cutovers
 ``ISHMEM_NBI_COALESCE``   ``1``/``0`` — write-combine queued nbi ops at

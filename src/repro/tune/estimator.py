@@ -28,7 +28,7 @@ MIN_SAMPLES = 3          # below this a fit is too unconstrained to trust
 COLLECTIVE_OPS = frozenset({
     "sync", "barrier", "broadcast", "fcollect", "collect", "alltoall",
     "reduce", "psum", "psum_nbi", "all_gather", "reduce_scatter", "ppermute",
-    "psum_hierarchical",
+    "psum_hierarchical", "device_broadcast", "device_reduce",
 })
 
 

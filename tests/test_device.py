@@ -1,0 +1,379 @@
+"""Device-initiated SHMEM ops + fused paged attention + ring attention
+(DESIGN.md §12).
+
+Four guarantee families:
+
+1. **work-group op semantics** — collaborative put/get/broadcast/reduce move
+   the right bytes, record ``device_*`` telemetry at the group's width
+   (which the estimator keeps out of p2p fits for collectives), and the
+   device ``signal_wait_until`` forces only the MINIMAL pending prefix.
+2. **fused migration never reads ahead of a block's signal** —
+   property-tested against the pending-queue oracle: after
+   ``migrate_fused``, block k stays zero decode-side until the per-block
+   wait for ``sig >= EXTRA_SIGNALS + k`` completes, and admission charges
+   only tail + header + first block.
+3. **fused paged attention is bitwise-identical** to gathering the same
+   leaves through ``PagedDecodeView.assemble`` and running the dense fused
+   flash kernel — across dense, hybrid-SSM, and encoder-decoder layouts —
+   and the scheduler's ``fused_attn=True`` mode reproduces the barrier
+   mode's decode streams exactly while reporting a strictly earlier
+   time-to-first-resident-block.
+4. **sequence-parallel ring attention** matches full-sequence causal flash
+   attention (partials merge by the online-softmax combination).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _minihyp import given, settings, strategies as st
+
+from repro.configs import base as cfgbase
+from repro.core import context, device as device_mod
+from repro.kernels import ops
+from repro.models import model
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.kvpool import KVPool
+from repro.serve.kvxfer import (EXTRA_SIGNALS, KVMigrator,
+                                fused_admit_signal)
+from repro.serve.paged_attn import PagedDecodeView
+from repro.serve.scheduler import DisaggScheduler
+from repro.tune.estimator import _is_p2p
+
+MAXLEN = 24
+
+
+def _setup(arch="qwen3_4b", npes=4, num_blocks=32, max_slots=3,
+           block_tokens=4):
+    cfg = cfgbase.reduced(cfgbase.get_config(arch))
+    params = model.init_params(jax.random.key(0), cfg)
+    ctx, heap = context.init(npes=npes, node_size=npes)
+    eng = Engine(cfg, params, max_len=MAXLEN)
+    pool = KVPool.create(heap, cfg, MAXLEN, num_blocks=num_blocks,
+                         max_slots=max_slots, block_tokens=block_tokens)
+    return cfg, params, ctx, heap, eng, pool
+
+
+def _sched(ctx, heap, eng, pool, *, decode_pes=(2, 3), num_slots=2, NEW=5,
+           **kw):
+    mig = KVMigrator(ctx, pool)
+    return DisaggScheduler(
+        ctx, heap, eng, pool, mig, prefill_pes=[0, 1],
+        decode_pes=list(decode_pes), num_slots=num_slots,
+        scfg=ServeConfig(max_new_tokens=NEW), **kw)
+
+
+def _prompt(cfg, S=10, key=1):
+    return jax.random.randint(jax.random.key(key), (1, S), 0, cfg.vocab_size)
+
+
+def _req(cfg, p):
+    b = {"tokens": p}
+    if cfg.family == "audio":
+        b["audio_embeds"] = 0.1 * jax.random.normal(
+            jax.random.key(7), (1, cfg.encoder_seq, cfg.d_model))
+    return b
+
+
+# ---------------------------------------------------------------------------
+# 1. work-group op semantics
+# ---------------------------------------------------------------------------
+
+
+def test_put_get_roundtrip_records_width():
+    ctx, heap = context.init(npes=4, node_size=4)
+    wg = device_mod.work_group(ctx, size=64, pe=0)
+    buf = heap.malloc((128,), jnp.float32)
+    val = jnp.arange(128, dtype=jnp.float32)
+    heap = device_mod.put(wg, heap, buf, val, 2)
+    np.testing.assert_array_equal(np.asarray(heap.read(buf, 2)),
+                                  np.asarray(val))
+    np.testing.assert_array_equal(np.asarray(heap.read(buf, 0)), 0.0)
+    got = device_mod.get(wg, heap, buf, 2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(val))
+    recs = [r for r in ctx.ledger if r.op in ("device_put", "device_get")]
+    assert len(recs) == 2
+    assert {r.work_items for r in recs} == {64}     # priced at wg width
+    assert {r.tier for r in recs} == {"ici"}
+
+
+def test_work_group_width_follows_tuning(monkeypatch):
+    ctx, _ = context.init(npes=2)
+    assert device_mod.work_group(ctx).size == ctx.tuning.work_group_size
+    assert device_mod.work_group(ctx, size=32).size == 32
+    monkeypatch.setenv("ISHMEM_WORK_GROUP_SIZE", "256")
+    ctx2, _ = context.init(npes=2)
+    assert device_mod.work_group(ctx2).size == 256
+
+
+def test_put_signal_nbi_defers_until_device_wait():
+    ctx, heap = context.init(npes=4, node_size=4)
+    wg = device_mod.work_group(ctx, size=128, pe=0)
+    buf = heap.malloc((64,), jnp.float32)
+    sig = heap.malloc((1,), jnp.int32)
+    heap = device_mod.put_signal_nbi(wg, heap, buf,
+                                     jnp.ones(64, jnp.float32), sig, 1,
+                                     device_mod.SIGNAL_ADD, 1)
+    # parked: neither data nor flag visible before the completion point
+    np.testing.assert_array_equal(np.asarray(heap.read(buf, 1)), 0.0)
+    assert int(heap.read(sig, 1)[0]) == 0
+    heap, cur, ok = device_mod.signal_wait_until(wg, heap, sig, 1, "ge", 1)
+    assert ok and int(cur) == 1
+    np.testing.assert_array_equal(np.asarray(heap.read(buf, 1)), 1.0)
+    assert len(ctx.pending) == 0
+
+
+def test_signal_wait_forces_minimal_prefix():
+    """The device wait completes exactly the queue prefix through the first
+    op that can advance the waited word — later traffic stays pending."""
+    ctx, heap = context.init(npes=4, node_size=4)
+    wg = device_mod.work_group(ctx, size=128, pe=0)
+    a = heap.malloc((32,), jnp.float32)
+    b = heap.malloc((32,), jnp.float32)
+    c = heap.malloc((32,), jnp.float32)
+    sig = heap.malloc((1,), jnp.int32)
+    heap = device_mod.put_signal_nbi(wg, heap, a, jnp.full(32, 1.0), sig, 1,
+                                     device_mod.SIGNAL_ADD, 1)
+    heap = device_mod.put_signal_nbi(wg, heap, b, jnp.full(32, 2.0), sig, 1,
+                                     device_mod.SIGNAL_ADD, 1)
+    heap = device_mod.put_nbi(wg, heap, c, jnp.full(32, 3.0), 1)
+    heap, cur, ok = device_mod.signal_wait_until(wg, heap, sig, 1, "ge", 1)
+    assert ok and int(cur) == 1
+    # first put+signal landed; the second pair and the trailing put did not
+    np.testing.assert_array_equal(np.asarray(heap.read(a, 1)), 1.0)
+    np.testing.assert_array_equal(np.asarray(heap.read(b, 1)), 0.0)
+    np.testing.assert_array_equal(np.asarray(heap.read(c, 1)), 0.0)
+    assert len(ctx.pending) > 0
+    heap, cur, ok = device_mod.signal_wait_until(wg, heap, sig, 1, "ge", 2)
+    assert ok and int(cur) == 2
+    np.testing.assert_array_equal(np.asarray(heap.read(b, 1)), 2.0)
+    np.testing.assert_array_equal(np.asarray(heap.read(c, 1)), 0.0)
+
+
+def test_signal_wait_unsatisfiable_reports_not_ok():
+    ctx, heap = context.init(npes=4, node_size=4)
+    wg = device_mod.work_group(ctx, size=128, pe=0)
+    sig = heap.malloc((1,), jnp.int32)
+    other = heap.malloc((32,), jnp.float32)
+    # nothing pending at all
+    heap, cur, ok = device_mod.signal_wait_until(wg, heap, sig, 1, "ge", 1)
+    assert not ok and int(cur) == 0
+    # pending traffic that can never advance the waited word
+    heap = device_mod.put_nbi(wg, heap, other, jnp.ones(32), 1)
+    heap, cur, ok = device_mod.signal_wait_until(wg, heap, sig, 1, "ge", 1)
+    assert not ok
+    assert len(ctx.pending) > 0                     # unrelated op untouched
+
+
+def test_broadcast_reduce_values_and_telemetry():
+    ctx, heap = context.init(npes=4, node_size=4)
+    wg = device_mod.work_group(ctx, size=256, pe=0)
+    buf = heap.malloc((16,), jnp.float32)
+    heap = heap.write(buf, 1, jnp.arange(16, dtype=jnp.float32))
+    heap = device_mod.broadcast(wg, heap, buf, 1, ctx.team_world)
+    for pe in range(4):
+        np.testing.assert_array_equal(np.asarray(heap.read(buf, pe)),
+                                      np.arange(16, dtype=np.float32))
+    dest = heap.malloc((16,), jnp.float32)
+    heap = device_mod.reduce(wg, heap, dest, buf, "sum", ctx.team_world)
+    np.testing.assert_array_equal(np.asarray(heap.read(dest, 2)),
+                                  4.0 * np.arange(16, dtype=np.float32))
+    ops_seen = {r.op for r in ctx.ledger}
+    assert {"device_broadcast", "device_reduce"} <= ops_seen
+    # collectives scale with team size: excluded from the p2p profile fits
+    assert not _is_p2p("device_broadcast")
+    assert not _is_p2p("device_reduce")
+    assert _is_p2p("device_put")
+    assert not _is_p2p("device_put_nbi(pending)")
+
+
+def test_device_put_feeds_work_group_resolved_cutovers():
+    """A device.put sweep at two widths fits measured (tier, width) cutovers
+    — the autotuner sees device ops at their own collaboration width."""
+    from repro.core import rma
+    ctx, heap = context.init(npes=4, node_size=4, heap_words=1 << 22)
+    buf = heap.malloc((1 << 21,), jnp.float32)
+    for wgs in (32, 512):
+        wg = device_mod.work_group(ctx, size=wgs, pe=0)
+        for lb in range(7, 24, 2):
+            n = 1 << lb
+            view = rma.SymPtr("float32", buf.offset, (n // 4,))
+            heap = device_mod.put(wg, heap, view,
+                                  jnp.zeros(n // 4, jnp.float32), 1)
+    tbl = ctx.fit_tuning_table(arm=True)
+    assert ("ici", 32) in tbl.cutovers
+    assert ("ici", 512) in tbl.cutovers
+    assert ctx.tuning.table is tbl                  # armed for choose_path
+
+
+# ---------------------------------------------------------------------------
+# 2. fused migration vs the pending-queue oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(6, 20))
+def test_fused_blocks_invisible_until_their_signal(S):
+    """Property: after ``migrate_fused``, block k of the wire table reads
+    zero decode-side until the per-block wait for ``sig >= EXTRA + k``
+    completes — and admission itself consumes only the first block."""
+    cfg, params, ctx, heap, eng, pool = _setup(max_slots=1)
+    mig = KVMigrator(ctx, pool)
+    tok, _, c1 = eng.prefill_request({"tokens": _prompt(cfg, S=S)},
+                                     jax.random.key(3))
+    heap, ids = mig.stage(heap, 0, c1, prompt_len=S, src_pe=0)
+    heap, rep = mig.migrate_fused(heap, 0, src_pe=0, dst_pe=1, slot=0,
+                                  prompt_len=S, first_token=tok)
+    assert rep.fused and rep.n_wire == len(ids)
+    assert rep.expected_signal == len(ids) + EXTRA_SIGNALS  # total unchanged
+    for bid in ids:                       # everything still on the queue
+        np.testing.assert_array_equal(
+            np.asarray(heap.read(pool.block_ptr(bid), 1)), 0.0)
+    heap, hdr, resident = mig.try_admit_fused(heap, 0, 1, rep.n_wire)
+    assert hdr == {"req_id": 0, "prompt_len": S, "first_token": tok,
+                   "n_blocks": len(ids)}
+    assert resident == min(1, rep.n_wire)           # minimal-prefix admit
+    sig = pool.sig_ptr(0)
+    assert int(heap.read(sig, 1)) == fused_admit_signal(rep.n_wire)
+    have = resident
+    while have < len(ids):
+        for bid in ids[have:]:            # unconsumed blocks stay invisible
+            np.testing.assert_array_equal(
+                np.asarray(heap.read(pool.block_ptr(bid), 1)), 0.0)
+        heap, have = mig.consume_blocks(heap, 0, 1, have, have + 1)
+        assert int(heap.read(sig, 1)) == EXTRA_SIGNALS + have
+        for bid in ids[:have]:            # consumed blocks match the source
+            np.testing.assert_array_equal(
+                np.asarray(heap.read(pool.block_ptr(bid), 1)),
+                np.asarray(heap.read(pool.block_ptr(bid), 0)))
+    assert len(ctx.pending) == 0
+
+
+# ---------------------------------------------------------------------------
+# 3. fused paged attention — bitwise vs assemble + flash
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen3_4b", "zamba2_2_7b",
+                                  "whisper_medium"])
+def test_fused_paged_attn_bitwise_vs_assemble(arch):
+    """The kernel-level identity across dense / hybrid-SSM / enc-dec
+    layouts: device-gathered K/V through the slot tables feeds the same
+    flash kernel and reproduces assemble()'s leaves bit for bit."""
+    cfg, params, ctx, heap, eng, pool = _setup(arch)
+    sched = _sched(ctx, heap, eng, pool, decode_pes=[2], num_slots=2,
+                   NEW=5, fused_attn=True)
+    sched.submit(_req(cfg, _prompt(cfg, S=10)))
+    guard = 0
+    while not sched.stats.admissions and guard < 50:
+        sched.step()
+        guard += 1
+    sched.step()                          # one decode: all blocks consumed
+    view = sched.views[2]
+    lay = pool.layout
+    assert lay.paged
+    assembled = view.assemble(sched.heap, sched.banks[2].cache)
+    wg = device_mod.work_group(ctx, size=128, pe=2)
+    for unit in sorted({p.unit_idx for p in lay.paged}):
+        k_leaf = next(p for p in lay.paged
+                      if p.unit_idx == unit and p.key == "k")
+        q = jax.random.normal(
+            jax.random.key(11),
+            (view.num_slots, k_leaf.width, k_leaf.nkv, k_leaf.hd),
+            jnp.float32)
+        heap2, out = ops.fused_paged_attn(
+            wg, sched.heap, view, q, unit_idx=unit,
+            waits=[(pool.sig_ptr(0), EXTRA_SIGNALS)])
+        k_ref = assembled["blocks"][unit]["k"][0]
+        v_ref = assembled["blocks"][unit]["v"][0]
+        ref = ops.flash_attention(q, k_ref, v_ref)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    sched.run()
+
+
+def test_fused_paged_attn_refuses_unsatisfiable_wait():
+    """The no-read-before-signal contract at the kernel boundary: a wait no
+    pending traffic can satisfy raises before any block byte is read."""
+    cfg, params, ctx, heap, eng, pool = _setup()
+    view = PagedDecodeView(pool, pe=1, num_slots=1)
+    wg = device_mod.work_group(ctx, size=128, pe=1)
+    q = jnp.zeros((1, 4, 1, 8), jnp.float32)
+    with pytest.raises(RuntimeError, match="never satisfy"):
+        ops.fused_paged_attn(wg, heap, view, q,
+                             waits=[(pool.sig_ptr(0), 5)])
+
+
+def test_fused_scheduler_bitwise_and_first_block_stat():
+    """fused_attn=True reproduces barrier mode's decode streams exactly
+    (and the lockstep baseline), while time-to-first-resident-block lands
+    strictly earlier than the barrier protocol's."""
+    def serve(fused):
+        cfg, params, ctx, heap, eng, pool = _setup()
+        sched = _sched(ctx, heap, eng, pool, decode_pes=(2, 3), num_slots=2,
+                       NEW=5, admit_delay_steps=2, fused_attn=fused)
+        prompts = [_prompt(cfg, S=10, key=i) for i in range(4)]
+        for p in prompts:
+            sched.submit({"tokens": p})
+        return cfg, eng, sched, prompts, sched.run()
+
+    cfg, eng, s_b, prompts, outs_b = serve(False)
+    _, _, s_f, _, outs_f = serve(True)
+    for i, p in enumerate(prompts):
+        np.testing.assert_array_equal(outs_b[i], outs_f[i])
+        base = eng.generate({"tokens": p}, ServeConfig(max_new_tokens=5))
+        np.testing.assert_array_equal(np.asarray(base[0]), outs_f[i])
+    assert len(s_f.stats.ttfd_first_block_steps) == 4
+    assert len(s_b.stats.ttfd_first_block_steps) == 4
+    mean_f = np.mean(s_f.stats.ttfd_first_block_steps)
+    mean_b = np.mean(s_b.stats.ttfd_first_block_steps)
+    assert mean_f < mean_b                # per-block gate beats the barrier
+    for req in s_f.requests.values():     # first block never after admission
+        assert 0 <= req.first_block_step <= req.admit_step
+
+
+def test_fused_attn_requires_paged_and_no_streaming():
+    cfg, params, ctx, heap, eng, pool = _setup()
+    with pytest.raises(ValueError, match="paged"):
+        _sched(ctx, heap, eng, pool, fused_attn=True, paged=False)
+    with pytest.raises(ValueError, match="stream"):
+        _sched(ctx, heap, eng, pool, fused_attn=True, stream_chunks=1)
+
+
+# ---------------------------------------------------------------------------
+# 4. sequence-parallel ring attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("npes", [2, 4])
+def test_ring_attention_matches_flash(npes):
+    B, S, H, hd = 1, 128, 2, 16
+    kq, kk, kv = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, S, H, hd), jnp.float32)
+    ring = ops.ring_attention(q, k, v, npes=npes)
+    ref = ops.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(ring), np.asarray(ref),
+                               atol=5e-5, rtol=1e-5)
+
+
+def test_flash_partial_merge_equals_full():
+    """Splitting the KV sequence into shards, computing partials at their
+    absolute offsets, and merging by the online-softmax combination equals
+    attention over the whole sequence."""
+    B, S, H, hd = 1, 64, 2, 16
+    kq, kk, kv = jax.random.split(jax.random.key(9), 3)
+    q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, S, H, hd), jnp.float32)
+    half = S // 2
+    parts = [
+        ops.flash_partial(q, k[:, :half], v[:, :half], q_off=0, k_off=0),
+        ops.flash_partial(q, k[:, half:], v[:, half:], q_off=0, k_off=half),
+    ]
+    merged = ops.merge_partials(parts)
+    ref = ops.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(ref),
+                               atol=5e-5, rtol=1e-5)
