@@ -1,6 +1,7 @@
-"""Observability benchmarks: tracer overhead, trace schema, online re-fit.
+"""Observability benchmarks: tracer overhead, trace schema, online re-fit,
+invariant auditors, seeded faults, and SLO burn-rate alerting.
 
-Three CI-gated experiments on the multi-pod fleet (``repro.obs`` riding on
+Six CI-gated experiments on the multi-pod fleet (``repro.obs`` riding on
 ``repro.serve.frontend``):
 
 1. **tracer overhead** — the identical arrival schedule served with
@@ -11,8 +12,9 @@ Three CI-gated experiments on the multi-pod fleet (``repro.obs`` riding on
 2. **trace schema** — the recording arm's export must pass
    ``repro.obs.export.validate`` with zero violations (every event has
    pid/tid/ts, slice stacks balance, async spans and flows pair — gate b),
-   and every submitted request's lifeline must reconstruct gap-free from
-   the async spans.
+   every submitted request's lifeline must reconstruct gap-free from the
+   async spans, and every complete critical path's segment attribution
+   must sum to its end-to-end span exactly.
 3. **online re-fit** — a heterogeneous-tier (multi-pod: local + ici + dcn
    wire) run warm-started from a deliberately STALE tuning table whose
    absurd cutovers pin every transfer to the direct path.  The periodic
@@ -21,12 +23,24 @@ Three CI-gated experiments on the multi-pod fleet (``repro.obs`` riding on
    (From a *clean* start the re-fit is a provable no-op here — live op
    timings are priced by the same analytic model ``choose_path`` falls
    back to — so the stale warm start is what makes the loop observable.)
+4. **audit clean** — the per-step invariant auditors (``repro.obs.audit``)
+   sweep a clean serve run with ZERO violations, and audit + flight-
+   recorder work accounts for <3% of the run's wall clock (gate d).
+5. **seeded faults** — one corruption per auditor family (refcount,
+   residency, signal ledger) injected mid-flight; each must be caught
+   within one audit period and leave a postmortem dump that validates
+   clean (gate e).
+6. **burn-rate alerts** — an overloaded run must fire the multi-window SLO
+   burn-rate alert with a drill-down naming a request that truly missed
+   its deadline; a nominal run must stay silent (gate f).
 
 ``smoke(json_path)`` emits BENCH_obs.json for ``scripts/ci.sh``.
 """
 from __future__ import annotations
 
 import json
+import os
+import tempfile
 import time
 
 import numpy as np
@@ -35,6 +49,7 @@ from benchmarks.common import emit
 from repro.configs import base as cfgbase
 from repro.core import cutover
 from repro.obs import Obs, chrome_trace, request_chains, validate
+from repro.obs import critical
 from repro.obs.export import chain_gaps
 from repro.serve.engine import Engine
 from repro.serve.frontend import (Fleet, FleetConfig, TenantSpec,
@@ -63,19 +78,27 @@ def _engine():
     return Engine(cfg, params, max_len=MAXLEN)
 
 
-def _serve(engine, obs=None, *, stale_table=None, rate=RATE, steps=STEPS):
-    fcfg = FleetConfig(n_pods=2, prefill_per_pod=1, decode_per_pod=2,
-                       num_slots=1, kv_blocks=128, block_tokens=4,
-                       max_len=MAXLEN, max_new=4, stream_chunks=2,
-                       admission="slo", router="least_loaded",
-                       queue_bound=64, seed=SEED)
-    fleet = Fleet(fcfg, engine=engine, obs=obs)
-    if stale_table is not None:
-        fleet.ctx.tuning = cutover.Tuning(table=stale_table)
+def _build(engine, obs=None, *, rate=RATE, steps=STEPS, **over):
+    """Fleet + its arrival schedule (not yet run)."""
+    kw = dict(n_pods=2, prefill_per_pod=1, decode_per_pod=2,
+              num_slots=1, kv_blocks=128, block_tokens=4,
+              max_len=MAXLEN, max_new=4, stream_chunks=2,
+              admission="slo", router="least_loaded",
+              queue_bound=64, seed=SEED)
+    kw.update(over)
+    fleet = Fleet(FleetConfig(**kw), engine=engine, obs=obs)
     traffic = TrafficEngine(list(MIX), rate=rate,
                             vocab=fleet.cfg.vocab_size, seed=SEED)
+    return fleet, traffic.schedule(steps)
+
+
+def _serve(engine, obs=None, *, stale_table=None, rate=RATE, steps=STEPS,
+           **over):
+    fleet, specs = _build(engine, obs, rate=rate, steps=steps, **over)
+    if stale_table is not None:
+        fleet.ctx.tuning = cutover.Tuning(table=stale_table)
     t0 = time.perf_counter()
-    rep = fleet.run(traffic.schedule(steps), max_steps=4000)
+    rep = fleet.run(specs, max_steps=4000)
     return fleet, rep, time.perf_counter() - t0
 
 
@@ -158,7 +181,8 @@ def overhead(engine) -> dict:
 
 
 def trace_schema(engine) -> dict:
-    """Gate (b): export validates clean; every lifeline reconstructs."""
+    """Gate (b): export validates clean; every lifeline reconstructs; every
+    complete critical path's segment sum equals its e2e span exactly."""
     obs = Obs(trace=True, metrics=True)
     fleet, rep, _ = _serve(engine, obs)
     doc = chrome_trace(obs.tracer)
@@ -167,6 +191,10 @@ def trace_schema(engine) -> dict:
     rids = {rid for _, rid in fleet.placements.values()}
     gaps = sum(len(chain_gaps(c)) for c in chains.values())
     flows = [e for e in doc["traceEvents"] if e.get("ph") in ("s", "f")]
+    paths = critical.fleet_paths(chains, obs.tracer.events)
+    exact = sum(1 for p in paths.values()
+                if p["complete"] and not p["gaps"]
+                and abs(sum(p["segments"].values()) - p["e2e_ticks"]) < 1e-6)
     return {
         "events": len(doc["traceEvents"]),
         "dropped": obs.tracer.dropped,
@@ -176,6 +204,8 @@ def trace_schema(engine) -> dict:
         "chains_missing": sorted(rids - set(chains)),
         "chain_gaps": gaps,
         "flow_events": len(flows),
+        "paths": len(paths),
+        "paths_exact": exact,
         "metrics_rows": len(obs.metrics.series),
         "completed": rep["completed"],
     }
@@ -206,6 +236,165 @@ def refit_demo(engine) -> dict:
     }
 
 
+def audit_clean(engine) -> dict:
+    """Gate (d): the per-step invariant auditors sweep a clean run with
+    zero violations, and audit + flight-recorder work stays under 3% of
+    the run's wall clock (accounting bound, like gate a: host seconds
+    spent auditing plus ring-buffer emissions x measured per-event cost)."""
+    obs = Obs(metrics=True, audit_period=1, recorder_window=32)
+    fleet, rep, dt = _serve(engine, obs)
+    au = obs.auditor.summary()
+    ev_cost = _tracer_event_cost_s()
+    ring_events = len(obs.tracer.events) + obs.tracer.evicted
+    obs_work_s = au["audit_seconds"] + ring_events * ev_cost
+    return {
+        "audit_period_steps": 1,
+        "checks": au["checks"],
+        "violations": au["violations"],
+        "audit_seconds": au["audit_seconds"],
+        "ring_events": ring_events,
+        "ring_evicted": obs.tracer.evicted,
+        "obs_work_s": obs_work_s,
+        "overhead_pct": 100.0 * obs_work_s / dt,
+        "recorder_dumps": len(obs.recorder.dumps),
+        "completed": rep["completed"],
+    }
+
+
+def _fault_specs():
+    """(when, corrupt) per auditor family — each corruption is injected
+    mid-flight (prefix entries die with their last mapper, so a post-run
+    poke would find nothing to corrupt)."""
+    from repro.serve.scheduler import DECODING
+
+    def refcount_when(f):
+        return any(ids for ids in f.pool.block_tables.values())
+
+    def refcount_corrupt(f):
+        ids = next(ids for ids in f.pool.block_tables.values() if ids)
+        f.pool._refcnt[ids[0]] += 1
+
+    def residency_when(f):
+        return any(e.refs >= 2 for e in f.prefix_index.values())
+
+    def residency_corrupt(f):
+        entry = max(f.prefix_index.values(), key=lambda e: e.refs)
+        foreign = next(b for b in range(f.pool.num_blocks)
+                       if b not in entry.block_ids)
+        pe = f.pods[0].sched.decode_pes[0]
+        entry.resident.setdefault(pe, set()).add(foreign)
+
+    def _fresh_decoder(f):
+        for pod in f.pods:
+            for req in pod.sched.requests.values():
+                if (req.state == DECODING and req.slot >= 0
+                        and len(req.out) + 2 < req.max_new):
+                    return req
+        return None
+
+    def signal_when(f):
+        return _fresh_decoder(f) is not None
+
+    def signal_corrupt(f):
+        import jax.numpy as jnp
+        req = _fresh_decoder(f)
+        f.heap = f.heap.write(f.pool.sig_ptr(req.slot), req.decode_pe,
+                              jnp.ones((1,), jnp.int32))
+
+    return {"refcount": (refcount_when, refcount_corrupt),
+            "residency": (residency_when, residency_corrupt),
+            "signal": (signal_when, signal_corrupt)}
+
+
+def seeded_faults(engine) -> dict:
+    """Gate (e): each auditor family catches its seeded corruption within
+    one audit period, with a postmortem dump that validates clean."""
+    from repro.obs.audit import AuditError
+
+    out = {}
+    for name, (when, corrupt) in _fault_specs().items():
+        with tempfile.TemporaryDirectory() as td:
+            obs = Obs(audit_period=1, recorder_window=32,
+                      recorder_path=os.path.join(td, f"pm_{name}.json"))
+            fleet, specs = _build(engine, obs)
+            specs = sorted(specs, key=lambda s: (s.step, s.idx))
+            i, injected, caught, err = 0, None, None, None
+            while i < len(specs) or not fleet.done():
+                if fleet.elapsed_steps >= 4000:
+                    break
+                batch = []
+                while (i < len(specs)
+                       and specs[i].step <= fleet.elapsed_steps):
+                    batch.append(specs[i])
+                    i += 1
+                if injected is None and when(fleet):
+                    corrupt(fleet)
+                    injected = fleet.elapsed_steps
+                try:
+                    fleet.step(batch)
+                except AuditError as exc:
+                    err, caught = exc, fleet.elapsed_steps
+                    break
+            rec = {
+                "injected": injected is not None,
+                "caught": err is not None,
+                "violations": len(err.violations) if err else 0,
+                "rules": (sorted({v.rule for v in err.violations})
+                          if err else []),
+                "caught_within_steps": (caught - injected
+                                        if err and injected is not None
+                                        else None),
+                "dump_written": bool(obs.recorder.dumps),
+            }
+            if obs.recorder.dumps:
+                with open(obs.recorder.dumps[0]) as f:
+                    doc = json.load(f)
+                warnings: list = []
+                rec["dump_validation_errors"] = validate(doc,
+                                                         warnings=warnings)
+                rec["dump_reason"] = doc["otherData"]["postmortem"]["reason"]
+            out[name] = rec
+    return out
+
+
+def alert_demo(engine) -> dict:
+    """Gate (f): overload fires the burn-rate alert with a drill-down
+    naming a request that truly missed its deadline; nominal load stays
+    silent."""
+    from repro.serve.frontend import slo as slo_mod
+    from repro.serve.scheduler import FINISHED, SHED
+
+    obs = Obs(trace=True, metrics=True, alerts=True)
+    fleet, rep, _ = _serve(engine, obs, rate=4.0, queue_bound=2)
+    offender_verified = False
+    if obs.monitor.fired:
+        alert = obs.monitor.fired[0]
+        worst = alert.offenders[0] if alert.offenders else None
+        if worst is not None:
+            sched = {p.name: p.sched for p in fleet.pods}[worst["pod"]]
+            req = sched.requests[worst["rid"]]
+            cls = slo_mod.resolve(req.slo, fleet.classes)
+            if worst["outcome"] == "shed":
+                offender_verified = (req.state == SHED
+                                     and cls.name == alert.cls)
+            else:
+                offender_verified = (
+                    req.state == FINISHED and cls.name == alert.cls
+                    and req.admit_step - req.arrival_step
+                    > cls.ttfd_deadline)
+    nominal = Obs(metrics=True, alerts=True)
+    _serve(engine, nominal, rate=0.5)
+    return {
+        "overload_shed": rep["shed"],
+        "overload_alerts": len(obs.monitor.fired),
+        "overload_fired": bool(obs.monitor.fired),
+        "offender_verified": offender_verified,
+        "alerts": [a.to_json() for a in obs.monitor.fired],
+        "nominal_alerts": len(nominal.monitor.fired),
+        "nominal_silent": not nominal.monitor.fired,
+    }
+
+
 def run():
     engine = _engine()
     ov = overhead(engine)
@@ -220,6 +409,17 @@ def run():
     rf = refit_demo(engine)
     emit("obs_refit", f"refits={rf['refits']}", 0.0,
          decisions_changed=rf["decisions_changed"])
+    au = audit_clean(engine)
+    emit("obs_audit", f"checks={au['checks']}", 0.0,
+         violations=au["violations"],
+         overhead_pct=f"{au['overhead_pct']:.2f}")
+    sf = seeded_faults(engine)
+    emit("obs_faults", ",".join(sorted(sf)), 0.0,
+         caught=sum(1 for r in sf.values() if r["caught"]))
+    al = alert_demo(engine)
+    emit("obs_alerts", f"overload_alerts={al['overload_alerts']}", 0.0,
+         offender_verified=al["offender_verified"],
+         nominal_silent=al["nominal_silent"])
 
 
 def smoke(json_path: str = "BENCH_obs.json") -> dict:
@@ -231,6 +431,9 @@ def smoke(json_path: str = "BENCH_obs.json") -> dict:
         "overhead": overhead(engine),
         "trace": trace_schema(engine),
         "refit": refit_demo(engine),
+        "audit": audit_clean(engine),
+        "faults": seeded_faults(engine),
+        "alerts": alert_demo(engine),
     }
     with open(json_path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
@@ -238,7 +441,11 @@ def smoke(json_path: str = "BENCH_obs.json") -> dict:
     emit("obs_smoke", json_path, 0.0,
          overhead_pct=f"{doc['overhead']['overhead_pct']:.2f}",
          trace_errors=len(doc["trace"]["validation_errors"]),
-         refit_decisions_changed=doc["refit"]["decisions_changed"])
+         refit_decisions_changed=doc["refit"]["decisions_changed"],
+         audit_violations=doc["audit"]["violations"],
+         faults_caught=sum(1 for r in doc["faults"].values()
+                           if r["caught"]),
+         alert_fired=doc["alerts"]["overload_fired"])
     return doc
 
 

@@ -110,7 +110,7 @@ print(f"migration overlap {ovl:.2f}x, coalescing {ratio:.1f}, "
       f"{bw:.1f} GB/s modeled, {profiles} fitted profiles -> OK")
 EOF
 
-echo "== observability smoke (tracer overhead / trace schema / online re-fit) =="
+echo "== observability smoke (tracer / critical path / audit / alerts) =="
 python -m benchmarks.bench_obs --smoke BENCH_obs.json
 python - <<'EOF'
 import json
@@ -130,15 +130,42 @@ assert tr["chain_gaps"] == 0, \
     f"{tr['chain_gaps']} untraced holes in request lifelines"
 assert tr["flow_events"] % 2 == 0 and tr["flow_events"] > 0, \
     "migration flow arrows missing or unpaired"
+assert tr["paths"] > 0 and tr["paths_exact"] == tr["paths"], \
+    f"critical-path attribution inexact: {tr['paths_exact']}/{tr['paths']} " \
+    f"request paths are gap-free with segment sum == e2e"
 rf = doc["refit"]
 assert rf["refits"] > 0, "online re-fit never fired in the smoke run"
 assert rf["decisions_changed"] >= 1, \
     "online re-fit corrected no cutover decisions against the stale " \
     "warm-start table"
+au = doc["audit"]
+assert au["checks"] > 0 and au["violations"] == 0, \
+    f"invariant auditors flagged a clean run ({au['violations']} " \
+    f"violation(s) over {au['checks']} passes)"
+assert au["overhead_pct"] < 3.0, \
+    f"audit+recorder work exceeds 3% of the audited smoke wall clock " \
+    f"({au['overhead_pct']:.2f}%)"
+for fam, rec in doc["faults"].items():
+    assert rec["caught"], f"seeded {fam} corruption escaped the auditors"
+    assert rec["caught_within_steps"] <= 1, \
+        f"seeded {fam} corruption took {rec['caught_within_steps']} steps " \
+        f"to surface (audit_period=1)"
+    assert rec["dump_written"] and rec["dump_validation_errors"] == [], \
+        f"{fam} postmortem dump missing or schema-invalid: " \
+        f"{rec['dump_validation_errors'][:3]}"
+al = doc["alerts"]
+assert al["overload_fired"] and al["offender_verified"], \
+    "burn-rate alert silent under overload, or its worst offender does " \
+    "not match the scheduler's own ledger"
+assert al["nominal_silent"], \
+    f"burn-rate alert fired on a nominal run: {al['alerts'][:2]}"
 print(f"obs work {ov['overhead_pct']:.2f}% of wall clock, "
-      f"{tr['events']} events / {tr['chains']} lifelines validate clean, "
+      f"{tr['events']} events / {tr['chains']} lifelines validate clean "
+      f"({tr['paths_exact']}/{tr['paths']} paths exact), "
       f"{rf['refits']} re-fits flipped {rf['decisions_changed']} "
-      f"decisions -> OK")
+      f"decisions, audit {au['checks']} passes clean at "
+      f"{au['overhead_pct']:.2f}%, {len(doc['faults'])} seeded faults "
+      f"caught, alerts fire/stay-silent -> OK")
 EOF
 
 echo "== device-initiated smoke (fused admission / ring attention) =="

@@ -192,14 +192,24 @@ def _make_obs(args):
     trace = bool(args.trace) or cfg.trace
     metrics = bool(args.metrics) or cfg.metrics
     refit = args.refit if args.refit is not None else cfg.refit_period
-    if not (trace or metrics or refit > 0):
+    audit = args.audit if args.audit is not None else cfg.audit_period
+    recorder = (args.recorder if args.recorder is not None
+                else cfg.recorder_window)
+    alerts = bool(args.alerts) or cfg.alerts
+    if not (trace or metrics or refit > 0 or audit > 0 or recorder > 0
+            or alerts):
         return None, None, None
     obs = obs_mod.Obs(
         trace=trace, metrics=metrics, refit_period=refit,
         refit_min_samples=(args.refit_min_samples
                            if args.refit_min_samples is not None
                            else cfg.refit_min_samples),
-        trace_limit=cfg.trace_limit)
+        trace_limit=cfg.trace_limit,
+        audit_period=audit,
+        recorder_window=recorder,
+        recorder_path=cfg.recorder_path,
+        alerts=alerts, alert_target=cfg.alert_target,
+        alert_windows=cfg.alert_windows)
     return obs, (args.trace or cfg.trace_path), \
         (args.metrics or cfg.metrics_path)
 
@@ -219,6 +229,32 @@ def _emit_obs(obs, trace_path, metrics_path) -> None:
         n = obs.refitter.decisions_changed()
         print(f"[serve]   online re-fit: {len(obs.refitter.history)} "
               f"re-fit(s), {n} cutover decision(s) changed")
+    if obs.auditor is not None:
+        a = obs.auditor.summary()
+        print(f"[serve]   audit: {a['checks']} sweep(s), "
+              f"{a['violations']} violation(s), "
+              f"{a['audit_seconds'] * 1e3:.1f} ms auditing")
+    if obs.monitor is not None:
+        m = obs.monitor.summary()
+        print(f"[serve]   slo burn-rate: {m['observations']} checks, "
+              f"{len(m['alerts'])} alert(s) "
+              f"(target {m['target']}, windows {m['windows']})")
+        for al in m["alerts"]:
+            worst = al["offenders"][0] if al["offenders"] else None
+            tail = (f"; worst rid {worst['rid']} ({worst['outcome']}, "
+                    f"+{worst['overshoot_steps']} steps past deadline)"
+                    if worst else "")
+            print(f"[serve]     ALERT class={al['cls']} step={al['step']} "
+                  f"burn={al['burn']}{tail}")
+    if obs.recorder is not None:
+        r = obs.recorder.summary()
+        if r["dumps"]:
+            print(f"[serve]   flight recorder: postmortem dump(s) -> "
+                  f"{', '.join(r['dumps'])}")
+        else:
+            print(f"[serve]   flight recorder: armed, "
+                  f"{r['buffered_events']} span(s) in the "
+                  f"{r['window_steps']}-step window, no incident")
 
 
 def _run_disagg(args, cfg, params) -> None:
@@ -315,7 +351,7 @@ def _run_fleet(args, cfg, params) -> None:
         block_tokens=args.block_tokens,
         max_len=args.prompt_len + args.max_new, max_new=args.max_new,
         temperature=args.temperature, stream_chunks=args.stream_chunks,
-        shared_prefix=True,
+        fused_attn=args.fused_attn, shared_prefix=True,
         admit_delay=args.admit_delay, admission=args.admission,
         queue_bound=args.queue_bound, router=args.router, seed=args.seed)
     engine = Engine(cfg, params, max_len=fcfg.max_len)
@@ -473,11 +509,30 @@ def main():
     ap.add_argument("--refit-min-samples", type=int, default=None,
                     help="minimum retained telemetry samples before a due "
                          "re-fit runs")
+    ap.add_argument("--audit", type=int, default=None, metavar="STEPS",
+                    help="run the online invariant auditors (heap extents, "
+                         "block refcounts, signal ledger, prefix residency, "
+                         "slot banks) every STEPS fleet steps; any "
+                         "violation aborts the run with an AuditError "
+                         "(0 = off)")
+    ap.add_argument("--recorder", type=int, default=None, metavar="STEPS",
+                    help="arm the flight recorder: keep the last STEPS "
+                         "steps of spans in a bounded ring and dump a "
+                         "postmortem Chrome-trace on crash, audit "
+                         "violation, or SLO alert (0 = off)")
+    ap.add_argument("--alerts", action="store_true",
+                    help="SLO burn-rate monitor: multi-window error-budget "
+                         "burn per deadline class over the metrics series, "
+                         "alerts carry the top offending requests by "
+                         "critical-path segment (implies metrics sampling)")
     args = ap.parse_args()
     if args.fleet and fenv_err is not None:
         raise fenv_err
     if args.stream_chunks is None:
-        args.stream_chunks = fenv.stream_chunks if args.fleet else 0
+        # fused admission and chunked streaming are mutually exclusive, so
+        # --fused-attn suppresses the fleet's default streaming
+        args.stream_chunks = (fenv.stream_chunks
+                              if args.fleet and not args.fused_attn else 0)
 
     import jax
     from repro.configs import base as cfgbase

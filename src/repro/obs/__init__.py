@@ -1,36 +1,48 @@
 """Fleet-wide observability: causal spans, Chrome-trace export, metrics
-time series, and online tuner re-fit (DESIGN.md §11).
+time series, online tuner re-fit, critical-path analysis, invariant
+auditors, a flight recorder, and SLO burn-rate alerting (DESIGN.md §11,
+§13).
 
 The one-stop entry point is :class:`Obs` — a bundle of (tracer, metrics
-registry, refitter config) that the fleet driver and launchers thread
-through the stack:
+registry, refitter, auditor, flight recorder, burn-rate monitor) that the
+fleet driver and launchers thread through the stack:
 
-    obs = Obs(trace=True, refit_period=50)
+    obs = Obs(trace=True, refit_period=50, audit_period=8,
+              recorder_window=64, alerts=True)
     fleet = Fleet(fcfg, obs=obs)          # installs tracer on fleet.ctx
     fleet.run(specs)
     obs.write_trace("out.json")           # load in ui.perfetto.dev
 
 Everything is opt-in: with no ``Obs`` (or ``Obs()`` with all features off)
 the context keeps the :data:`~repro.obs.tracer.NULL_TRACER` and runs are
-bitwise-identical to the uninstrumented stack.
+bitwise-identical to the uninstrumented stack.  The flight recorder is the
+middle setting — spans recorded into a bounded last-K-steps ring
+(:class:`~repro.obs.recorder.RingTracer`), exported only as a postmortem
+dump when a crash, audit violation, or SLO alert demands one.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
+from repro.obs.alerts import (DEFAULT_WINDOWS, Alert, BurnRateMonitor,
+                              BurnWindow, parse_windows)
+from repro.obs.audit import AuditError, AuditViolation, FleetAuditor
 from repro.obs.env import ObsConfig, load_obs_env
 from repro.obs.export import (chrome_trace, request_chains, validate,
                               write_chrome_trace)
 from repro.obs.metrics import MetricsRegistry, sample_fleet
+from repro.obs.recorder import FlightRecorder, RingTracer
 from repro.obs.refit import OnlineRefitter, RefitEvent
 from repro.obs.tracer import NULL_TRACER, SpanTracer, TraceEvent, Tracer
 
 __all__ = [
     "Obs", "ObsConfig", "load_obs_env",
-    "Tracer", "SpanTracer", "TraceEvent", "NULL_TRACER",
+    "Tracer", "SpanTracer", "TraceEvent", "NULL_TRACER", "RingTracer",
     "MetricsRegistry", "sample_fleet",
     "OnlineRefitter", "RefitEvent",
+    "FleetAuditor", "AuditError", "AuditViolation",
+    "FlightRecorder",
+    "BurnRateMonitor", "BurnWindow", "Alert", "DEFAULT_WINDOWS",
     "chrome_trace", "write_chrome_trace", "validate", "request_chains",
 ]
 
@@ -42,17 +54,48 @@ class Obs:
     the ``ISHMEM_OBS_*`` variables.  ``attach(ctx)`` installs the tracer on
     a context and (when a re-fit period is set) creates the
     :class:`OnlineRefitter` against it.
+
+    Per-step driving (the fleet loop calls :meth:`begin_step` /
+    :meth:`end_step`): metrics sampling feeds the flight recorder and the
+    burn-rate monitor; every ``audit_period`` steps the invariant auditors
+    sweep the live fleet and **raise** :class:`AuditError` on a violation —
+    after the recorder (when armed) has written a postmortem dump.  A newly
+    fired SLO alert also triggers a dump, but does not raise.
     """
 
     def __init__(self, *, trace: bool = False, metrics: bool = False,
                  refit_period: int = 0, refit_min_samples: int = 64,
-                 trace_limit: int = 1 << 20):
-        self.tracer = SpanTracer(max_events=trace_limit) if trace \
-            else NULL_TRACER
-        self.metrics = MetricsRegistry() if metrics else None
+                 trace_limit: int = 1 << 20,
+                 audit_period: int = 0,
+                 recorder_window: int = 0,
+                 recorder_path: str = "postmortem_trace.json",
+                 alerts: bool = False, alert_target: float = 0.9,
+                 alert_windows: Union[str, tuple] = DEFAULT_WINDOWS):
+        if trace:
+            self.tracer = SpanTracer(max_events=trace_limit)
+        elif recorder_window > 0:
+            # recorder without full tracing: bounded last-K-steps ring
+            self.tracer = RingTracer(window_steps=recorder_window,
+                                     max_events=trace_limit)
+        else:
+            self.tracer = NULL_TRACER
+        # the burn-rate monitor reads the per-class ledger off the metrics
+        # series, so alerting implies sampling
+        self.metrics = MetricsRegistry() if (metrics or alerts) else None
         self.refit_period = refit_period
         self.refit_min_samples = refit_min_samples
         self.refitter: Optional[OnlineRefitter] = None
+        self.audit_period = audit_period
+        self.auditor = (FleetAuditor() if audit_period > 0 else None)
+        self.recorder = (FlightRecorder(self.tracer,
+                                        window_steps=recorder_window,
+                                        path=recorder_path)
+                         if recorder_window > 0 else None)
+        if isinstance(alert_windows, str):
+            alert_windows = parse_windows(alert_windows)
+        self.monitor = (BurnRateMonitor(target=alert_target,
+                                        windows=alert_windows)
+                        if alerts else None)
 
     @classmethod
     def from_env(cls, cfg: Optional[ObsConfig] = None) -> "Obs":
@@ -60,7 +103,12 @@ class Obs:
         return cls(trace=cfg.trace, metrics=cfg.metrics,
                    refit_period=cfg.refit_period,
                    refit_min_samples=cfg.refit_min_samples,
-                   trace_limit=cfg.trace_limit)
+                   trace_limit=cfg.trace_limit,
+                   audit_period=cfg.audit_period,
+                   recorder_window=cfg.recorder_window,
+                   recorder_path=cfg.recorder_path,
+                   alerts=cfg.alerts, alert_target=cfg.alert_target,
+                   alert_windows=cfg.alert_windows)
 
     @classmethod
     def from_config(cls, cfg: ObsConfig) -> "Obs":
@@ -84,10 +132,40 @@ class Obs:
     def end_step(self, fleet) -> None:
         if self.refitter is not None:
             self.refitter.maybe_refit(fleet.elapsed_steps)
+        row = None
         if self.metrics is not None:
-            sample_fleet(self.metrics, fleet, tracer=self.tracer)
+            row = sample_fleet(self.metrics, fleet, tracer=self.tracer)
+        if self.recorder is not None and row is not None:
+            self.recorder.note_metrics(row)
         if self.tracer.enabled:
             self.tracer.end("step", "fleet", "fleet", "steps")
+        # auditors sweep after the step slice closes, so a violation dump
+        # is a clean window (no spans left open by the abort itself)
+        step = fleet.elapsed_steps
+        if (self.auditor is not None and self.audit_period > 0
+                and step > 0 and step % self.audit_period == 0):
+            violations = self.auditor.audit(fleet)
+            if violations:
+                if self.recorder is not None:
+                    self.recorder.dump(
+                        reason="audit:" + ";".join(sorted(
+                            {f"{v.auditor}/{v.rule}" for v in violations})),
+                        step=step)
+                raise AuditError(violations)
+        if self.monitor is not None and self.metrics is not None:
+            fired = self.monitor.observe(fleet, self.metrics,
+                                         tracer=self.tracer)
+            if fired and self.recorder is not None:
+                self.recorder.dump(
+                    reason="slo-burn:" + ",".join(a.cls for a in fired),
+                    step=step)
+
+    def crash_dump(self, reason: str) -> Optional[str]:
+        """Postmortem dump on an unhandled fleet-loop exception; returns
+        the path written, or None when no recorder is armed."""
+        if self.recorder is None:
+            return None
+        return self.recorder.dump(reason=f"crash:{reason}")
 
     # ------------------------------------------------------------- output
     def write_trace(self, path: str) -> dict:
@@ -113,4 +191,10 @@ class Obs:
             out["refit_decisions_changed"] = self.refitter.decisions_changed()
             out["refit_events"] = [ev.to_json()
                                    for ev in self.refitter.history]
+        if self.auditor is not None:
+            out["audit"] = self.auditor.summary()
+        if self.recorder is not None:
+            out["recorder"] = self.recorder.summary()
+        if self.monitor is not None:
+            out["alerts"] = self.monitor.summary()
         return out

@@ -16,10 +16,26 @@ run is bitwise-identical to one built before this subsystem existed.
                                  due re-fit runs (default 64)
 ``ISHMEM_OBS_TRACE_LIMIT``       tracer event-buffer bound (default 2^20);
                                  accepts K/M suffixes
+``ISHMEM_OBS_AUDIT``             invariant-audit period in fleet steps
+                                 (``0``/unset = auditors off); each audit
+                                 runs every ``repro.obs.audit`` family and
+                                 raises on any violation
+``ISHMEM_OBS_RECORDER``          flight-recorder window in fleet steps
+                                 (``0``/unset = off); postmortem dumps of
+                                 the last-window spans on crash / audit
+                                 violation / SLO alert
+``ISHMEM_OBS_RECORDER_PATH``     postmortem dump path (default
+                                 ``postmortem_trace.json``)
+``ISHMEM_OBS_ALERTS``            ``1`` — SLO burn-rate monitor (implies
+                                 metrics sampling)
+``ISHMEM_OBS_ALERT_TARGET``      SLO target the error budget derives from
+                                 (default 0.9)
+``ISHMEM_OBS_ALERT_WINDOWS``     burn windows as ``steps:threshold`` pairs,
+                                 e.g. ``8:6,32:3`` (the default)
 ===============================  ============================================
 
-CLI flags on ``launch/serve.py`` (``--trace``/``--metrics``/``--refit``)
-override the environment.
+CLI flags on ``launch/serve.py`` (``--trace``/``--metrics``/``--refit``/
+``--audit``/``--recorder``/``--alerts``) override the environment.
 """
 from __future__ import annotations
 
@@ -41,10 +57,18 @@ class ObsConfig:
     refit_period: int = 0               # fleet steps; 0 = off
     refit_min_samples: int = 64
     trace_limit: int = 1 << 20
+    audit_period: int = 0               # fleet steps; 0 = off
+    recorder_window: int = 0            # fleet steps; 0 = off
+    recorder_path: str = "postmortem_trace.json"
+    alerts: bool = False
+    alert_target: float = 0.9
+    alert_windows: str = "8:6,32:3"     # parse_windows format
 
     @property
     def enabled(self) -> bool:
-        return self.trace or self.metrics or self.refit_period > 0
+        return (self.trace or self.metrics or self.refit_period > 0
+                or self.audit_period > 0 or self.recorder_window > 0
+                or self.alerts)
 
 
 def _flag_or_path(val: Optional[str]) -> tuple:
@@ -89,8 +113,39 @@ def load_obs_env(environ: Optional[Mapping[str, str]] = None) -> ObsConfig:
     except ValueError:
         raise ValueError(f"ISHMEM_OBS_TRACE_LIMIT: expected a count like "
                          f"65536/1M, got {limit!r}") from None
+
+    def get_steps(name: str) -> int:
+        raw = get(name)
+        try:
+            val = int(raw) if raw is not None else 0
+        except ValueError:
+            raise ValueError(f"{PREFIX}{name}: expected a step count, "
+                             f"got {raw!r}") from None
+        if val < 0:
+            raise ValueError(f"{PREFIX}{name} must be >= 0")
+        return val
+
+    audit_period = get_steps("AUDIT")
+    recorder_window = get_steps("RECORDER")
+    recorder_path = get("RECORDER_PATH") or "postmortem_trace.json"
+    alerts, _ = _flag_or_path(get("ALERTS"))
+    raw_target = get("ALERT_TARGET")
+    try:
+        alert_target = float(raw_target) if raw_target is not None else 0.9
+    except ValueError:
+        raise ValueError(f"ISHMEM_OBS_ALERT_TARGET: expected a float in "
+                         f"(0, 1), got {raw_target!r}") from None
+    alert_windows = get("ALERT_WINDOWS") or "8:6,32:3"
+    from repro.obs.alerts import parse_windows
+    parse_windows(alert_windows)        # fail fast on a malformed spec
     return ObsConfig(trace=trace, trace_path=trace_path,
                      metrics=metrics, metrics_path=metrics_path,
                      refit_period=refit_period,
                      refit_min_samples=refit_min,
-                     trace_limit=trace_limit)
+                     trace_limit=trace_limit,
+                     audit_period=audit_period,
+                     recorder_window=recorder_window,
+                     recorder_path=recorder_path,
+                     alerts=alerts,
+                     alert_target=alert_target,
+                     alert_windows=alert_windows)

@@ -17,7 +17,7 @@ eye in Perfetto, done mechanically so tests and benchmarks can assert on it.
 from __future__ import annotations
 
 import json
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.obs.tracer import SpanTracer, TraceEvent
 
@@ -49,16 +49,21 @@ def _event_json(ev: TraceEvent) -> dict:
     return obj
 
 
-def chrome_trace(tracer: SpanTracer) -> dict:
-    """Full Trace-Event-Format document (``traceEvents`` + metadata)."""
+def chrome_trace_events(span_events, *, dropped: int = 0,
+                        other: Optional[dict] = None) -> dict:
+    """Trace-Event-Format document from an explicit event sequence — the
+    serializer behind :func:`chrome_trace`, reused by the flight recorder
+    for windowed postmortem dumps.  ``other`` merges extra keys into
+    ``otherData`` (e.g. the dump reason)."""
     events: List[dict] = []
+    span_events = list(span_events)
     # metadata naming: one process_name per pid, sorted for stable diffs
-    pids = sorted({ev.pid for ev in tracer.events}, key=_sort_key)
+    pids = sorted({ev.pid for ev in span_events}, key=_sort_key)
     for pid in pids:
         events.append({"name": "process_name", "ph": "M", "pid": str(pid),
                        "args": {"name": str(pid)}})
     seen_tids = set()
-    for ev in tracer.events:
+    for ev in span_events:
         key = (ev.pid, ev.tid)
         if key not in seen_tids:
             seen_tids.add(key)
@@ -66,15 +71,23 @@ def chrome_trace(tracer: SpanTracer) -> dict:
                            "pid": str(ev.pid), "tid": str(ev.tid),
                            "args": {"name": str(ev.tid)}})
         events.append(_event_json(ev))
+    other_data = {
+        "schema_version": TRACE_SCHEMA_VERSION,
+        "clock": "step",                # ts = step * 1000 + sub-tick
+        "dropped_events": dropped,
+    }
+    if other:
+        other_data.update(other)
     return {
         "traceEvents": events,
         "displayTimeUnit": "ms",
-        "otherData": {
-            "schema_version": TRACE_SCHEMA_VERSION,
-            "clock": "step",            # ts = step * 1000 + sub-tick
-            "dropped_events": tracer.dropped,
-        },
+        "otherData": other_data,
     }
+
+
+def chrome_trace(tracer: SpanTracer) -> dict:
+    """Full Trace-Event-Format document (``traceEvents`` + metadata)."""
+    return chrome_trace_events(tracer.events, dropped=tracer.dropped)
 
 
 def write_chrome_trace(tracer: SpanTracer, path: str) -> dict:
@@ -89,7 +102,7 @@ def write_chrome_trace(tracer: SpanTracer, path: str) -> dict:
 # validation (CI gate b)
 # --------------------------------------------------------------------------
 
-def validate(doc: dict) -> List[str]:
+def validate(doc: dict, *, warnings: Optional[list] = None) -> List[str]:
     """Structural schema check; returns a list of violations (empty = valid).
 
     Invariants:
@@ -101,11 +114,24 @@ def validate(doc: dict) -> List[str]:
     - every flow start (``s``) has a matching finish (``f``) with the same
       id, and vice versa
     - async/flow events carry an ``id``
+
+    Tracer-bound truncation (``otherData.dropped_events > 0``) is surfaced
+    as a ``"warning: ..."`` entry: a truncated trace is structurally valid
+    (ends of open spans are force-admitted) but spans may be *missing*, so
+    chain reconstruction over it cannot be trusted.  Pass ``warnings=[]``
+    to collect warnings separately and keep the return value errors-only.
     """
     errors: List[str] = []
+    warn_sink = errors if warnings is None else warnings
+    dropped = (doc.get("otherData") or {}).get("dropped_events", 0)
+    if dropped:
+        warn_sink.append(
+            f"warning: tracer dropped {dropped} event(s) at its buffer "
+            f"bound — spans may be missing; request-chain reconstruction "
+            f"over this trace is untrustworthy")
     events = doc.get("traceEvents")
     if not isinstance(events, list):
-        return ["traceEvents missing or not a list"]
+        return errors + ["traceEvents missing or not a list"]
 
     slice_stacks: Dict[tuple, List[str]] = {}
     async_open: Dict[tuple, int] = {}
@@ -190,15 +216,10 @@ def validate(doc: dict) -> List[str]:
 # per-request chain reconstruction
 # --------------------------------------------------------------------------
 
-def request_chains(tracer: SpanTracer) -> Dict[int, List[dict]]:
-    """Reconstruct each request's causal lifeline from ``cat="req"`` async
-    spans: ``{rid: [{"phase", "t0", "t1", "args"}, ...]}`` ordered by begin
-    timestamp.  ``args`` merges begin- and end-side attribution (end wins on
-    key collision, so closing attribution like wire/queue/compute seconds
-    lands on the phase that measured it)."""
+def _chains_from_events(events) -> Dict[int, List[dict]]:
     chains: Dict[int, List[dict]] = {}
     open_phase: Dict[tuple, dict] = {}
-    for ev in tracer.events:
+    for ev in events:
         if ev.cat != "req" or ev.id is None:
             continue
         key = (ev.id, ev.name)
@@ -217,6 +238,40 @@ def request_chains(tracer: SpanTracer) -> Dict[int, List[dict]]:
     return chains
 
 
+def request_chains(tracer: SpanTracer) -> Dict[int, List[dict]]:
+    """Reconstruct each request's causal lifeline from ``cat="req"`` async
+    spans: ``{rid: [{"phase", "t0", "t1", "args"}, ...]}`` ordered by begin
+    timestamp.  ``args`` merges begin- and end-side attribution (end wins on
+    key collision, so closing attribution like wire/queue/compute seconds
+    lands on the phase that measured it)."""
+    return _chains_from_events(tracer.events)
+
+
+def events_from_doc(doc: dict) -> List[TraceEvent]:
+    """Rehydrate :class:`TraceEvent` records from an exported (or loaded)
+    Chrome-trace document — the offline entry into :func:`request_chains`
+    and the critical-path analyzer (``python -m repro.obs.analyze``).
+    Metadata (``ph="M"``) records are skipped; async/flow ids round-trip
+    back to ints (request ids are serialized as strings)."""
+    out: List[TraceEvent] = []
+    for ev in doc.get("traceEvents", []):
+        if ev.get("ph") == "M":
+            continue
+        eid = ev.get("id")
+        if isinstance(eid, str) and eid.lstrip("-").isdigit():
+            eid = int(eid)
+        out.append(TraceEvent(ph=ev.get("ph"), name=ev.get("name"),
+                              cat=ev.get("cat"), ts=ev.get("ts"),
+                              pid=ev.get("pid"), tid=ev.get("tid"),
+                              id=eid, args=ev.get("args")))
+    return out
+
+
+def request_chains_doc(doc: dict) -> Dict[int, List[dict]]:
+    """:func:`request_chains` over a loaded Chrome-trace JSON document."""
+    return _chains_from_events(events_from_doc(doc))
+
+
 def chain_gaps(chain: List[dict], *, slack: float = 1.0) -> List[tuple]:
     """Uncovered (t1_prev, t0_next) intervals in a request's phase chain —
     a gap-free lifeline (the causality tests' invariant) returns [].
@@ -225,14 +280,20 @@ def chain_gaps(chain: List[dict], *, slack: float = 1.0) -> List[tuple]:
     *consecutive* sub-ticks (the step clock advances once per event), so a
     begin within ``slack`` ticks of the covered frontier is contiguous;
     anything further means the request spent untraced time between phases.
+
+    A still-open span (``t1 is None`` — a SHED/PREEMPTED/mid-flight request
+    in a windowed or truncated trace) covers everything from its begin
+    onward: the request is *in* that phase, so nothing after it is
+    untraced.  Skipping such entries (the old behavior) left the covered
+    frontier at the previous close and flagged phantom gaps against spans
+    that sorted after the open one.
     """
     gaps = []
     covered_until = None
     for entry in chain:
-        if entry["t1"] is None:
-            continue
         if covered_until is not None and entry["t0"] > covered_until + slack:
             gaps.append((covered_until, entry["t0"]))
-        covered_until = (entry["t1"] if covered_until is None
-                         else max(covered_until, entry["t1"]))
+        t1 = float("inf") if entry["t1"] is None else entry["t1"]
+        covered_until = t1 if covered_until is None else max(covered_until,
+                                                             t1)
     return gaps

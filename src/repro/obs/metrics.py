@@ -104,6 +104,7 @@ def sample_fleet(reg: MetricsRegistry, fleet, *, tracer=None) -> dict:
     offered = {}
     good = {}
     shed = {}
+    finished = {}
     for pod in fleet.pods:
         sched = pod.sched
         reg.gauge(f"{pod.name}.queue_depth", len(sched.queue))
@@ -115,15 +116,25 @@ def sample_fleet(reg: MetricsRegistry, fleet, *, tracer=None) -> dict:
             offered[cls.name] = offered.get(cls.name, 0) + 1
             if req.state == SHED:
                 shed[cls.name] = shed.get(cls.name, 0) + 1
-            elif (req.state == FINISHED
-                  and req.admit_step - req.arrival_step
-                  <= cls.ttfd_deadline):
-                good[cls.name] = good.get(cls.name, 0) + 1
+            elif req.state == FINISHED:
+                finished[cls.name] = finished.get(cls.name, 0) + 1
+                if (req.admit_step - req.arrival_step
+                        <= cls.ttfd_deadline):
+                    good[cls.name] = good.get(cls.name, 0) + 1
     for name, n in offered.items():
+        n_shed = shed.get(name, 0)
+        n_fin = finished.get(name, 0)
+        n_good = good.get(name, 0)
         reg.gauge(f"class.{name}.offered", n)
-        reg.gauge(f"class.{name}.good", good.get(name, 0))
-        reg.gauge(f"class.{name}.shed", shed.get(name, 0))
-        reg.gauge(f"class.{name}.goodput", good.get(name, 0) / n)
+        reg.gauge(f"class.{name}.good", n_good)
+        reg.gauge(f"class.{name}.shed", n_shed)
+        reg.gauge(f"class.{name}.goodput", n_good / n)
+        # cumulative SLO ledger for the burn-rate monitor (obs.alerts):
+        # terminal = requests with a final verdict, bad = the SLO-violating
+        # subset (shed outright, or finished past the admission deadline)
+        reg.gauge(f"class.{name}.finished", n_fin)
+        reg.gauge(f"class.{name}.terminal", n_fin + n_shed)
+        reg.gauge(f"class.{name}.bad", n_shed + (n_fin - n_good))
 
     # --- tracer health (self-observability) -------------------------------
     if tracer is not None and tracer.enabled:

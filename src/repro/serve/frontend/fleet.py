@@ -56,6 +56,7 @@ class FleetConfig:
     max_new: int = 4                # default decode budget
     temperature: float = 0.0
     stream_chunks: int = 1          # 0 = whole-prefill migration
+    fused_attn: bool = False        # fused-admission decode (excl. streaming)
     shared_prefix: bool = True
     admit_delay: int = 1
     admission: str = "slo"          # "slo" | "fcfs"
@@ -126,6 +127,7 @@ class Fleet:
                                  seed=fcfg.seed),
                 admit_delay_steps=fcfg.admit_delay,
                 stream_chunks=fcfg.stream_chunks,
+                fused_attn=fcfg.fused_attn,
                 shared_prefix=fcfg.shared_prefix,
                 policy=self._make_policy(),
                 prefix_index=self.prefix_index,
@@ -189,16 +191,25 @@ class Fleet:
         """Open-loop drive: play the arrival schedule, drain, report."""
         specs = sorted(specs, key=lambda s: (s.step, s.idx))
         i = 0
-        while i < len(specs) or not self.done():
-            if self.elapsed_steps >= max_steps:
-                raise RuntimeError(
-                    f"fleet wedged after {max_steps} steps "
-                    f"({len(specs) - i} arrivals unplayed)")
-            batch = []
-            while i < len(specs) and specs[i].step <= self.elapsed_steps:
-                batch.append(specs[i])
-                i += 1
-            self.step(batch)
+        try:
+            while i < len(specs) or not self.done():
+                if self.elapsed_steps >= max_steps:
+                    raise RuntimeError(
+                        f"fleet wedged after {max_steps} steps "
+                        f"({len(specs) - i} arrivals unplayed)")
+                batch = []
+                while i < len(specs) and specs[i].step <= self.elapsed_steps:
+                    batch.append(specs[i])
+                    i += 1
+                self.step(batch)
+        except Exception as exc:
+            # flight recorder: the last window of spans becomes a postmortem
+            # trace before the exception propagates.  An AuditError already
+            # dumped at the violation site (Obs.end_step).
+            from repro.obs.audit import AuditError
+            if self.obs is not None and not isinstance(exc, AuditError):
+                self.obs.crash_dump(type(exc).__name__)
+            raise
         return self.report()
 
     def report(self) -> dict:

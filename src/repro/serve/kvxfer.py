@@ -522,12 +522,14 @@ class KVMigrator:
             max(0, int(cur) - EXTRA_SIGNALS)
 
     def consume_blocks(self, heap, slot: int, dst_pe: int, have: int,
-                       need: int):
+                       need: int, *, rid: Optional[int] = None):
         """Per-block device waits: block k of a fused migration is readable
         once ``sig >= EXTRA_SIGNALS + k``.  Waits blocks ``have+1 .. need``
         in order, each wait forcing only the minimal queue prefix that
         delivers that block — the fusion protocol's consume side.  Returns
-        ``(heap, blocks_now_resident)``."""
+        ``(heap, blocks_now_resident)``.  ``rid`` attributes the consumed
+        batch to a request lifeline (the critical-path analyzer folds these
+        instants into its device-wait record)."""
         sig_ptr = self.pool.sig_ptr(slot)
         wg = device_mod.work_group(self.ctx, size=self.work_items, pe=dst_pe)
         resident = have
@@ -537,6 +539,11 @@ class KVMigrator:
             if not bool(ok):
                 break
             resident = k
+        tr = self._tracer()
+        if tr is not None and rid is not None and resident > have:
+            pid, tid = self._track(dst_pe)
+            tr.instant("consume", "kvx", pid, tid, rid=rid,
+                       blocks=resident - have, resident=resident)
         return heap, resident
 
     def gather_tail(self, heap, slot: int, pe: int):

@@ -705,7 +705,11 @@ class DisaggScheduler:
         self._trace_phase(req, "migrating", src_pe=report.src_pe,
                           dst_pe=report.dst_pe, tier=report.tier,
                           bytes=report.bytes_total,
-                          bytes_dcn=report.bytes_dcn, chunks=report.chunks)
+                          bytes_dcn=report.bytes_dcn, chunks=report.chunks,
+                          wire_steps=delay,
+                          protocol=("stream" if req.park_sig >= 0
+                                    else "fused" if self.fused_attn
+                                    else "barrier"))
         self.migrating.append(req)
         self.stats.migrations += 1
         self.stats.bytes_migrated += report.bytes_total
@@ -762,7 +766,7 @@ class DisaggScheduler:
             # re-armed, or the signals would land against the NEXT request
             have = req.wire_blocks - req.fused_pending
             self.heap, resident = self.migrator.consume_blocks(
-                self.heap, slot, pe, have, req.wire_blocks)
+                self.heap, slot, pe, have, req.wire_blocks, rid=req.rid)
             req.fused_pending = req.wire_blocks - resident
         bank = self.banks[pe]
         req.resume_pos = int(bank.pos[slot])
@@ -926,7 +930,8 @@ class DisaggScheduler:
                 req, "decoding",
                 end_args={"wire_model_s": req.t_admit - req.t_submit,
                           "ttfd_steps": req.admit_step - req.arrival_step,
-                          "ttfd_model_s": req.t_admit - req.t_arrival},
+                          "ttfd_model_s": req.t_admit - req.t_arrival,
+                          "first_block_step": req.first_block_step},
                 pe=req.decode_pe, slot=req.slot)
             self.stats.admissions += 1
             self.stats.ttfd_steps.append(req.admit_step - req.submit_step)
@@ -953,7 +958,7 @@ class DisaggScheduler:
                 continue
             have = req.wire_blocks - req.fused_pending
             self.heap, resident = self.migrator.consume_blocks(
-                self.heap, req.slot, pe, have, req.wire_blocks)
+                self.heap, req.slot, pe, have, req.wire_blocks, rid=rid)
             req.fused_pending = req.wire_blocks - resident
             if req.fused_pending > 0:
                 raise RuntimeError(

@@ -117,7 +117,14 @@ def test_span_tracer_truncation_still_closes_spans():
     tr.end("step", "fleet", "fleet", "steps")
     assert tr.open_spans() == {"slices": {}, "async": {}}
     doc = chrome_trace(tr)
-    assert validate(doc) == []
+    # structurally valid, but the truncation is SURFACED: by default the
+    # dropped-event warning rides the error list (a truncated trace must
+    # not silently pass the CI gate); warnings=[] splits it back out
+    warnings = []
+    assert validate(doc, warnings=warnings) == []
+    assert len(warnings) == 1 and "dropped" in warnings[0]
+    errs = validate(doc)
+    assert len(errs) == 1 and errs[0].startswith("warning:")
     assert doc["otherData"]["dropped_events"] == tr.dropped > 0
 
 

@@ -1,0 +1,585 @@
+"""PR-8 observability acceptance: critical paths, auditors, recorder, alerts.
+
+- critical-path reconstruction over stressed fleets (streaming AND fused):
+  every request's lifeline is gap-free and its segment attribution sums to
+  its end-to-end span EXACTLY; fused requests split migrating into wire vs
+  signal-wait using the observed first_block_step; device consume instants
+  thread into the path records,
+- the ``python -m repro.obs.analyze`` CLI over an exported trace file,
+- chain_gaps: no phantom gaps for still-open (shed/windowed) spans,
+- online invariant auditors: clean runs audit clean; seeded corruptions
+  (refcount, residency, signal ledger) are each caught within one audit
+  period, with a flight-recorder postmortem dump that validates clean,
+- SLO burn-rate alerting: fires under overload naming a truly over-deadline
+  request, stays silent at nominal load,
+- flight recorder: ring bounding, crash dumps, window repair,
+- the extended ISHMEM_OBS_* env surface and Obs wiring.
+"""
+import functools
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.obs import (Obs, RingTracer, load_obs_env, request_chains,
+                       validate)
+from repro.obs import analyze as analyze_mod
+from repro.obs import critical, export
+from repro.obs.alerts import BurnRateMonitor, BurnWindow, parse_windows
+from repro.obs.audit import AuditError, FleetAuditor
+from repro.obs.recorder import FlightRecorder
+from repro.obs.tracer import STEP_QUANTUM, SpanTracer
+from repro.serve.frontend import TenantSpec, TrafficEngine
+from repro.serve.scheduler import DECODING
+
+from test_obs import NEW, _engine, _fleet
+
+
+def _traffic(cfg, *, rate, seed, shared=0.0, steps=16):
+    tenants = [TenantSpec("chat", weight=2.0, prompt_lens=(8,),
+                          max_new=(NEW,), slo="interactive"),
+               TenantSpec("scan", weight=1.0, prompt_lens=(12,),
+                          max_new=(12,), slo="batch",
+                          shared_prefix_prob=shared, prefix_groups=1)]
+    eng = TrafficEngine(tenants, rate=rate, vocab=cfg.vocab_size, seed=seed)
+    return eng.schedule(steps)
+
+
+@functools.lru_cache(maxsize=1)
+def _stressed_streaming():
+    """Overloaded streaming fleet (sheds + preempts + chunked wire +
+    shared prefixes), traced, audited every step, alerting armed."""
+    cfg, _ = _engine()
+    obs = Obs(trace=True, metrics=True, audit_period=1, alerts=True)
+    fleet = _fleet(obs=obs, admission="slo", router="least_loaded",
+                   num_slots=1, queue_bound=3, kv_blocks=128,
+                   stream_chunks=2)
+    report = fleet.run(_traffic(cfg, rate=3.0, seed=23, shared=0.5),
+                       max_steps=2500)
+    return fleet, obs, report
+
+
+@functools.lru_cache(maxsize=1)
+def _stressed_fused():
+    """Overloaded FUSED-admission fleet: per-block signals, first-block
+    admission, device-side consume waits — the PR-7 protocol under the
+    PR-8 lens."""
+    cfg, _ = _engine()
+    obs = Obs(trace=True, metrics=True, audit_period=1)
+    fleet = _fleet(obs=obs, admission="slo", router="least_loaded",
+                   num_slots=1, queue_bound=3, kv_blocks=128,
+                   stream_chunks=0, fused_attn=True)
+    report = fleet.run(_traffic(cfg, rate=3.0, seed=23), max_steps=2500)
+    return fleet, obs, report
+
+
+@functools.lru_cache(maxsize=1)
+def _fused_onepod():
+    """Single-pod fused fleet: no host-proxy ring, so fused admission keeps
+    its MINIMAL-prefix device wait and decode consumes trailing blocks
+    per-signal (cross-pod admission drains the ring whole instead)."""
+    cfg, _ = _engine()
+    obs = Obs(trace=True, audit_period=1)
+    fleet = _fleet(obs=obs, n_pods=1, admission="slo", router="least_loaded",
+                   num_slots=1, queue_bound=3, kv_blocks=128,
+                   stream_chunks=0, fused_attn=True)
+    report = fleet.run(_traffic(cfg, rate=3.0, seed=23), max_steps=2500)
+    return fleet, obs, report
+
+
+def _assert_paths_exact(fleet, obs):
+    """The acceptance invariant: every submitted request has a complete,
+    gap-free critical path whose segment sum equals its e2e span."""
+    chains = request_chains(obs.tracer)
+    rids = {rid for _, rid in fleet.placements.values()}
+    assert rids and rids == set(chains)
+    paths = critical.fleet_paths(chains, obs.tracer.events)
+    for rid, p in paths.items():
+        assert p["complete"], f"rid {rid}: open span in a drained run"
+        assert p["gaps"] == [], f"rid {rid}: untraced hole"
+        assert sum(p["segments"].values()) == pytest.approx(
+            p["e2e_ticks"], abs=1e-9), f"rid {rid}: attribution leak"
+        if p["outcome"] == "finished":
+            assert p["ttfd_ticks"] is not None
+            assert sum(p["ttfd_segments"].values()) == pytest.approx(
+                p["ttfd_ticks"], abs=1e-9)
+    return paths
+
+
+# ---------------------------------------------------------------------------
+# critical paths under stress
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_paths_gap_free_and_exact():
+    fleet, obs, report = _stressed_streaming()
+    assert report["shed"] > 0 and report["preempts"] >= 1
+    paths = _assert_paths_exact(fleet, obs)
+    # streaming requests put their installments in the wire segment, and
+    # preempted requests carry a preemption segment
+    assert any(p["segments"]["wire"] > 0 for p in paths.values())
+    assert any(p["segments"]["preemption"] > 0 for p in paths.values())
+    assert any(p["outcome"] == "shed" and p["segments"]["queue"] >= 0
+               for p in paths.values())
+    # clean run: the per-step auditors never fired
+    assert obs.auditor.checks == fleet.elapsed_steps
+    assert obs.auditor.violation_count == 0
+
+
+def test_streaming_fleet_report_and_what_if():
+    fleet, obs, _ = _stressed_streaming()
+    rep = critical.analyze_tracer(obs.tracer)
+    assert rep["requests"] == len(fleet.placements)
+    assert rep["chain_gaps"] == 0 and rep["incomplete_paths"] == 0
+    assert rep["admitted"] + rep["shed"] <= rep["requests"]
+    assert rep["ttfd"]["p99_steps"] >= rep["ttfd"]["p50_steps"] > 0
+    shares = rep["ttfd_segment_share"]
+    assert sum(shares.values()) == pytest.approx(1.0)
+    # the p99 request is a real request with its own exact breakdown
+    worst = rep["p99_request"]
+    assert worst["rid"] in dict(fleet.placements.values()).keys() or \
+        worst["rid"] in {rid for _, rid in fleet.placements.values()}
+    assert sum(worst["segments_steps"].values()) == pytest.approx(
+        worst["ttfd_steps"], abs=1e-6)
+    # what-if bounds can only improve (or match) the measured tail
+    for key, val in rep["what_if"].items():
+        assert val <= rep["ttfd"]["p99_steps"] + 1e-9, key
+
+
+def test_fused_paths_use_observed_first_block_step():
+    fleet, obs, report = _stressed_fused()
+    assert report["shed"] > 0 and report["preempts"] >= 1
+    paths = _assert_paths_exact(fleet, obs)
+    chains = request_chains(obs.tracer)
+    saw_mig = False
+    for rid, chain in chains.items():
+        migs = [(i, e) for i, e in enumerate(chain)
+                if e["phase"] == "migrating"]
+        if not migs:
+            continue
+        saw_mig = True
+        # the split is anchored on the OBSERVED first-block step (threaded
+        # from the admission poll onto the migrating end), so the wire
+        # segment ends exactly where the first block landed — replay the
+        # boundary-attributed split and demand an exact match
+        want_wire = 0.0
+        for i, mig in migs:
+            assert mig["args"]["protocol"] == "fused"
+            assert mig["args"]["wire_steps"] >= 0
+            fbs = mig["args"].get("first_block_step", -1)
+            assert fbs >= 0
+            t_end = chain[i + 1]["t0"] if i + 1 < len(chain) else mig["t1"]
+            dur = max(0.0, float(t_end) - float(mig["t0"]))
+            migrate_step = int(mig["t0"] // STEP_QUANTUM)
+            want_wire += min(max(0.0, (fbs - migrate_step) * STEP_QUANTUM),
+                             dur)
+        p = paths[rid]
+        # every fused admission leaves an admit_fused instant, threaded
+        # into the path's device record
+        assert p.get("device", {}).get("fused_admit"), rid
+        # no streaming under fused: wire is exactly the observed window
+        assert p["segments"]["wire"] == pytest.approx(want_wire, abs=1e-9)
+    assert saw_mig
+    rep = critical.analyze_tracer(obs.tracer)
+    assert rep["device"]["events"] > 0   # PR-7 device_* spans visible
+
+
+def test_fused_consume_instants_thread_into_paths():
+    # intra-pod fused admission gates on the FIRST block only, so later
+    # blocks stay on the wire and decode consumes them per-signal; those
+    # consume batches must land in each request's device record
+    fleet, obs, report = _fused_onepod()
+    assert report["shed"] > 0
+    paths = _assert_paths_exact(fleet, obs)
+    consumed = [p for p in paths.values()
+                if p.get("device", {}).get("consumed_blocks", 0) > 0]
+    assert consumed, "no device-side consume instants reached the trace"
+    for p in consumed:
+        assert p["device"]["consume_events"] > 0
+        assert p["device"]["fused_admit"]
+    assert obs.auditor.violation_count == 0
+
+
+# ---------------------------------------------------------------------------
+# offline analyzer CLI
+# ---------------------------------------------------------------------------
+
+
+def test_analyze_cli_roundtrip(tmp_path, capsys):
+    _, obs, _ = _stressed_streaming()
+    trace = tmp_path / "trace.json"
+    export.write_chrome_trace(obs.tracer, str(trace))
+    out = tmp_path / "report.json"
+    rc = analyze_mod.main([str(trace), "--json", str(out)])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "TTFD steps:" in text and "what-if bounds:" in text
+    assert "!!" not in text              # clean trace: nothing flagged
+    rep = json.loads(out.read_text())
+    assert rep["validation_errors"] == [] and rep["chain_gaps"] == 0
+    assert rep["paths"] and all("segments" in p
+                                for p in rep["paths"].values())
+    # offline == online: the doc round-trip reproduces the live report
+    live = critical.analyze_tracer(obs.tracer)
+    assert rep["ttfd"] == live["ttfd"]
+    assert rep["ttfd_segments_steps"] == live["ttfd_segments_steps"]
+
+
+def test_analyze_cli_flags_truncated_trace(tmp_path, capsys):
+    tr = SpanTracer(max_events=4)
+    tr.begin("step", "fleet", "fleet", "steps")
+    for _ in range(20):
+        tr.instant("xfer", "cq", "core", "cq")
+    tr.end("step", "fleet", "fleet", "steps")
+    trace = tmp_path / "trunc.json"
+    export.write_chrome_trace(tr, str(trace))
+    rc = analyze_mod.main([str(trace)])
+    assert rc == 0                       # warning, not a schema error
+    assert "!!" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# chain_gaps: open spans are not phantom gaps
+# ---------------------------------------------------------------------------
+
+
+def test_chain_gaps_open_span_covers_tail():
+    tr = SpanTracer()
+    tr.async_begin("queued", "req", 9, "pod0", "requests")
+    tr.async_end("queued", "req", 9, "pod0", "requests")
+    # a PREEMPTED/SHED-like still-open span (opened on the next sub-tick,
+    # contiguous), then a later closed span — the windowed-trace shape that
+    # used to flag a phantom gap
+    tr.async_begin("preempted", "req", 9, "pod0", "requests")
+    tr.clock.set_step(4)
+    tr.async_begin("decoding", "req", 9, "pod0", "requests")
+    tr.async_end("decoding", "req", 9, "pod0", "requests")
+    chain = request_chains(tr)[9]
+    assert chain[1]["t1"] is None        # genuinely open
+    assert export.chain_gaps(chain) == []
+    # ...but a REAL hole (closed span, then silence) is still a gap
+    tr2 = SpanTracer()
+    tr2.async_begin("queued", "req", 1, "pod0", "requests")
+    tr2.async_end("queued", "req", 1, "pod0", "requests")
+    tr2.clock.set_step(3)
+    tr2.async_begin("decoding", "req", 1, "pod0", "requests")
+    tr2.async_end("decoding", "req", 1, "pod0", "requests")
+    assert len(export.chain_gaps(request_chains(tr2)[1])) == 1
+
+
+# ---------------------------------------------------------------------------
+# invariant auditors: seeded corruption
+# ---------------------------------------------------------------------------
+
+
+def _fresh_audited_fleet(**over):
+    cfg, _ = _engine()
+    obs = Obs(audit_period=1, recorder_window=64)
+    kw = dict(admission="slo", router="least_loaded", num_slots=1,
+              queue_bound=6, kv_blocks=128, stream_chunks=2)
+    kw.update(over)
+    fleet = _fleet(obs=obs, **kw)
+    return fleet, obs, _traffic(cfg, rate=2.0, seed=23, shared=1.0,
+                                steps=10)
+
+
+def _run_with_injection(fleet, specs, *, when, corrupt):
+    """Drive the fleet manually; inject ``corrupt(fleet)`` once ``when``
+    holds.  Returns (injected_step, caught_step, audit_error)."""
+    specs = sorted(specs, key=lambda s: (s.step, s.idx))
+    i, injected = 0, None
+    while i < len(specs) or not fleet.done():
+        assert fleet.elapsed_steps < 2500, "wedged"
+        batch = []
+        while i < len(specs) and specs[i].step <= fleet.elapsed_steps:
+            batch.append(specs[i])
+            i += 1
+        if injected is None and when(fleet):
+            corrupt(fleet)
+            injected = fleet.elapsed_steps
+        try:
+            fleet.step(batch)
+        except AuditError as err:
+            assert injected is not None, "auditors fired without corruption"
+            return injected, fleet.elapsed_steps, err
+    raise AssertionError("corruption never caught")
+
+
+def _assert_caught(fleet, obs, injected, caught, err, rule_prefixes):
+    assert caught - injected <= obs.audit_period   # within one audit period
+    rules = {v.rule for v in err.violations}
+    assert any(r.startswith(p) for r in rules for p in rule_prefixes), rules
+    # the recorder dumped a postmortem naming the audit, and it validates
+    # clean (window repair: no dangling closers, synthesized ends)
+    assert len(obs.recorder.dumps) == 1
+    doc = json.loads(open(obs.recorder.dumps[0]).read())
+    warnings = []
+    assert validate(doc, warnings=warnings) == []
+    pm = doc["otherData"]["postmortem"]
+    assert pm["reason"].startswith("audit:")
+    assert pm["step"] == caught
+
+
+def test_seeded_refcount_corruption_is_caught(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    fleet, obs, specs = _fresh_audited_fleet()
+    target = []
+
+    def when(f):
+        for ids in f.pool.block_tables.values():
+            if ids:
+                target.append(ids[0])
+                return True
+        return False
+
+    injected, caught, err = _run_with_injection(
+        fleet, specs, when=when,
+        corrupt=lambda f: f.pool._refcnt.__setitem__(
+            target[0], f.pool._refcnt[target[0]] + 1))
+    _assert_caught(fleet, obs, injected, caught, err,
+                   ("refcount-", "free-list-"))
+    assert any(v.subject.get("block") == target[0]
+               for v in err.violations)
+
+
+def test_seeded_residency_corruption_is_caught(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    fleet, obs, specs = _fresh_audited_fleet()
+
+    def when(f):
+        # an entry with live mappers mid-flight (it outlives this step)
+        return any(e.refs >= 2 for e in f.prefix_index.values())
+
+    def corrupt(f):
+        entry = max(f.prefix_index.values(), key=lambda e: e.refs)
+        foreign = next(b for b in range(f.pool.num_blocks)
+                       if b not in entry.block_ids)
+        pe = f.pods[0].sched.decode_pes[0]
+        entry.resident.setdefault(pe, set()).add(foreign)
+
+    injected, caught, err = _run_with_injection(fleet, specs, when=when,
+                                                corrupt=corrupt)
+    _assert_caught(fleet, obs, injected, caught, err, ("residency-",))
+
+
+def test_seeded_signal_corruption_is_caught(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    fleet, obs, specs = _fresh_audited_fleet()
+    hit = []
+
+    def when(f):
+        # a freshly-admitted decoder with budget left: its slot signal word
+        # must stay untouched (stream mode) until it finishes
+        for pod in f.pods:
+            for req in pod.sched.requests.values():
+                if (req.state == DECODING and req.slot >= 0
+                        and len(req.out) + 2 < req.max_new):
+                    hit.append((req.decode_pe, req.slot))
+                    return True
+        return False
+
+    def corrupt(f):
+        pe, slot = hit[0]
+        ptr = f.pool.sig_ptr(slot)
+        f.heap = f.heap.write(ptr, pe, jnp.ones((1,), jnp.int32))
+
+    injected, caught, err = _run_with_injection(fleet, specs, when=when,
+                                                corrupt=corrupt)
+    _assert_caught(fleet, obs, injected, caught, err, ("signal-",))
+
+
+def test_clean_runs_audit_clean_across_protocols():
+    for _, obs, _ in (_stressed_streaming(), _stressed_fused()):
+        assert obs.auditor.checks > 0
+        assert obs.auditor.violation_count == 0
+    # and a standalone auditor pass over the drained fleets agrees
+    for fleet, _, _ in (_stressed_streaming(), _stressed_fused()):
+        assert FleetAuditor().audit(fleet) == []
+
+
+# ---------------------------------------------------------------------------
+# SLO burn-rate alerting
+# ---------------------------------------------------------------------------
+
+
+def test_burn_rate_alert_fires_under_overload_with_real_offender():
+    fleet, obs, report = _stressed_streaming()
+    assert obs.monitor.fired, "overloaded run never alerted"
+    alert = obs.monitor.fired[0]
+    assert alert.cls in report["by_class"]
+    for w, burn in alert.burn.items():
+        assert burn > 0
+    assert alert.offenders, "alert carried no drill-down"
+    worst = alert.offenders[0]
+    # the named offender is TRULY over deadline in the scheduler's ledger
+    sched = {pod.name: pod.sched for pod in fleet.pods}[worst["pod"]]
+    req = sched.requests[worst["rid"]]
+    from repro.serve.frontend import slo as slo_mod
+    cls = slo_mod.resolve(req.slo, fleet.classes)
+    assert cls.name == alert.cls
+    if worst["outcome"] == "shed":
+        assert req.state == "shed"
+    else:
+        assert req.state == "finished"
+        assert (req.admit_step - req.arrival_step
+                > cls.ttfd_deadline)
+        assert worst["overshoot_steps"] == (
+            req.admit_step - req.arrival_step - cls.ttfd_deadline)
+    # tracer was on: the drill-down carries critical-path segments
+    assert "segments_steps" in worst and worst["segments_steps"]
+    assert alert.to_json()["offenders"][0]["rid"] == worst["rid"]
+
+
+def test_burn_rate_silent_at_nominal_load():
+    cfg, _ = _engine()
+    obs = Obs(metrics=True, alerts=True)
+    fleet = _fleet(obs=obs, admission="slo", router="least_loaded",
+                   queue_bound=64)
+    fleet.run(_traffic(cfg, rate=0.5, seed=11, steps=12), max_steps=2500)
+    assert obs.monitor.observations == fleet.elapsed_steps
+    assert obs.monitor.fired == [] and obs.monitor.active == set()
+
+
+def test_burn_rate_mechanics_and_hysteresis():
+    class _F:                             # minimal fleet stand-in
+        elapsed_steps = 0
+        pods = ()
+        classes = None
+    mon = BurnRateMonitor(target=0.9, windows=(BurnWindow(2, 2.0),),
+                          min_terminal=2)
+    reg_rows = []
+
+    class _Reg:
+        series = reg_rows
+
+    def push(bad, term):
+        reg_rows.append({"step": len(reg_rows) + 1,
+                         "class.chat.bad": bad,
+                         "class.chat.terminal": term})
+
+    push(0, 2)
+    assert mon.observe(_F(), _Reg()) == []        # burn 0
+    push(3, 6)                                     # Δbad 3 / Δterm 4 = .75
+    fired = mon.observe(_F(), _Reg())              # burn 7.5 > 2.0
+    assert len(fired) == 1 and fired[0].cls == "chat"
+    push(4, 8)
+    assert mon.observe(_F(), _Reg()) == []        # still active: no re-fire
+    push(4, 20)                                    # burn collapses
+    assert mon.observe(_F(), _Reg()) == [] and mon.active == set()
+    push(9, 25)                                    # burns again -> re-fires
+    assert len(mon.observe(_F(), _Reg())) == 1
+    assert len(mon.fired) == 2
+    with pytest.raises(ValueError):
+        BurnRateMonitor(target=1.5)
+    assert parse_windows("8:6,32:3") == (BurnWindow(8, 6.0),
+                                         BurnWindow(32, 3.0))
+    with pytest.raises(ValueError):
+        parse_windows("")
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+
+def test_ring_tracer_bounds_and_evicts_by_step():
+    tr = RingTracer(window_steps=4)
+    for step in range(20):
+        tr.clock.set_step(step)
+        tr.begin("step", "fleet", "fleet", "steps")
+        tr.instant("xfer", "cq", "core", "cq")
+        tr.end("step", "fleet", "fleet", "steps")
+    assert tr.evicted > 0
+    assert min(ev.ts for ev in tr.events) >= (19 - 4) * STEP_QUANTUM
+    # hard cap too
+    small = RingTracer(window_steps=100, max_events=8)
+    for _ in range(50):
+        small.instant("x", "t", "p", "t")
+    assert len(small.events) == 8 and small.evicted == 42
+
+
+def test_recorder_repairs_window_edges(tmp_path):
+    tr = RingTracer(window_steps=2)
+    rec = FlightRecorder(tr, window_steps=2, path=str(tmp_path / "pm.json"))
+    tr.clock.set_step(0)
+    tr.begin("old", "t", "p", "t")                # begin falls off window
+    tr.flow_start(1, "migration", "pod0", "pe0")  # start falls off window
+    tr.clock.set_step(5)
+    tr.async_begin("decoding", "req", 1, "pod0", "requests")  # in-window
+    tr.end("old", "t", "p", "t")                  # dangling closer
+    tr.flow_end(1, "migration", "pod1", "pe2")    # half-flow
+    tr.begin("live", "t", "p", "t")               # still open at dump
+    rec.note_metrics({"step": 5, "g": 1.0})
+    path = rec.dump(reason="crash:test")
+    doc = json.loads(open(path).read())
+    warnings = []
+    assert validate(doc, warnings=warnings) == []
+    pm = doc["otherData"]["postmortem"]
+    assert pm["reason"] == "crash:test" and pm["metrics_rows"]
+    names = [(e["ph"], e["name"]) for e in doc["traceEvents"]
+             if e["ph"] != "M"]
+    assert ("E", "old") not in names              # dangling closer dropped
+    assert ("f", "migration") not in names        # half-flow dropped
+    # the still-open slice AND the still-open async got synthesized closes
+    closes = [e for e in doc["traceEvents"]
+              if (e.get("args") or {}).get("truncated")]
+    assert {(e["ph"], e["name"]) for e in closes} == \
+        {("E", "live"), ("e", "decoding")}
+
+
+def test_crash_dumps_a_postmortem(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    cfg, _ = _engine()
+    obs = Obs(recorder_window=16)
+    fleet = _fleet(obs=obs, queue_bound=64)
+    with pytest.raises(RuntimeError, match="wedged"):
+        fleet.run(_traffic(cfg, rate=1.0, seed=11, steps=12), max_steps=3)
+    assert obs.recorder.dumps
+    doc = json.loads(open(obs.recorder.dumps[0]).read())
+    warnings = []
+    assert validate(doc, warnings=warnings) == []
+    assert doc["otherData"]["postmortem"]["reason"] == "crash:RuntimeError"
+
+
+# ---------------------------------------------------------------------------
+# env surface + Obs wiring
+# ---------------------------------------------------------------------------
+
+
+def test_obs_env_pr8_surface():
+    cfg = load_obs_env({})
+    assert cfg.audit_period == 0 and cfg.recorder_window == 0
+    assert not cfg.alerts and not cfg.enabled
+    cfg = load_obs_env({"ISHMEM_OBS_AUDIT": "4",
+                        "ISHMEM_OBS_RECORDER": "32",
+                        "ISHMEM_OBS_RECORDER_PATH": "pm.json",
+                        "ISHMEM_OBS_ALERTS": "1",
+                        "ISHMEM_OBS_ALERT_TARGET": "0.95",
+                        "ISHMEM_OBS_ALERT_WINDOWS": "4:2,16:1.5"})
+    assert cfg.enabled
+    assert (cfg.audit_period, cfg.recorder_window) == (4, 32)
+    assert cfg.recorder_path == "pm.json" and cfg.alerts
+    assert cfg.alert_target == 0.95
+    assert parse_windows(cfg.alert_windows) == (BurnWindow(4, 2.0),
+                                                BurnWindow(16, 1.5))
+    for bad in ({"ISHMEM_OBS_AUDIT": "-1"},
+                {"ISHMEM_OBS_RECORDER": "soon"},
+                {"ISHMEM_OBS_ALERT_TARGET": "often"},
+                {"ISHMEM_OBS_ALERT_WINDOWS": "8"}):
+        with pytest.raises(ValueError):
+            load_obs_env(bad)
+    obs = Obs.from_config(cfg)
+    assert obs.auditor is not None and obs.recorder is not None
+    assert obs.monitor is not None and obs.metrics is not None
+    assert isinstance(obs.tracer, RingTracer)      # ring when trace off
+    assert obs.monitor.windows == (BurnWindow(4, 2.0), BurnWindow(16, 1.5))
+
+
+def test_obs_wiring_tracer_selection():
+    assert not Obs().tracer.enabled
+    assert isinstance(Obs(recorder_window=8).tracer, RingTracer)
+    on = Obs(trace=True, recorder_window=8)
+    assert isinstance(on.tracer, SpanTracer)
+    assert not isinstance(on.tracer, RingTracer)   # full trace wins
+    assert on.recorder.tracer is on.tracer         # windowed slices of it
+    assert Obs(alerts=True).metrics is not None    # alerts imply sampling
