@@ -93,6 +93,34 @@ print(f"SLO p99 {slo_p99:.1f} vs FCFS {fcfs_p99:.1f} steps, "
       f"{aff['random']['bytes_cross_pod']} B -> OK")
 EOF
 
+echo "== fault-tolerance smoke (chaos: pod loss mid-benchmark) =="
+python -m benchmarks.bench_fault --smoke BENCH_fault.json
+python - <<'EOF'
+import json
+doc = json.load(open("BENCH_fault.json"))
+p = doc["pod_loss"]
+assert p["wrong_tokens"] == 0, \
+    f"{p['wrong_tokens']} surviving request(s) decoded WRONG tokens after " \
+    f"the pod loss — recovery corrupted state"
+assert p["recovered_requests"] >= 1, \
+    "the fault hit no live work — the chaos gate is vacuous"
+assert p["recovery_ratio"] >= 0.9, \
+    f"goodput never recovered: post-fault plateau is " \
+    f"{p['recovery_ratio']:.2f}x the pre-fault plateau (< 0.9x)"
+assert p["recovery_ttfd_max_steps"] <= 15, \
+    f"recovery TTFD unbounded: a recovered request took " \
+    f"{p['recovery_ttfd_max_steps']} steps to re-admit (> 15)"
+assert p["completed"] + p["casualties"] == p["offered"], \
+    f"request accounting leaked: {p['completed']} completed + " \
+    f"{p['casualties']} casualties != {p['offered']} offered"
+print(f"pod loss at step 10: goodput {p['pre_fault_good_per_step']:.2f} -> "
+      f"{p['dip_good_per_step']:.2f} -> "
+      f"{p['post_recovery_good_per_step']:.2f}/step "
+      f"({p['recovery_ratio']:.2f}x recovery), 0 wrong tokens, "
+      f"{p['recovered_requests']} recovered (TTFD max "
+      f"{p['recovery_ttfd_max_steps']} steps) -> OK")
+EOF
+
 echo "== KV migration smoke (disaggregated serving) =="
 python -m benchmarks.bench_kvxfer --smoke BENCH_kvxfer.json
 python - <<'EOF'

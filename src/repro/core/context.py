@@ -15,7 +15,7 @@ a learned cutover table from ``ISHMEM_TUNING_FILE``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Set
 
 from repro.core import cutover, heap as heap_mod, pending as pending_mod, \
     teams
@@ -25,6 +25,26 @@ from repro.tune import env as env_mod, telemetry as telemetry_mod
 # canonical definition lives in the telemetry module; re-exported here for
 # backward compatibility (collectives/tests used to import it from context)
 OpRecord = telemetry_mod.OpRecord
+
+
+@dataclasses.dataclass
+class FaultState:
+    """Host-side failure-domain view (DESIGN.md §14).
+
+    ``dead_pes`` holds PEs whose device is gone: their heap rows are
+    garbage, pending traffic touching them (as source or destination)
+    must cancel with an error rather than complete, and new traffic to
+    them is a protocol bug.  ``dcn_down`` models a partitioned proxy
+    ring: cross-pod (dcn-tier) ops stay queued — neither lost nor
+    delivered — until the partition heals."""
+    dead_pes: Set[int] = dataclasses.field(default_factory=set)
+    dcn_down: bool = False
+
+    def alive(self, pe: int) -> bool:
+        return int(pe) not in self.dead_pes
+
+    def kill(self, pe: int) -> None:
+        self.dead_pes.add(int(pe))
 
 
 @dataclasses.dataclass
@@ -43,6 +63,9 @@ class ShmemContext:
     # span tracer (repro.obs): the shared Null tracer unless a driver
     # attaches a recording one — hot paths guard on ``tracer.enabled``
     tracer: tracer_mod.Tracer = tracer_mod.NULL_TRACER
+    # failure-domain state: which PEs are dead, whether the proxy ring is
+    # partitioned — consulted by the completion queue at flush time
+    fault: FaultState = dataclasses.field(default_factory=FaultState)
 
     # ------------------------------------------------------------ topology
     def node_of(self, pe: int) -> int:

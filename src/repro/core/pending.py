@@ -54,6 +54,7 @@ class PendingOp:
     tier: str
     epoch: int
     seq: int
+    src_pe: int = -1               # initiating PE (-1: unknown/host driver)
     work_items: int = 1
     value: Optional[object] = None          # PUT: flat payload row
     apply: Optional[Callable] = None        # AMO/SIGNAL: old -> new
@@ -85,6 +86,7 @@ class FlushStats:
     flushed_bytes: int = 0         # sum of op sizes completed
     transfer_bytes: int = 0        # sum of wire transfer sizes issued
     flushes: int = 0
+    cancelled: int = 0             # ops cancelled-with-error (dead peer)
 
     def coalescing_ratio(self) -> float:
         return self.flushed_ops / self.transfers if self.transfers else 1.0
@@ -98,13 +100,17 @@ class CompletionQueue:
         self.epoch: int = 0
         self._seq: int = 0
         self.stats = FlushStats()
+        # cancel-with-error ledger: one record per pending op that could
+        # not complete because its peer died (DESIGN.md §14) — quiet()
+        # completes instead of wedging, and the caller reads the errors
+        self.errors: List[dict] = []
 
     # ------------------------------------------------------------- submit
     def submit(self, kind: str, op: str, ptr: SymPtr, pe: int, tier: str, *,
-               work_items: int = 1, value=None, apply=None, delta=None,
-               marker=None) -> PendingOp:
+               src_pe: int = -1, work_items: int = 1, value=None, apply=None,
+               delta=None, marker=None) -> PendingOp:
         rec = PendingOp(kind=kind, op=op, ptr=ptr, pe=int(pe), tier=tier,
-                        epoch=self.epoch, seq=self._seq,
+                        epoch=self.epoch, seq=self._seq, src_pe=int(src_pe),
                         work_items=work_items, value=value, apply=apply,
                         delta=delta, marker=marker)
         self._seq += 1
@@ -189,10 +195,68 @@ class CompletionQueue:
                 return i
         return None
 
+    # ------------------------------------------------------ fault handling
+    @staticmethod
+    def _dead_pes(ctx):
+        fault = getattr(ctx, "fault", None)
+        return fault.dead_pes if fault is not None else ()
+
+    @staticmethod
+    def _touches(op: PendingOp, pes) -> bool:
+        return op.pe in pes or op.src_pe in pes
+
+    def cancel_pe(self, ctx, pe: int) -> int:
+        """Cancel-with-error every queued op touching ``pe`` as source or
+        destination (the peer died: its heap row is garbage and nothing may
+        land there or be fetched from there).  Each cancelled op leaves a
+        structured record on ``self.errors``; later quiet()/flush() calls
+        then complete normally instead of wedging on undeliverable traffic.
+        Returns the number of ops cancelled."""
+        pes = {int(pe)}
+        keep, dead = [], []
+        for o in self.ops:
+            (dead if self._touches(o, pes) else keep).append(o)
+        self.ops = keep
+        for o in dead:
+            self._cancel(ctx, o, f"pe {int(pe)} died")
+        return len(dead)
+
+    def _cancel(self, ctx, op: PendingOp, reason: str) -> None:
+        self.errors.append({
+            "op": op.op, "kind": op.kind, "pe": op.pe, "src_pe": op.src_pe,
+            "tier": op.tier, "dtype": op.ptr.dtype, "offset": op.ptr.offset,
+            "nbytes": op.ptr.nbytes, "reason": reason,
+        })
+        self.stats.cancelled += 1
+        _retag_marker(op, "cancelled")
+        tracer = getattr(ctx, "tracer", None)
+        if tracer is not None and tracer.enabled:
+            tracer.instant("op_cancelled", "cq", "core", "cq",
+                           op=op.op, pe=op.pe, reason=reason)
+
+    def _partition_limit(self, ctx, ops) -> Optional[int]:
+        """Index of the first dcn-tier op in ``ops`` while the proxy ring is
+        partitioned — nothing at or past it may complete (cross-pod traffic
+        is neither lost nor delivered until the partition heals).  None when
+        the ring is healthy."""
+        fault = getattr(ctx, "fault", None)
+        if fault is None or not fault.dcn_down:
+            return None
+        for i, o in enumerate(ops):
+            if o.tier == "dcn":
+                return i
+        return None
+
     # -------------------------------------------------------------- flush
     def flush(self, ctx, heap, *, proxy=None):
         """Complete every pending op, in order, coalescing within epochs.
-        Returns the new heap."""
+        Returns the new heap.  While the proxy ring is partitioned, only
+        the queue prefix before the first cross-pod op completes — the
+        rest stays pending until the partition heals."""
+        limit = self._partition_limit(ctx, self.ops)
+        if limit is not None:
+            return self._flush_ops(ctx, heap, self.ops[:limit], proxy=proxy,
+                                   keep_from=limit)
         return self._flush_ops(ctx, heap, self.ops, proxy=proxy,
                                keep_from=len(self.ops))
 
@@ -200,6 +264,9 @@ class CompletionQueue:
         """Complete ops[0..upto] (inclusive), keep the rest pending.
         Flushing a queue prefix in order is always a legal completion
         schedule, so partial completion never violates fence epochs."""
+        limit = self._partition_limit(ctx, self.ops[:upto + 1])
+        if limit is not None:
+            upto = limit - 1                   # clamp below the partition
         return self._flush_ops(ctx, heap, self.ops[:upto + 1], proxy=proxy,
                                keep_from=upto + 1)
 
@@ -223,6 +290,18 @@ class CompletionQueue:
         if not ops:
             return heap
         remainder = self.ops[keep_from:]
+        dead = self._dead_pes(ctx)
+        if dead:
+            live = []
+            for o in ops:
+                if self._touches(o, dead):
+                    self._cancel(ctx, o, "peer died with op in flight")
+                else:
+                    live.append(o)
+            ops = live
+            if not ops:
+                self.ops = remainder
+                return heap
         coalesce = getattr(ctx.tuning, "nbi_coalesce", True)
         transfers = _combine(ops) if coalesce else [[o] for o in ops]
         tracer = getattr(ctx, "tracer", None)

@@ -72,7 +72,7 @@ class HostProxy:
         value = jnp.asarray(value, jnp.dtype(ptr.dtype)).reshape((ptr.size,))
         return self._submit(OP_PUT, ptr, pe, data=value)
 
-    def put_nbi(self, ptr: SymPtr, value, pe):
+    def put_nbi(self, ptr: SymPtr, value, pe, *, src_pe: int = -1):
         """Deferred reverse-offload put: parks on the context's
         CompletionQueue as the same PendingOp record every other nbi op uses
         (tier pinned to dcn); ``quiet(ctx, heap, proxy=self)`` routes it
@@ -83,7 +83,8 @@ class HostProxy:
         self.ctx.record("put_nbi(pending)", ptr.nbytes, "proxy", "dcn", 1,
                         t_sec=0.0)
         self.ctx.pending.submit(
-            pending_mod.PUT, "put_nbi", ptr, pe, "dcn", value=value,
+            pending_mod.PUT, "put_nbi", ptr, pe, "dcn", src_pe=src_pe,
+            value=value,
             marker=self.ctx.ledger[-1] if self.ctx.ledger else None)
 
     def amo_add(self, ptr: SymPtr, value, pe):

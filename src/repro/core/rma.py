@@ -131,7 +131,7 @@ def put_nbi(ctx, heap, dest, value, dst_pe, *, src_pe: int = 0,
     ctx.record("put_nbi(pending)", dest.nbytes, path, tier, work_items,
                t_sec=0.0)
     ctx.pending.submit(pending_mod.PUT, "put_nbi", dest, dst_pe, tier,
-                       work_items=work_items, value=value,
+                       src_pe=src_pe, work_items=work_items, value=value,
                        marker=ctx.ledger[-1] if ctx.ledger else None)
     return heap
 
@@ -147,7 +147,7 @@ def get_nbi(ctx, heap, src, src_pe_remote, *, src_pe: int = 0,
     ctx.record("get_nbi(pending)", src.nbytes, path, tier, work_items,
                t_sec=0.0)
     ctx.pending.submit(pending_mod.GET, "get_nbi", src, src_pe_remote, tier,
-                       work_items=work_items,
+                       src_pe=src_pe, work_items=work_items,
                        marker=ctx.ledger[-1] if ctx.ledger else None)
     return heap.read(src, src_pe_remote)
 

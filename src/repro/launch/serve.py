@@ -26,6 +26,11 @@ streaming, and shared-prefix block reuse.
   # prefix-affinity routing (knob defaults: ISHMEM_FLEET_*)
   PYTHONPATH=src python -m repro.launch.serve --fleet --rate 1.2 \\
       --fleet-steps 24 --admission slo --router affinity
+
+  # chaos: kill pod1 mid-run, partition the dcn fabric for 3 steps —
+  # surviving requests recover (re-migrate/recompute + replay) bitwise
+  PYTHONPATH=src python -m repro.launch.serve --fleet \\
+      --chaos 'kill_pod=pod1@10,partition=3@14'
 """
 from __future__ import annotations
 
@@ -341,8 +346,19 @@ def _run_disagg(args, cfg, params) -> None:
 
 def _run_fleet(args, cfg, params) -> None:
     from repro.serve.engine import Engine
+    from repro.serve.fault import FaultPlan, load_fault_env
     from repro.serve.frontend import (Fleet, FleetConfig, TenantSpec,
                                       TrafficEngine)
+
+    fault_plan = None
+    if args.chaos is not None:
+        fenv = load_fault_env()
+        spec = args.chaos or fenv.plan          # CLI plan wins over env
+        if not spec:
+            raise SystemExit(
+                "--chaos needs a fault plan: pass one inline "
+                "(--chaos 'kill_pod=pod1@10') or set ISHMEM_FAULT_PLAN")
+        fault_plan = FaultPlan.parse(spec, seed=fenv.seed)
 
     fcfg = FleetConfig(
         arch=args.arch, n_pods=args.pods,
@@ -356,7 +372,7 @@ def _run_fleet(args, cfg, params) -> None:
         queue_bound=args.queue_bound, router=args.router, seed=args.seed)
     engine = Engine(cfg, params, max_len=fcfg.max_len)
     obs, trace_path, metrics_path = _make_obs(args)
-    fleet = Fleet(fcfg, engine=engine, obs=obs)
+    fleet = Fleet(fcfg, engine=engine, obs=obs, fault_plan=fault_plan)
     tenants = [
         TenantSpec("chat", weight=2.0, prompt_lens=(args.prompt_len,),
                    max_new=(args.max_new,), slo="interactive"),
@@ -402,6 +418,19 @@ def _run_fleet(args, cfg, params) -> None:
     if "proxy" in rep:
         print(f"[serve]   proxy ring: {rep['proxy']['delivered']} messages, "
               f"{rep['proxy']['backpressure']} backpressure drains")
+    if fault_plan is not None:
+        flt = rep.get("fault", {})
+        rec = rep["recovered"]
+        fired = ", ".join(f"{e['kind']}={e['arg']}@{e['step']}"
+                          for e in flt.get("events", ())) or "none fired"
+        print(f"[serve]   chaos: plan [{fault_plan.spec()}] -> {fired}")
+        print(f"[serve]   chaos: dead PEs {flt.get('dead_pes', [])}, dead "
+              f"pods {flt.get('dead_pods', [])}, "
+              f"{flt.get('cancelled_ops', 0)} in-flight ops cancelled")
+        print(f"[serve]   recovery: {rec['recovered_requests']} requests "
+              f"re-admitted ({rec['remigrated']} re-migrated, "
+              f"{rec['recomputed']} recomputed from prompt, "
+              f"{rec['replayed_tokens']} tokens replayed)")
     _emit_obs(obs, trace_path, metrics_path)
 
 
@@ -493,6 +522,13 @@ def main():
     ap.add_argument("--queue-bound", type=int, default=fenv.queue_bound,
                     help="per-pod queue bound before the SLO policy sheds")
     ap.add_argument("--seed", type=int, default=fenv.seed)
+    ap.add_argument("--chaos", nargs="?", const="", default=None,
+                    metavar="PLAN",
+                    help="fault injection against the fleet: a deterministic "
+                         "kind=arg@step plan (kill_pe/kill_pod/partition/"
+                         "drain/join — DESIGN.md §14), e.g. "
+                         "'kill_pod=pod1@10,partition=3@14'; with no inline "
+                         "plan, ISHMEM_FAULT_PLAN is used")
     # --- observability (repro.obs; defaults from ISHMEM_OBS_*) ------------
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="record causal spans and write a Chrome-trace/"

@@ -72,7 +72,7 @@ def sample_fleet(reg: MetricsRegistry, fleet, *, tracer=None) -> dict:
     """Read the whole stack's health gauges off a live Fleet and sample one
     time-series row (call once per fleet step, after the pods advance)."""
     from repro.serve.frontend import slo as slo_mod
-    from repro.serve.scheduler import FINISHED, SHED
+    from repro.serve.scheduler import FINISHED, RECOVERED, SHED
 
     # --- symmetric heap: allocator pressure + fragmentation ---------------
     hs = fleet.heap.stats()
@@ -105,13 +105,17 @@ def sample_fleet(reg: MetricsRegistry, fleet, *, tracer=None) -> dict:
     good = {}
     shed = {}
     finished = {}
-    for pod in fleet.pods:
+    recovered = 0
+    for pod in fleet.pods + getattr(fleet, "dead_pods", []):
         sched = pod.sched
         reg.gauge(f"{pod.name}.queue_depth", len(sched.queue))
         reg.gauge(f"{pod.name}.waiting", pod.waiting())
         reg.gauge(f"{pod.name}.free_slots", pod.free_slots())
         reg.gauge(f"{pod.name}.occupancy", pod.occupancy())
+        recovered += len(sched.stats.recovery_steps)
         for req in sched.requests.values():
+            if req.state == RECOVERED:
+                continue    # adopted elsewhere under a new rid — not offered
             cls = slo_mod.resolve(req.slo, fleet.classes)
             offered[cls.name] = offered.get(cls.name, 0) + 1
             if req.state == SHED:
@@ -135,6 +139,16 @@ def sample_fleet(reg: MetricsRegistry, fleet, *, tracer=None) -> dict:
         reg.gauge(f"class.{name}.finished", n_fin)
         reg.gauge(f"class.{name}.terminal", n_fin + n_shed)
         reg.gauge(f"class.{name}.bad", n_shed + (n_fin - n_good))
+
+    # --- fault / recovery -------------------------------------------------
+    fault = getattr(fleet.ctx, "fault", None)
+    if fault is not None:
+        reg.gauge("fault.dead_pes", len(fault.dead_pes))
+        reg.gauge("fault.dcn_down", 1.0 if fault.dcn_down else 0.0)
+        reg.gauge("fault.cancelled_ops", fleet.ctx.pending.stats.cancelled)
+    # requests that came back from a fault: re-admitted to decode with
+    # their pre-fault tokens replayed (the ISSUE's recovered_requests)
+    reg.gauge("recovered_requests", recovered)
 
     # --- tracer health (self-observability) -------------------------------
     if tracer is not None and tracer.enabled:

@@ -28,6 +28,8 @@ from typing import Dict, List, Optional
 
 from repro.core import context, teams
 from repro.core.proxy import HostProxy
+from repro.serve import fault as fault_mod
+from repro.serve import recovery as recovery_mod
 from repro.serve.engine import Engine, ServeConfig
 from repro.serve.frontend import metrics as metrics_mod
 from repro.serve.frontend import slo as slo_mod
@@ -35,7 +37,8 @@ from repro.serve.frontend.router import Pod, Router
 from repro.serve.frontend.traffic import RequestSpec
 from repro.serve.kvpool import KVPool
 from repro.serve.kvxfer import KVMigrator
-from repro.serve.scheduler import AdmissionPolicy, DisaggScheduler
+from repro.serve.scheduler import (RECOVERED, AdmissionPolicy,
+                                   DisaggScheduler)
 
 #: rid namespace stride per pod — block tables and request maps are fleet-
 #: global (shared pool), so request ids must never collide across pods
@@ -80,7 +83,7 @@ class Fleet:
     def __init__(self, fcfg: FleetConfig, *, arch_cfg=None, params=None,
                  engine: Optional[Engine] = None,
                  classes: Optional[Dict[str, slo_mod.SLOClass]] = None,
-                 obs=None):
+                 obs=None, fault_plan=None):
         import jax
         from repro.configs import base as cfgbase
         from repro.models import model
@@ -138,6 +141,15 @@ class Fleet:
                              prefix_index=self.prefix_index, seed=fcfg.seed)
         self.placements: Dict[int, tuple] = {}   # spec.idx -> (pod name, rid)
         self.elapsed_steps = 0
+        # fault machinery: a FaultPlan (or its spec string) arms an injector
+        # that fires at the top of step(); dead pods leave self.pods but
+        # stay here so report()/outputs() keep their pre-fault finishes
+        if isinstance(fault_plan, str):
+            fault_plan = fault_mod.FaultPlan.parse(fault_plan)
+        self.injector = (fault_mod.FaultInjector(fault_plan)
+                         if fault_plan is not None and fault_plan.events
+                         else None)
+        self.dead_pods: List[Pod] = []
 
     def _make_policy(self) -> AdmissionPolicy:
         if self.fcfg.admission == "slo":
@@ -176,6 +188,10 @@ class Fleet:
         flushes land in the memory every other pod reads."""
         if self.obs is not None:
             self.obs.begin_step(self.elapsed_steps)
+        if self.injector is not None:
+            # faults fire before this step's arrivals, deterministically:
+            # the same plan against the same traffic reproduces bit-for-bit
+            self.injector.apply(self, self.elapsed_steps)
         for spec in arrivals or ():
             self._submit(spec, self.elapsed_steps)
         for pod in self.pods:
@@ -212,8 +228,123 @@ class Fleet:
             raise
         return self.report()
 
+    # ------------------------------------------------------ fault surface
+    def _pod(self, name: str) -> Pod:
+        pod = next((p for p in self.pods if p.name == name), None)
+        if pod is None:
+            raise ValueError(f"no live pod named {name!r} "
+                             f"(live: {[p.name for p in self.pods]})")
+        return pod
+
+    def _fault_dump(self, reason: str) -> None:
+        """Postmortem at the fault site: when a FlightRecorder is armed the
+        dump names the fault in ``otherData.postmortem.reason``."""
+        rec = getattr(self.obs, "recorder", None) if self.obs else None
+        if rec is not None:
+            rec.dump(reason=reason, step=self.elapsed_steps)
+
+    def kill_pe(self, pe: int) -> None:
+        """Fail-stop one PE.  Pending ops touching it cancel with error,
+        its requests recover (re-migrate or recompute — ``serve.recovery``)
+        and its heap row is poisoned.  Killing a pod's only prefill or only
+        decode PE escalates to whole-pod adoption: the pod cannot serve.
+        Killing an already-dead PE (or a PE of a dead pod) is a no-op — a
+        crashed machine cannot crash twice, and random chaos plans are
+        allowed to draw the same victim repeatedly."""
+        pe = int(pe)
+        if not self.ctx.fault.alive(pe):
+            return
+        pod = next((p for p in self.pods if pe in p.team.pes()), None)
+        if pod is None:
+            if any(pe in p.team.pes() for p in self.dead_pods):
+                return
+            raise ValueError(f"pe {pe} is not a PE of any pod")
+        s = pod.sched
+        is_prefill = pe in s.prefill_pes
+        lone = ((is_prefill and len(s.prefill_pes) == 1)
+                or (not is_prefill and len(s.decode_pes) == 1))
+        if lone:
+            self.kill_pod(pod.name)
+            return
+        self.ctx.fault.kill(pe)
+        self.ctx.pending.cancel_pe(self.ctx, pe)
+        if is_prefill:
+            recovery_mod.recover_prefill_pe(self, pod, pe,
+                                            step=self.elapsed_steps)
+        else:
+            recovery_mod.recover_decode_pe(self, pod, pe,
+                                           step=self.elapsed_steps)
+        self.heap = fault_mod.scramble_rows(self.heap, [pe])
+        self._fault_dump(f"fault:kill_pe:{pe}")
+
+    def kill_pod(self, name: str) -> None:
+        """Fail-stop a whole pod; its live requests are adopted by the
+        surviving pods (full replay of decoded-so-far tokens).  Killing a
+        pod that already died is a no-op (see :meth:`kill_pe`)."""
+        if any(p.name == name for p in self.dead_pods):
+            return
+        pod = self._pod(name)
+        dead_pes = [int(p) for p in pod.team.pes()]
+        for pe in dead_pes:
+            if self.ctx.fault.alive(pe):
+                self.ctx.fault.kill(pe)
+                self.ctx.pending.cancel_pe(self.ctx, pe)
+        recovery_mod.adopt_pod(self, pod, step=self.elapsed_steps)
+        self.heap = fault_mod.scramble_rows(self.heap, dead_pes)
+        self._fault_dump(f"fault:kill_pod:{name}")
+
+    def partition(self) -> None:
+        """Partition the inter-pod (dcn) fabric: cross-pod ops stay queued
+        — neither lost nor delivered — until :meth:`heal`."""
+        self.ctx.fault.dcn_down = True
+        self._fault_dump("fault:partition")
+
+    def heal(self) -> None:
+        """Heal a dcn partition; queued cross-pod traffic drains at the
+        next completion point."""
+        self.ctx.fault.dcn_down = False
+
+    def drain(self, name: str) -> None:
+        """Administratively drain a pod: the router stops placing arrivals
+        there (affinity re-keys to surviving pods), queued-but-unstarted
+        requests re-route, and in-flight work finishes in place — the pod
+        keeps stepping until :meth:`join` or the run ends.  Draining a
+        dead pod is a no-op: it already left the router at adoption."""
+        if any(p.name == name for p in self.dead_pods):
+            return
+        pod = self._pod(name)
+        if pod not in self.router.pods:
+            return
+        self.router.remove_pod(pod)
+        sched = pod.sched
+        back = {(pn, rid): idx for idx, (pn, rid) in self.placements.items()}
+        for req in [r for r in list(sched.queue) if r.prefill_cache is None]:
+            sched.queue.remove(req)
+            req.state = RECOVERED
+            req.finish_step = sched._step
+            sched._trace_phase(req, None, end_args={"outcome": "rerouted"})
+            target = self.router._least_loaded()
+            new_rid = target.sched.submit(
+                req.batch, max_new=req.max_new, prefix_len=req.prefix_len,
+                arrival_step=req.arrival_step, t_arrival=req.t_arrival,
+                slo=req.slo)
+            idx = back.get((pod.name, req.rid))
+            if idx is not None:
+                self.placements[idx] = (target.name, new_rid)
+        self._fault_dump(f"fault:drain:{name}")
+
+    def join(self, name: str) -> None:
+        """Re-admit a drained pod to the router rotation.  Dead pods
+        cannot rejoin — joining one is a no-op."""
+        if any(p.name == name for p in self.dead_pods):
+            return
+        pod = self._pod(name)
+        if pod not in self.router.pods:
+            self.router.add_pod(pod)
+
     def report(self) -> dict:
-        doc = metrics_mod.collect(self.pods, classes=self.classes,
+        doc = metrics_mod.collect(self.pods + self.dead_pods,
+                                  classes=self.classes,
                                   elapsed_steps=self.elapsed_steps)
         doc["router"] = dict(self.router.stats)
         if self.proxy is not None:
@@ -224,12 +355,22 @@ class Fleet:
             }
         if self.obs is not None:
             doc["obs"] = self.obs.summary()
+        if (self.injector is not None or self.dead_pods
+                or self.ctx.fault.dead_pes or self.ctx.pending.errors):
+            doc["fault"] = {
+                "dead_pes": sorted(self.ctx.fault.dead_pes),
+                "dead_pods": [p.name for p in self.dead_pods],
+                "dcn_down": self.ctx.fault.dcn_down,
+                "events": (list(self.injector.fired)
+                           if self.injector is not None else []),
+                "cancelled_ops": self.ctx.pending.stats.cancelled,
+            }
         return doc
 
     def outputs(self) -> Dict[int, object]:
         """spec.idx -> generated token list (shed requests: empty)."""
         out = {}
-        by_pod = {pod.name: pod for pod in self.pods}
+        by_pod = {pod.name: pod for pod in self.pods + self.dead_pods}
         for idx, (pod_name, rid) in self.placements.items():
             out[idx] = list(by_pod[pod_name].sched.requests[rid].out)
         return out

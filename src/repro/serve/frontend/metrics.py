@@ -25,7 +25,7 @@ from __future__ import annotations
 from typing import Dict, List, Optional
 
 from repro.serve.frontend import slo as slo_mod
-from repro.serve.scheduler import FINISHED, SHED
+from repro.serve.scheduler import FINISHED, RECOVERED, SHED
 
 
 def percentile(xs: List[float], q: float) -> float:
@@ -83,9 +83,22 @@ def collect(pods, *, classes: Optional[Dict] = None,
             "stalls": {"pool": st.stalled_on_pool,
                        "slots": st.stalled_on_slots,
                        "streams": st.stalled_on_streams},
+            "recovery": {"remigrated": st.remigrated,
+                         "recomputed": st.recomputed,
+                         "replayed_tokens": st.replayed_tokens,
+                         "recovery_p50_steps": percentile(
+                             st.recovery_steps, 50),
+                         "recovery_p99_steps": percentile(
+                             st.recovery_steps, 99),
+                         "recovered_requests": len(st.recovery_steps)},
             "load": pod.load(),
         }
         for req in pod.sched.requests.values():
+            if req.state == RECOVERED:
+                # the record lives on under a new rid on another pod (or
+                # re-routed at drain) — counting it here would double-count
+                # the request against offered load
+                continue
             offered += 1
             cls = slo_mod.resolve(req.slo, classes)
             bucket = per_class.setdefault(
@@ -148,6 +161,16 @@ def collect(pods, *, classes: Optional[Dict] = None,
         },
         "preempts": sum(p["preempts"] for p in per_pod.values()),
         "resumes": sum(p["resumes"] for p in per_pod.values()),
+        "recovered": {
+            "remigrated": sum(p["recovery"]["remigrated"]
+                              for p in per_pod.values()),
+            "recomputed": sum(p["recovery"]["recomputed"]
+                              for p in per_pod.values()),
+            "replayed_tokens": sum(p["recovery"]["replayed_tokens"]
+                                   for p in per_pod.values()),
+            "recovered_requests": sum(p["recovery"]["recovered_requests"]
+                                      for p in per_pod.values()),
+        },
     }
     if elapsed_steps:
         report["elapsed_steps"] = elapsed_steps

@@ -97,6 +97,27 @@ class Router:
                 self._pe_pod[pe] = pod
         self.stats = {"routed": 0, "affinity_hits": 0}
 
+    # ------------------------------------------------------- drain / join
+    def remove_pod(self, pod: Pod) -> None:
+        """Stop routing to a pod (drain, or a dead pod leaving the fleet).
+        Its PE -> pod affinity keys are dropped too, so a prefix homed
+        there falls back to least-loaded instead of a drained target."""
+        if pod not in self.pods:
+            raise ValueError(f"pod {pod.name} is not routable")
+        if len(self.pods) == 1:
+            raise ValueError("cannot remove the last routable pod")
+        self.pods.remove(pod)
+        for pe in pod.team.pes():
+            self._pe_pod.pop(pe, None)
+
+    def add_pod(self, pod: Pod) -> None:
+        """Re-admit a drained pod (rebuilds its affinity keys)."""
+        if pod in self.pods:
+            raise ValueError(f"pod {pod.name} is already routable")
+        self.pods.append(pod)
+        for pe in pod.team.pes():
+            self._pe_pod[pe] = pod
+
     # ------------------------------------------------------------- scoring
     def _least_loaded(self) -> Pod:
         self._rr += 1

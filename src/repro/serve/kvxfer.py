@@ -252,7 +252,10 @@ class KVMigrator:
         the slot's signal word (parked streams ramp a pool stream signal)."""
         if sig is None:
             sig = self.pool.sig_ptr(slot)
-        tail_vec = self._staged_tails.pop(req_id)
+        # LOOKED UP, not popped: the packed tail stays retained until the
+        # request evicts (release_tail), so a decode-PE death after this
+        # send can re-migrate the tail — the copy on the dead row is lost
+        tail_vec = self._staged_tails[req_id]
         heap = signal_mod.put_signal_nbi(
             self.ctx, heap, self.pool.tail_ptr(slot), tail_vec, sig,
             1, signal_mod.SIGNAL_ADD, dst_pe, src_pe=src_pe,
@@ -560,6 +563,14 @@ class KVMigrator:
         payloads = [heap.read(self.pool.block_ptr(i), pe) for i in ids]
         tail = heap.read(self.pool.tail_ptr(slot), pe)
         return payloads, tail
+
+    def release_tail(self, req_id: int) -> None:
+        """Drop the retained staged-tail snapshot (request finished or its
+        recovery recomputes from the prompt)."""
+        self._staged_tails.pop(req_id, None)
+
+    def has_tail(self, req_id: int) -> bool:
+        return req_id in self._staged_tails
 
     def reset_slot(self, heap, slot: int, pe: int):
         """Re-arm a slot for its next request: zero the signal word (a local

@@ -76,11 +76,14 @@ from repro.serve.kvxfer import (EXTRA_SIGNALS, KVMigrator, StreamState,
 from repro.serve.paged_attn import PagedDecodeView
 
 (QUEUED, STAGED, STREAMING, PARKED, MIGRATING, DECODING, PREEMPTED,
- FINISHED, SHED) = ("queued", "staged", "streaming", "parked", "migrating",
-                    "decoding", "preempted", "finished", "shed")
+ FINISHED, SHED, RECOVERING, RECOVERED) = (
+    "queued", "staged", "streaming", "parked", "migrating",
+    "decoding", "preempted", "finished", "shed", "recovering", "recovered")
 
-#: terminal request states (``done()`` waits for every request to reach one)
-TERMINAL = (FINISHED, SHED)
+#: terminal request states (``done()`` waits for every request to reach one).
+#: RECOVERED marks a record whose request was adopted by another pod after a
+#: whole-pod failure — terminal here, live (as a new rid) over there.
+TERMINAL = (FINISHED, SHED, RECOVERED)
 
 
 @dataclasses.dataclass
@@ -119,6 +122,14 @@ class Request:
     resume_tok: int = -1
     park_tail: Optional[object] = None
     preemptions: int = 0
+    # recovery bookkeeping: tokens decoded before the fault are REPLAYED
+    # (asserted equal, not appended) until ``replayed`` catches up to
+    # ``replay_target`` — any surviving request's stream stays bitwise-
+    # identical to the no-fault run (DESIGN.md §14)
+    replay_target: int = 0
+    replayed: int = 0
+    recoveries: int = 0
+    recover_step: int = -1          # fleet step of the fault (TTFD recovery)
     # fused-protocol bookkeeping (scheduler fused_attn=True): how many wire
     # blocks the migration sent, how many the decode side still has to
     # consume per-signal, and the first step the first block was observed
@@ -207,6 +218,10 @@ class SchedStats:
     sheds: int = 0                  # requests rejected by the policy
     preempts: int = 0               # decoding requests parked back to pool
     resumes: int = 0                # preempted requests re-bound to a slot
+    remigrated: int = 0             # recoveries served by re-sending staged KV
+    recomputed: int = 0             # recoveries that re-ran prefill
+    replayed_tokens: int = 0        # pre-fault tokens re-derived bitwise
+    recovery_steps: List[int] = dataclasses.field(default_factory=list)
     ttfd_steps: List[int] = dataclasses.field(default_factory=list)
     ttfd_model_s: List[float] = dataclasses.field(default_factory=list)
     # time-to-first-resident-block, measured from arrival: the step the
@@ -286,6 +301,7 @@ class DisaggScheduler:
         self.parked: List[Request] = []         # streams drained, no slot yet
         self.preempted: List[Request] = []      # evicted mid-decode, resumable
         self.migrating: List[Request] = []
+        self.recovering: List[Request] = []     # fault victims awaiting redo
         # fleet mode shares ONE prefix index across every pod's scheduler, so
         # a request routed anywhere can map blocks staged by any pod (the
         # router's affinity policy tries to keep it on the home pod)
@@ -822,6 +838,47 @@ class DisaggScheduler:
         self._trace_phase(req, "decoding", pe=pe, slot=slot, resumed=True)
         self.stats.resumes += 1
 
+    # ------------------------------------------------------------ recovery
+    def _emit_token(self, req: Request, tok: int) -> None:
+        """Append a decoded token — unless the request is replaying after a
+        fault, in which case the token must MATCH the pre-fault stream
+        (greedy decode over identical KV re-derives it bitwise) and is not
+        appended again.  ``len(req.out)`` holds at ``replay_target`` through
+        the replay, so ``_maybe_finish`` cannot fire early."""
+        if req.replayed < req.replay_target:
+            assert req.out[req.replayed] == tok, (
+                f"rid {req.rid}: replay diverged at token {req.replayed} "
+                f"({req.out[req.replayed]} != {tok}) — recovery is not "
+                f"bitwise-identical")
+            req.replayed += 1
+            self.stats.replayed_tokens += 1
+            return
+        req.out.append(tok)
+
+    def _phase_recover(self) -> None:
+        """Dispatch fault victims parked by ``serve.recovery``: a victim
+        whose pool blocks survived (prefill-side KV intact on live home
+        rows) re-enters STAGED and re-migrates to a live decode PE; one
+        whose KV died with its PE re-enters the queue head for a full
+        recompute from the prompt.  Either way decoded-so-far tokens replay
+        via ``_emit_token``."""
+        if not self.recovering:
+            return
+        for req in self.recovering:
+            if self.pool.block_tables.get(req.rid):
+                req.state = STAGED
+                self.staged.append(req)
+                self.stats.remigrated += 1
+                self._trace_phase(req, "staged", recovered=True,
+                                  replay=req.replay_target)
+            else:
+                req.state = QUEUED
+                self.queue.appendleft(req)
+                self.stats.recomputed += 1
+                self._trace_phase(req, "queued", recovered=True,
+                                  replay=req.replay_target)
+        self.recovering = []
+
     # ----------------------------------------------------------- admission
     def _poll_first_block(self, req: Request) -> None:
         """Record the first step the request's FIRST wire block is provably
@@ -913,7 +970,12 @@ class DisaggScheduler:
                 entry.resident.setdefault(req.decode_pe, set()).update(
                     set(entry.block_ids) & set(self.pool.blocks_of(req.rid)))
             req.state = DECODING
-            req.out.append(hdr["first_token"])
+            self._emit_token(req, hdr["first_token"])
+            if req.recoveries > 0 and req.recover_step >= 0:
+                # recovery TTFD: fault step -> first (re-)decoded token
+                self.stats.recovery_steps.append(
+                    self._step - req.recover_step)
+                req.recover_step = -1
             req.admit_step = self._step
             req.t_admit = self._comm_clock()
             # the admission wait itself proves the first block resident
@@ -999,7 +1061,7 @@ class DisaggScheduler:
                 req = self.requests[rid]
                 if req.state != DECODING:
                     continue
-                req.out.append(int(toks[s]))
+                self._emit_token(req, int(toks[s]))
                 self.stats.decode_tokens += 1
                 self._maybe_finish(req)
         if stepped:
@@ -1046,6 +1108,7 @@ class DisaggScheduler:
             req.prefix_key = None
         self.heap = self.migrator.reset_slot(self.heap, req.slot,
                                              req.decode_pe)
+        self.migrator.release_tail(req.rid)
         bank = self.banks[req.decode_pe]
         self.banks[req.decode_pe] = self.engine.evict_slot(bank, req.slot)
         self.slot_req[req.decode_pe][req.slot] = None
@@ -1059,6 +1122,7 @@ class DisaggScheduler:
             # monotonic-max: in fleet mode the driver already advanced the
             # shared clock to this step, so this is a no-op there
             tr.clock.set_step(self._step)
+        self._phase_recover()
         self._phase_prefill()
         self._phase_admit()
         self._phase_resume()
@@ -1068,7 +1132,7 @@ class DisaggScheduler:
     def done(self) -> bool:
         return (not self.queue and not self.staged and not self.streaming
                 and not self.parked and not self.preempted
-                and not self.migrating
+                and not self.migrating and not self.recovering
                 and all(r.state in TERMINAL for r in self.requests.values()))
 
     def run(self, *, max_steps: int = 10_000) -> Dict[int, np.ndarray]:

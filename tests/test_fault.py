@@ -1,0 +1,318 @@
+"""Chaos harness: deterministic fault injection against the serving fleet.
+
+The acceptance property (DESIGN.md §14): under ANY seeded :class:`FaultPlan`
+— decode PEs killed mid-stream, prefill PEs killed with staged blocks in
+flight, whole-pod loss, dcn partitions, drain/join churn — every request
+that survives decodes tokens bitwise-identical to the no-fault control run,
+the shared KV pool unwinds to zero residency, and the PR-8 invariant
+auditors stay clean through recovery.  Requests whose only copy died with
+the casualty are re-routed (recompute) or shed; "wrong tokens" are never an
+outcome.
+
+Dead heap rows are poisoned at the fault site (``fault.scramble_rows``), so
+any silent read of a dead PE's memory lands NaN in the decode path and the
+bitwise check here catches it — the harness does not need to instrument
+reads.
+"""
+import functools
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import context
+from repro.obs import Obs
+from repro.obs import export as obs_export
+from repro.obs.audit import FleetAuditor
+from repro.serve.engine import Engine
+from repro.serve.fault import (FaultEvent, FaultPlan, load_fault_env,
+                               scramble_rows)
+from repro.serve.frontend import Fleet, FleetConfig, TenantSpec, TrafficEngine
+from repro.configs import base as cfgbase
+
+MAXLEN = 24
+NEW = 4
+
+
+@functools.lru_cache(maxsize=1)
+def _engine():
+    from repro.models import model
+    cfg = cfgbase.reduced(cfgbase.get_config("qwen3_4b"))
+    params = model.init_params(jax.random.key(0), cfg)
+    return cfg, Engine(cfg, params, max_len=MAXLEN)
+
+
+def _fleet(fault_plan=None, obs=None, **over):
+    cfg, engine = _engine()
+    kw = dict(n_pods=2, prefill_per_pod=1, decode_per_pod=2, num_slots=2,
+              kv_blocks=96, block_tokens=4, max_len=MAXLEN, max_new=NEW,
+              stream_chunks=1, admission="fcfs", router="affinity", seed=11,
+              queue_bound=64)
+    kw.update(over)
+    return Fleet(FleetConfig(**kw), engine=engine, obs=obs,
+                 fault_plan=fault_plan)
+
+
+MIX = (TenantSpec("chat", weight=2.0, prompt_lens=(8,), max_new=(NEW,),
+                  slo="interactive"),
+       TenantSpec("scan", weight=1.0, prompt_lens=(12,), max_new=(NEW,),
+                  slo="batch", shared_prefix_prob=0.5, prefix_groups=1))
+
+
+def _specs(seed, steps=6, rate=1.0):
+    cfg, _ = _engine()
+    return TrafficEngine(list(MIX), rate=rate, vocab=cfg.vocab_size,
+                         seed=seed).schedule(steps)
+
+
+def _assert_chaos_invariants(fleet, specs, control_outputs):
+    """The three ISSUE properties, checked on a drained post-fault fleet."""
+    outs = fleet.outputs()
+    wrong = []
+    for spec in specs:
+        got = list(np.asarray(outs[spec.idx]).ravel())
+        want = list(np.asarray(control_outputs[spec.idx]).ravel())
+        if got and got != want:
+            wrong.append(spec.idx)
+    assert not wrong, f"wrong tokens on surviving requests {wrong}"
+    # no leaked blocks: the shared pool's refcounts all unwound at drain
+    ps = fleet.pool.stats()
+    assert ps["blocks_in_use"] == 0, ps
+    assert ps["streams_active"] == 0, ps
+    assert ps["requests_resident"] == 0, ps
+    # the auditors stay clean on the recovered end state (surviving pods
+    # only — a dead PE's rows are poison by design)
+    violations = FleetAuditor().audit(fleet)
+    assert not violations, [str(v) for v in violations]
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan grammar / seeding (no model)
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_grammar_roundtrip_and_validation():
+    plan = FaultPlan.parse(" kill_pod=pod1@6, kill_pe=4@2 ,partition=3@8")
+    assert [e.spec() for e in plan.events] == \
+        ["kill_pe=4@2", "kill_pod=pod1@6", "partition=3@8"]   # step-sorted
+    assert FaultPlan.parse(plan.spec()) == plan               # round-trip
+    assert FaultPlan.parse("").events == ()
+    for bad in ("kill_pe=4", "explode=1@2", "kill_pe=x@2", "kill_pe=4@-1",
+                "partition=-3@2", "kill_pe@2"):
+        with pytest.raises(ValueError):
+            FaultPlan.parse(bad)
+
+
+def test_fault_plan_random_is_pure_function_of_seed():
+    kw = dict(max_step=10, pes=(1, 2, 4, 5), pods=("pod0", "pod1"),
+              n_events=3)
+    a = FaultPlan.random(7, **kw)
+    assert a == FaultPlan.random(7, **kw)
+    assert a != FaultPlan.random(8, **kw)
+    assert all(e.kind in ("kill_pe", "kill_pod", "partition")
+               for e in a.events)
+    with pytest.raises(ValueError):
+        FaultPlan.random(0, max_step=10)      # no victims to target
+
+
+def test_fault_env_knobs():
+    cfg = load_fault_env({"ISHMEM_FAULT_PLAN": "kill_pe=2@3",
+                          "ISHMEM_FAULT_SEED": "5"})
+    assert (cfg.plan, cfg.seed) == ("kill_pe=2@3", 5)
+    assert load_fault_env({}) == load_fault_env({"ISHMEM_FAULT_PLAN": ""})
+    with pytest.raises(ValueError):
+        load_fault_env({"ISHMEM_FAULT_PLAN": "explode=1@2"})
+    with pytest.raises(ValueError):
+        load_fault_env({"ISHMEM_FAULT_SEED": "many"})
+    with pytest.raises(ValueError):
+        load_fault_env({"ISHMEM_FAULT_SEED": "-1"})
+
+
+def test_scramble_rows_poisons_only_dead_rows():
+    ctx, heap = context.init(npes=4, node_size=4)
+    p = heap.malloc((8,), "float32")
+    q = heap.malloc((4,), "int32")
+    for pe in range(4):
+        heap = heap.write(p, pe, np.full(8, 1.0, np.float32))
+        heap = heap.write(q, pe, np.full(4, 7, np.int32))
+    heap = scramble_rows(heap, [2])
+    assert np.isnan(np.asarray(heap.read(p, 2))).all()
+    assert (np.asarray(heap.read(q, 2)) != 7).all()
+    for pe in (0, 1, 3):                      # live rows untouched
+        np.testing.assert_array_equal(np.asarray(heap.read(p, pe)),
+                                      np.full(8, 1.0, np.float32))
+        np.testing.assert_array_equal(np.asarray(heap.read(q, pe)),
+                                      np.full(4, 7, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# chaos property sweep: kill-step x victim-PE x workload grid
+# ---------------------------------------------------------------------------
+# Pod layout at the default shape: pod0 = PE 0 (prefill) + PEs 1,2 (decode),
+# pod1 = PE 3 (prefill) + PEs 4,5 (decode).
+
+
+@pytest.mark.parametrize("workload_seed", (11, 23))
+@pytest.mark.parametrize("victim_pe", (2, 4))
+@pytest.mark.parametrize("kill_step", (2, 4))
+def test_chaos_kill_grid_zero_wrong_tokens_no_leaks(workload_seed,
+                                                    victim_pe, kill_step):
+    """Kill one decode PE at every (step, victim, workload) grid point:
+    surviving outputs bitwise vs control, pool drained, auditors clean
+    within one audit period of recovery (audit_period=1 runs them every
+    step, so any transiently-broken invariant would abort the run)."""
+    specs = _specs(workload_seed)
+    control = _fleet()
+    control.run(specs)
+    co = control.outputs()
+    fleet = _fleet(fault_plan=f"kill_pe={victim_pe}@{kill_step}",
+                   obs=Obs(audit_period=1))
+    rep = fleet.run(specs)
+    _assert_chaos_invariants(fleet, specs, co)
+    assert victim_pe in fleet.ctx.fault.dead_pes
+    assert rep["fault"]["dead_pes"] == [victim_pe]
+
+
+@pytest.mark.parametrize("chaos_seed", (0, 1, 2, 3))
+def test_chaos_random_plan_sweep(chaos_seed):
+    """Seeded random plans (the FaultPlan.random generator) mixing PE
+    kills, whole-pod loss, and partitions — same invariants."""
+    specs = _specs(11)
+    control = _fleet()
+    control.run(specs)
+    co = control.outputs()
+    plan = FaultPlan.random(chaos_seed, max_step=6, pes=(1, 2, 4, 5),
+                            pods=("pod0", "pod1"), n_events=2)
+    fleet = _fleet(fault_plan=plan, obs=Obs(audit_period=1))
+    try:
+        fleet.run(specs)
+    except ValueError as e:
+        # a random plan may kill BOTH pods — whole-fleet failure is the
+        # one fault the fleet refuses to recover from, by contract
+        assert "whole-fleet" in str(e)
+        return
+    _assert_chaos_invariants(fleet, specs, co)
+
+
+def test_chaos_drain_join_loses_nothing():
+    """Administrative drain/join is not a failure: every request completes
+    bitwise-identical (in-flight work finishes in place, queued work
+    re-routes, the drained pod rejoins)."""
+    specs = _specs(11)
+    control = _fleet()
+    rep0 = control.run(specs)
+    co = control.outputs()
+    fleet = _fleet(fault_plan="drain=pod0@1,join=pod0@5",
+                   obs=Obs(audit_period=1))
+    rep = fleet.run(specs)
+    _assert_chaos_invariants(fleet, specs, co)
+    assert rep["completed"] == rep0["completed"] == len(specs)
+    for spec in specs:                        # ALL survive a drain
+        assert list(np.asarray(fleet.outputs()[spec.idx]).ravel()) == \
+            list(np.asarray(co[spec.idx]).ravel())
+    assert len(fleet.router.pods) == 2        # pod0 rejoined the rotation
+
+
+def test_chaos_lone_prefill_kill_escalates_to_adoption():
+    """Killing a pod's ONLY prefill PE escalates to whole-pod adoption —
+    the pod cannot stage new work, so its requests move to survivors."""
+    specs = _specs(11)
+    control = _fleet()
+    control.run(specs)
+    fleet = _fleet(fault_plan="kill_pe=0@2", obs=Obs(audit_period=1))
+    fleet.run(specs)
+    _assert_chaos_invariants(fleet, specs, control.outputs())
+    assert [p.name for p in fleet.dead_pods] == ["pod0"]
+    assert [p.name for p in fleet.pods] == ["pod1"]
+
+
+# ---------------------------------------------------------------------------
+# seeded regression scenarios (each with a validated postmortem dump)
+# ---------------------------------------------------------------------------
+
+
+def _chaos_obs(tmp_path):
+    return Obs(audit_period=1, recorder_window=32,
+               recorder_path=str(tmp_path / "postmortem.json"))
+
+
+def _postmortem(fleet, reason):
+    rec = fleet.obs.recorder
+    assert rec.dumps, "fault fired but no postmortem dump was written"
+    doc = json.load(open(rec.dumps[0]))
+    assert obs_export.validate(doc) == []
+    assert doc["otherData"]["postmortem"]["reason"] == reason
+    return doc
+
+
+def test_regression_kill_decode_pe_mid_stream(tmp_path):
+    """Scenario 1: a decode PE dies while streams are in flight to it.
+    Its requests re-migrate from live home PEs (or recompute) and replay
+    their decoded-so-far tokens; the recorder names the fault."""
+    specs = _specs(11)
+    control = _fleet()
+    control.run(specs)
+    fleet = _fleet(fault_plan="kill_pe=4@5", obs=_chaos_obs(tmp_path))
+    rep = fleet.run(specs)
+    _assert_chaos_invariants(fleet, specs, control.outputs())
+    _postmortem(fleet, "fault:kill_pe:4")
+    recov = rep["recovered"]
+    assert recov["remigrated"] >= 1           # KV re-migrated from home PEs
+    assert recov["replayed_tokens"] >= 1      # decoded-so-far replay fired
+    assert recov["recovered_requests"] >= 1
+
+
+def test_regression_kill_prefill_pe_with_staged_blocks(tmp_path):
+    """Scenario 2: a prefill PE dies holding staged blocks (2 prefill PEs
+    per pod so the kill does NOT escalate).  Prefix entries homed on it
+    drop from the index, victims recompute from prompt, and the ledger
+    reconciliation keeps the auditors clean."""
+    specs = _specs(11)
+    shape = dict(prefill_per_pod=2, decode_per_pod=2)
+    control = _fleet(**shape)
+    control.run(specs)
+    fleet = _fleet(fault_plan="kill_pe=0@4", obs=_chaos_obs(tmp_path),
+                   **shape)                   # pod0 = prefill 0,1 + decode 2,3
+    rep = fleet.run(specs)
+    _assert_chaos_invariants(fleet, specs, control.outputs())
+    _postmortem(fleet, "fault:kill_pe:0")
+    assert rep["recovered"]["recomputed"] >= 1
+    assert fleet.pods[0].name == "pod0"       # no escalation: pod0 survives
+    assert 0 not in fleet.pods[0].sched.prefill_pes
+
+
+def test_regression_partition_parks_cross_pod_traffic(tmp_path):
+    """Scenario 3: the dcn fabric partitions for K steps.  Cross-pod ops
+    stay queued (neither lost nor delivered), heal drains them, and NOTHING
+    is a casualty — every request finishes bitwise-identical."""
+    specs = _specs(11)
+    # random routing forces cross-pod prefix pulls over the proxy ring
+    control = _fleet(router="random")
+    rep0 = control.run(specs)
+    co = control.outputs()
+    fleet = _fleet(router="random", fault_plan="partition=3@2",
+                   obs=_chaos_obs(tmp_path))
+    rep = fleet.run(specs)
+    _assert_chaos_invariants(fleet, specs, co)
+    _postmortem(fleet, "fault:partition")
+    assert not fleet.ctx.fault.dcn_down       # healed
+    assert rep["completed"] == rep0["completed"] == len(specs)
+    for spec in specs:                        # zero casualties
+        assert list(np.asarray(fleet.outputs()[spec.idx]).ravel()) == \
+            list(np.asarray(co[spec.idx]).ravel())
+
+
+def test_regression_whole_pod_adoption(tmp_path):
+    """Whole-pod loss: survivors adopt the dead pod's requests under new
+    rids with full token replay; report() carries the fault record."""
+    specs = _specs(11)
+    control = _fleet()
+    control.run(specs)
+    fleet = _fleet(fault_plan="kill_pod=pod1@3", obs=_chaos_obs(tmp_path))
+    rep = fleet.run(specs)
+    _assert_chaos_invariants(fleet, specs, control.outputs())
+    _postmortem(fleet, "fault:kill_pod:pod1")
+    assert rep["fault"]["dead_pods"] == ["pod1"]
+    assert sorted(rep["fault"]["dead_pes"]) == [3, 4, 5]
+    assert [e["kind"] for e in rep["fault"]["events"]] == ["kill_pod"]

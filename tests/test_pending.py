@@ -307,6 +307,79 @@ def test_amo_add_nbi_defers_and_merges():
     assert ctx.pending.stats.transfers - t0 == 1     # adds merged
 
 
+# ---------------------------------------------------------------------------
+# fault handling: dead peers and dcn partitions vs the queue
+# ---------------------------------------------------------------------------
+
+
+def test_dead_pe_ops_cancel_instead_of_wedging_quiet():
+    """The PR-9 wedge fix: pending ops whose destination died complete
+    quiet() by cancel-with-error — a structured record on ctx.pending.errors
+    — instead of wedging on undeliverable traffic or landing garbage."""
+    ctx, heap = _ctx()
+    p = heap.malloc((32,), "float32")
+    heap = rma.put_nbi(ctx, heap, p, jnp.ones(32), 1)        # doomed
+    heap = rma.put_nbi(ctx, heap, p, jnp.full(32, 2.0), 2)   # survives
+    ctx.fault.kill(1)
+    assert ctx.pending.cancel_pe(ctx, 1) == 1
+    heap = rma.quiet(ctx, heap)                  # completes — no wedge
+    assert len(ctx.pending) == 0
+    assert ctx.pending.stats.cancelled == 1
+    err = ctx.pending.errors[0]
+    assert err["pe"] == 1 and "died" in err["reason"]
+    np.testing.assert_array_equal(np.asarray(heap.read(p, 2)),
+                                  np.full(32, 2.0))          # live op landed
+    assert float(heap.read(p, 1).sum()) == 0.0   # nothing landed on the dead
+
+
+def test_ops_queued_after_death_cancel_at_flush():
+    """Traffic enqueued AFTER the kill (racing issuer that has not yet seen
+    the death) is cancelled at the next flush, not delivered to a corpse."""
+    ctx, heap = _ctx()
+    p = heap.malloc((16,), "float32")
+    ctx.fault.kill(3)
+    heap = rma.put_nbi(ctx, heap, p, jnp.ones(16), 3)
+    heap = rma.quiet(ctx, heap)
+    assert len(ctx.pending) == 0
+    assert ctx.pending.stats.cancelled == 1
+    assert ctx.pending.errors[0]["reason"] == "peer died with op in flight"
+
+
+def test_dead_source_pe_cancels_op():
+    """Ops whose SOURCE died cancel too — a get/migration from a dead
+    peer's garbage row must never complete as if it read real data."""
+    ctx, heap = _ctx()
+    p = heap.malloc((16,), "float32")
+    heap = rma.put_nbi(ctx, heap, p, jnp.ones(16), 2, src_pe=1)
+    ctx.fault.kill(1)
+    assert ctx.pending.cancel_pe(ctx, 1) == 1
+    heap = rma.quiet(ctx, heap)
+    assert float(heap.read(p, 2).sum()) == 0.0
+    assert ctx.pending.errors[0]["src_pe"] == 1
+
+
+def test_partition_parks_dcn_ops_until_heal():
+    """While the inter-pod fabric is partitioned, cross-pod (dcn) ops are
+    neither delivered nor lost: quiet() completes the intra-pod prefix and
+    keeps the dcn suffix queued; healing drains it in order."""
+    ctx, heap = _ctx()                           # node_size=2: pe 3 is dcn
+    near = heap.malloc((16,), "float32")
+    far = heap.malloc((16,), "float32")
+    ctx.fault.dcn_down = True
+    heap = rma.put_nbi(ctx, heap, near, jnp.ones(16), 1)     # ici: flows
+    heap = rma.put_nbi(ctx, heap, far, jnp.full(16, 9.0), 3)  # dcn: parks
+    heap = rma.quiet(ctx, heap)                  # returns — no wedge
+    assert float(heap.read(near, 1).sum()) == 16.0
+    assert float(heap.read(far, 3).sum()) == 0.0
+    assert len(ctx.pending) == 1                 # parked, not dropped
+    ctx.fault.dcn_down = False
+    heap = rma.quiet(ctx, heap)
+    np.testing.assert_array_equal(np.asarray(heap.read(far, 3)),
+                                  np.full(16, 9.0))
+    assert len(ctx.pending) == 0
+    assert ctx.pending.stats.cancelled == 0      # partition loses nothing
+
+
 def test_get_nbi_costs_accrue_at_quiet():
     ctx, heap = _ctx()
     p = heap.malloc((32,), "float32")
