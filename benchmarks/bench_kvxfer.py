@@ -156,6 +156,51 @@ def run():
              mig_us=f"{t_mig * 1e6:.2f}", overlap=f"{stw / ovl:.2f}")
 
 
+def measured() -> list:
+    """Wall-clock measurement mode (``benchmarks.run --measured``).
+
+    Times the re-runnable wire cycle — migrate (deferred ``put_signal_nbi``
+    streaming) + signal-gated admission — from an already-staged immutable
+    heap snapshot, at several KV sizes, and records the trimmed median into
+    the MEASURED sink's ``"wallclock"`` stream.  Staging and context init
+    stay OUTSIDE the timed region (the ``run()`` caveat about whole-protocol
+    wall clock), so the sample is the transfer machine itself and is honest
+    input for an engine-path profile fit."""
+    from benchmarks import common
+    rows = []
+    for prompt in PROMPTS:
+        cfg = _cfg()
+        ctx, heap = context.init(npes=2, node_size=2)
+        pool = KVPool.create(heap, cfg, prompt,
+                             num_blocks=2 * (prompt // BLOCK_TOKENS) + 2,
+                             max_slots=1, block_tokens=BLOCK_TOKENS)
+        mig = KVMigrator(ctx, pool)
+        cache = _filled_cache(cfg, prompt)
+        heap, ids = mig.stage(heap, 0, cache, prompt_len=prompt, src_pe=0)
+
+        def cycle(heap=heap, mig=mig, prompt=prompt):
+            h, rep = mig.migrate(heap, 0, src_pe=0, dst_pe=1, slot=0,
+                                 prompt_len=prompt, first_token=1)
+            h, hdr = mig.try_admit(h, 0, 1, rep.expected_signal)
+            assert hdr is not None
+            return rep
+
+        rep = cycle()
+        details = {}
+        best_of(cycle, discard=1, details=details,
+                record=("kvxfer_wire", rep.bytes_total, "engine",
+                        ctx.tier(0, 1), mig.work_items))
+        emit("kvxfer_measured", f"prompt={prompt}",
+             details["min"] * 1e6,
+             tmed_us=f"{details['tmed'] * 1e6:.3f}",
+             bytes=rep.bytes_total, blocks=rep.n_blocks,
+             trials=details["trials"])
+        rows.append({"prompt": prompt, "bytes": rep.bytes_total,
+                     "min_s": details["min"], "tmed_s": details["tmed"]})
+    assert common.MEASURED.nsamples("wallclock") >= len(PROMPTS)
+    return rows
+
+
 def smoke(json_path: str = "BENCH_kvxfer.json") -> dict:
     """CI smoke: MB-scale migration + steady-state overlap -> JSON."""
     prompt = 1024                     # ~MB-scale paged KV per request
@@ -213,8 +258,15 @@ if __name__ == "__main__":
                     default=None, metavar="PATH",
                     help="CI smoke: one MB-scale migration + overlap point "
                          "-> JSON artifact")
+    ap.add_argument("--measured", action="store_true",
+                    help="wall-clock measurement mode: time the re-runnable "
+                         "wire cycle per KV size, record trimmed medians "
+                         "into the wallclock telemetry stream")
     cli = ap.parse_args()
     if cli.smoke is not None:
         smoke(cli.smoke)
+    elif cli.measured:
+        print("bench,config,us_per_call,derived")
+        measured()
     else:
         run()

@@ -395,6 +395,90 @@ def alert_demo(engine) -> dict:
     }
 
 
+def measured_demo(engine) -> dict:
+    """Gate (g): the measured-time profiling layer, three sub-experiments.
+
+    1. **profiling-off bitwise** — the identical arrival schedule served
+       with Obs(trace + audit) and with the wall-clock profiler ADDED (re-
+       fit off in both arms: a re-fit consumes sample counts that differ by
+       construction between arms).  Token outputs, the exported Chrome-trace
+       document, and the audit roll-up must be identical — the profiler's
+       perf_counter values must not perturb one deterministic bit — while
+       the profiled arm must actually collect measured samples.
+    2. **calibration** — the profiled arm's samples must produce a
+       divergence report with >=1 populated (op, tier, size, work-items)
+       bucket (the stream-flush scopes pair measured wall with nonzero
+       modeled time by construction).
+    3. **wallclock re-fit** — with profiling on and the re-fit loop armed,
+       the online refitter must hot-swap a table fitted FROM the measured
+       wallclock stream: table and fitted profiles carry
+       ``source="wallclock"`` provenance.
+    """
+    # --- 1. bitwise off/on -------------------------------------------------
+    arms = {}
+    for arm, prof in (("off", False), ("on", True)):
+        obs = Obs(trace=True, audit_period=2, prof=prof)
+        fleet, rep, _ = _serve(engine, obs)
+        arms[arm] = {
+            "outputs": fleet.outputs(),
+            "doc": json.dumps(chrome_trace(obs.tracer), sort_keys=True),
+            "audit": {k: obs.auditor.summary()[k]
+                      for k in ("checks", "violations")},
+            "obs": obs,
+            "completed": rep["completed"],
+        }
+    off, on = arms["off"], arms["on"]
+    outputs_bitwise = set(off["outputs"]) == set(on["outputs"]) and all(
+        np.array_equal(off["outputs"][i], on["outputs"][i])
+        for i in off["outputs"])
+    prof_on = on["obs"].prof
+    doc_on = json.loads(on["doc"])
+    bitwise = {
+        "outputs_bitwise_identical": bool(outputs_bitwise),
+        "trace_doc_identical": off["doc"] == on["doc"],
+        "audit_identical": off["audit"] == on["audit"],
+        "trace_validation_errors": validate(doc_on),
+        "prof_samples": len(prof_on.samples),
+        "prof_ops": sorted({s.op for s in prof_on.samples}),
+    }
+    # --- 2. calibration report over the measured samples -------------------
+    from repro.obs import calibrate
+    report = calibrate.report_from_samples(prof_on.samples)
+    track = calibrate.measured_track_events(prof_on.samples)
+    doc_with_track = chrome_trace(on["obs"].tracer, measured=track)
+    calib = {
+        "samples": report["samples"],
+        "populated_buckets": report["populated_buckets"],
+        "worst": report["worst"][:3],
+        "unmodeled_wall_frac": report["coverage"]["unmodeled_wall_frac"],
+        "measured_track_events": len(track),
+        "track_doc_validation_errors": validate(doc_with_track),
+        # the track is strictly additive: exporting WITHOUT it afterwards
+        # still yields the byte-identical base document
+        "track_additive": (json.dumps(chrome_trace(on["obs"].tracer),
+                                      sort_keys=True) == on["doc"]
+                           and len(doc_with_track["traceEvents"])
+                           > len(doc_on["traceEvents"])),
+    }
+    # --- 3. wallclock re-fit ------------------------------------------------
+    obs = Obs(prof=True, refit_period=4, refit_min_samples=8)
+    fleet, rep, _ = _serve(engine, obs)
+    tbl = fleet.ctx.tuning.table
+    refit = {
+        "refits": len(obs.refitter.history),
+        "sample_source": obs.refitter.sample_source,
+        "wallclock_samples": fleet.ctx.telemetry.nsamples("wallclock"),
+        "table_armed": tbl is not None,
+        "table_source": tbl.source if tbl is not None else None,
+        "profiles": len(tbl.profiles) if tbl is not None else 0,
+        "profile_sources": (sorted({p.source
+                                    for p in tbl.profiles.values()})
+                            if tbl is not None else []),
+        "completed": rep["completed"],
+    }
+    return {"bitwise": bitwise, "calibration": calib, "refit": refit}
+
+
 def run():
     engine = _engine()
     ov = overhead(engine)
@@ -420,6 +504,12 @@ def run():
     emit("obs_alerts", f"overload_alerts={al['overload_alerts']}", 0.0,
          offender_verified=al["offender_verified"],
          nominal_silent=al["nominal_silent"])
+    ms = measured_demo(engine)
+    emit("obs_measured", f"samples={ms['bitwise']['prof_samples']}", 0.0,
+         bitwise=ms["bitwise"]["trace_doc_identical"],
+         populated_buckets=ms["calibration"]["populated_buckets"],
+         wallclock_refits=ms["refit"]["refits"],
+         table_source=ms["refit"]["table_source"])
 
 
 def smoke(json_path: str = "BENCH_obs.json") -> dict:
@@ -434,6 +524,7 @@ def smoke(json_path: str = "BENCH_obs.json") -> dict:
         "audit": audit_clean(engine),
         "faults": seeded_faults(engine),
         "alerts": alert_demo(engine),
+        "measured": measured_demo(engine),
     }
     with open(json_path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
@@ -445,7 +536,11 @@ def smoke(json_path: str = "BENCH_obs.json") -> dict:
          audit_violations=doc["audit"]["violations"],
          faults_caught=sum(1 for r in doc["faults"].values()
                            if r["caught"]),
-         alert_fired=doc["alerts"]["overload_fired"])
+         alert_fired=doc["alerts"]["overload_fired"],
+         measured_bitwise=doc["measured"]["bitwise"]["trace_doc_identical"],
+         measured_buckets=doc["measured"]["calibration"]
+                             ["populated_buckets"],
+         wallclock_refits=doc["measured"]["refit"]["refits"])
     return doc
 
 

@@ -35,7 +35,7 @@ from benchmarks.common import emit
 from repro.configs import base as cfgbase
 from repro.core import context, cutover
 from repro.models import model
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import Engine, ServeConfig, SlotBatch
 from repro.serve.kvpool import KVPool
 from repro.serve.kvxfer import KVMigrator
 from repro.serve.scheduler import DisaggScheduler
@@ -171,6 +171,55 @@ def smoke(json_path: str = "BENCH_paged.json") -> dict:
     return doc
 
 
+def measured() -> list:
+    """Wall-clock measurement mode (``benchmarks.run --measured``).
+
+    Times the pure-functional slot-bank decode step (``decode_slots`` —
+    SlotBatch in, SlotBatch out, so every trial reruns the identical jitted
+    step) across a (slots, context) sweep and records the trimmed median
+    into the MEASURED sink's ``"wallclock"`` stream as ``serve_decode``
+    engine/local samples — the same (op, path, tier) the serve profiler
+    emits, so benches and live profiling fit into the same profile."""
+    import numpy as np
+    import jax.numpy as jnp
+    from benchmarks import common
+    from benchmarks.common import best_of
+
+    cfg = cfgbase.reduced(cfgbase.get_config(ARCH))
+    params = model.init_params(jax.random.key(0), cfg)
+    eng = Engine(cfg, params, max_len=MAXLEN)
+    key = jax.random.key(2)
+    rows = []
+    for slots_n, pos_v in ((2, 4), (4, 8), (4, 16)):
+        bank = eng.init_slots(slots_n)
+        bank = SlotBatch(
+            cache=bank.cache,
+            pos=jnp.full((slots_n,), pos_v, jnp.int32),
+            tok=jnp.ones((slots_n,), jnp.int32),
+            active=np.ones((slots_n,), bool))
+        # per-token KV footprint from the cache itself (the step reads the
+        # resident context): total cache bytes spread over B x max_len
+        cache_bytes = sum(leaf.nbytes
+                          for leaf in jax.tree_util.tree_leaves(bank.cache))
+        nbytes = int(cache_bytes // (slots_n * MAXLEN)) * pos_v * slots_n
+
+        def step(bank=bank, key=key):
+            _, tok = eng.decode_slots(bank, key)
+            jax.block_until_ready(tok)
+
+        details = {}
+        best_of(step, discard=1, details=details,
+                record=("serve_decode", nbytes, "engine", "local", slots_n))
+        emit("paged_decode_measured", f"slots={slots_n},ctx={pos_v}",
+             details["min"] * 1e6,
+             tmed_us=f"{details['tmed'] * 1e6:.3f}",
+             nbytes=nbytes, trials=details["trials"])
+        rows.append({"slots": slots_n, "ctx": pos_v, "nbytes": nbytes,
+                     "min_s": details["min"], "tmed_s": details["tmed"]})
+    assert common.MEASURED.nsamples("wallclock") >= len(rows)
+    return rows
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
@@ -178,8 +227,16 @@ if __name__ == "__main__":
                     default=None, metavar="PATH",
                     help="CI smoke: TTFD streaming-vs-whole + prefix "
                          "savings -> JSON artifact")
+    ap.add_argument("--measured", action="store_true",
+                    help="wall-clock measurement mode: time the slot-bank "
+                         "decode step across a (slots, context) sweep, "
+                         "record trimmed medians into the wallclock "
+                         "telemetry stream")
     cli = ap.parse_args()
     if cli.smoke is not None:
         smoke(cli.smoke)
+    elif cli.measured:
+        print("bench,config,us_per_call,derived")
+        measured()
     else:
         run()

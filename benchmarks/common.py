@@ -1,7 +1,14 @@
 """Benchmark utilities.
 
 Timing follows the paper's methodology (§IV): warm-up by doubling iterations
-until total time exceeds 2 ms, then take the best of 10 trials.
+until total time exceeds 2 ms, then time ``trials`` runs.  Two aggregates
+come out of the trial list: the **min** (the paper's best-of — the least
+noise-contaminated run, what the CSV ``us_per_call`` column reports) and the
+**trimmed median** (drop the top/bottom ``trim`` fraction, take the median
+of the rest — robust to both cache-warm outliers and scheduler hiccups, the
+statistic that feeds the tuner).  ``ISHMEM_BENCH_TRIALS`` overrides the
+trial count process-wide; ``discard`` additionally times-but-drops the first
+N runs after warm-up (JIT-retrace or page-fault shakeout).
 
 Every benchmark prints CSV rows ``bench,config,us_per_call,derived...``.
 Two kinds of numbers appear:
@@ -11,15 +18,19 @@ Two kinds of numbers appear:
               CPU (relative trends only; absolute CPU time is not TPU time).
 
 Measured timings feed the autotuner: pass ``record=(op, nbytes, path, tier,
-work_items)`` to :func:`best_of` and the best wall-clock lands in
-:data:`MEASURED` — a process-wide ``TelemetrySink`` that ``benchmarks.run``
-fits after a suite pass, so fitted tables can reflect wall clock instead of
-the analytic model replayed (on real TPU hardware this IS the paper's tuning
-loop; on CPU the fits are tagged ``measured-wall-clock`` and kept out of the
-CI cutover gate, which compares modeled numbers only).
+work_items)`` to :func:`best_of` and the trimmed-median wall-clock lands in
+:data:`MEASURED` — a process-wide ``TelemetrySink`` — under the
+``"wallclock"`` provenance stream, the same stream the serve profiler
+(``repro.obs.prof``) writes.  ``benchmarks.run`` fits that stream after a
+suite pass (``estimator.build_table(sample_source="wallclock")``), so fitted
+tables carry measured provenance end to end (on real TPU hardware this IS
+the paper's tuning loop; on CPU the fits are interpreter wall clock —
+relative trends only — and kept out of the CI cutover gate, which compares
+modeled numbers only).
 """
 from __future__ import annotations
 
+import os
 import time
 
 from repro.tune import telemetry as telemetry_mod
@@ -32,10 +43,47 @@ MEASURED = telemetry_mod.TelemetrySink()
 from repro._jaxcompat import ensure_jax_compat  # noqa: F401
 
 
-def best_of(fn, *, trials: int = 10, min_warm_s: float = 0.002, record=None):
-    """Paper methodology: double warm-up iterations until >2 ms, then best
-    of ``trials``.  ``record=(op, nbytes, path, tier, work_items)`` routes
-    the resulting best time into the :data:`MEASURED` telemetry sink."""
+def _env_trials(default: int = 10) -> int:
+    raw = os.environ.get("ISHMEM_BENCH_TRIALS")
+    if raw is None or not raw.strip():
+        return default
+    try:
+        val = int(raw)
+    except ValueError:
+        raise ValueError(f"ISHMEM_BENCH_TRIALS: expected an integer, "
+                         f"got {raw!r}") from None
+    if val < 1:
+        raise ValueError("ISHMEM_BENCH_TRIALS must be >= 1")
+    return val
+
+
+def trimmed_median(times, trim: float = 0.2) -> float:
+    """Median after dropping ``floor(n * trim)`` samples from EACH end of
+    the sorted list.  With small n nothing is dropped and this is the plain
+    median; never degenerates to an empty list."""
+    xs = sorted(times)
+    k = int(len(xs) * trim)
+    if 2 * k >= len(xs):
+        k = 0
+    xs = xs[k:len(xs) - k] if k else xs
+    mid = len(xs) // 2
+    if len(xs) % 2:
+        return xs[mid]
+    return 0.5 * (xs[mid - 1] + xs[mid])
+
+
+def best_of(fn, *, trials=None, min_warm_s: float = 0.002, record=None,
+            discard: int = 0, trim: float = 0.2, details=None):
+    """Paper methodology, hardened: double warm-up iterations until >2 ms,
+    optionally time-and-discard ``discard`` more runs, then time ``trials``
+    runs (default 10, ``ISHMEM_BENCH_TRIALS`` overrides).  Returns the min
+    (back-compat: the paper's best-of).  ``record=(op, nbytes, path, tier,
+    work_items)`` routes the TRIMMED MEDIAN into :data:`MEASURED` under
+    ``source="wallclock"`` — the robust statistic feeds the tuner while the
+    optimistic one stays in the CSV.  Pass a dict as ``details`` to receive
+    ``{"min", "tmed", "trials", "discarded"}``."""
+    if trials is None:
+        trials = _env_trials()
     iters = 1
     while True:
         t0 = time.perf_counter()
@@ -45,15 +93,23 @@ def best_of(fn, *, trials: int = 10, min_warm_s: float = 0.002, record=None):
         if dt > min_warm_s:
             break
         iters *= 2
-    best = float("inf")
+    for _ in range(discard):
+        fn()
+    times = []
     for _ in range(trials):
         t0 = time.perf_counter()
         fn()
-        best = min(best, time.perf_counter() - t0)
+        times.append(time.perf_counter() - t0)
+    best = min(times)
+    tmed = trimmed_median(times, trim)
+    if details is not None:
+        details.update(min=best, tmed=tmed, trials=trials,
+                       discarded=discard)
     if record is not None:
         op, nbytes, path, tier, work_items = record
-        MEASURED.record(telemetry_mod.OpRecord(op, int(nbytes), path, tier,
-                                               best, int(work_items)))
+        MEASURED.record(telemetry_mod.OpRecord(
+            op, int(nbytes), path, tier, tmed, int(work_items),
+            telemetry_mod.WALLCLOCK_SOURCE))
     return best
 
 

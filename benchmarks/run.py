@@ -14,6 +14,71 @@ Prints ``bench,config,us_per_call,derived...`` CSV.
 import argparse
 
 
+def _flush_measured(out_dir: str = ".") -> None:
+    """Fit whatever wall-clock samples the suites recorded (benchmarks pass
+    ``record=`` to ``best_of``) and persist the table — the measured half of
+    the tuning loop.  Samples live in the sink's ``"wallclock"`` provenance
+    stream, so the fit runs with ``sample_source="wallclock"`` and the table
+    (and every profile in it) carries that provenance into the JSON.  On CPU
+    the fits are interpreter wall clock (relative trends only), so the table
+    is a separate artifact never fed to the CI cutover gate; on TPU this
+    file IS a hardware-truth ``ISHMEM_TUNING_FILE``."""
+    from benchmarks import common
+    from repro.tune import estimator
+    n = common.MEASURED.nsamples("wallclock")
+    if not n:
+        return
+    tbl = estimator.build_table(common.MEASURED, source="wallclock",
+                                sample_source="wallclock")
+    if tbl.profiles or tbl.cutovers:
+        path = os.path.join(out_dir, "BENCH_measured.json")
+        tbl.save(path)
+        print(f"# wrote {path}: {n} wall-clock samples, "
+              f"{len(tbl.profiles)} fitted profiles "
+              f"(source={tbl.source})")
+
+
+def _measured_mode(out_dir: str = ".") -> None:
+    """``--measured``: run the wall-clock measurement benches, flush the
+    fitted table, and validate the whole loop end to end — the emitted
+    ``BENCH_measured.json`` must warm-start a fresh context through
+    ``ISHMEM_TUNING_FILE`` with ``"wallclock"`` provenance intact, including
+    through a ``TuningTable.merge``."""
+    from benchmarks import bench_kvxfer, bench_paged_decode, common
+    from repro.core import context
+    from repro.tune import table as table_mod
+
+    print("bench,config,us_per_call,derived")
+    bench_kvxfer.measured()
+    bench_paged_decode.measured()
+    _flush_measured(out_dir)
+    path = os.path.join(out_dir, "BENCH_measured.json")
+    if not os.path.exists(path):
+        raise SystemExit("--measured: no fitted table was written — the "
+                         "measurement benches recorded too few samples")
+    # round-trip gate 1: the file warm-starts a context (the paper's
+    # persisted-tuning path) and the armed table carries its provenance
+    os.environ["ISHMEM_TUNING_FILE"] = path
+    try:
+        ctx, _ = context.init(npes=2, node_size=2)
+    finally:
+        del os.environ["ISHMEM_TUNING_FILE"]
+    tbl = ctx.tuning.table
+    assert tbl is not None and (tbl.profiles or tbl.cutovers), \
+        "--measured: ISHMEM_TUNING_FILE did not arm the table"
+    assert "wallclock" in tbl.source, \
+        f"--measured: table source lost provenance: {tbl.source!r}"
+    assert all("wallclock" in p.source for p in tbl.profiles.values()), \
+        "--measured: a fitted profile lost wallclock provenance"
+    # round-trip gate 2: merge keeps per-profile provenance (no laundering)
+    merged = tbl.merge(table_mod.TuningTable(source="model"))
+    assert all("wallclock" in p.source for p in merged.profiles.values()), \
+        "--measured: merge dropped wallclock provenance"
+    print(f"# measured loop validated: {path} -> ISHMEM_TUNING_FILE "
+          f"warm-start armed {len(tbl.profiles)} profile(s), "
+          f"source={tbl.source}, merge preserves provenance")
+
+
 def main() -> None:
     from benchmarks import common
     common.ensure_jax_compat()
@@ -24,10 +89,19 @@ def main() -> None:
                     default=None, metavar="PATH",
                     help="profile mode: run the cutover tuning sweep and emit "
                          "a persisted TuningTable (default BENCH_cutover.json)")
+    ap.add_argument("--measured", action="store_true",
+                    help="wall-clock measurement mode: run the measured "
+                         "kvxfer/paged-decode benches (best_of record=), fit "
+                         "the wallclock telemetry stream into "
+                         "BENCH_measured.json, and validate the "
+                         "ISHMEM_TUNING_FILE warm-start round trip")
     args = ap.parse_args()
 
+    if args.measured:
+        _measured_mode()
+        return
+
     if args.json is not None:
-        import os
         from benchmarks import (bench_cutover, bench_device, bench_fleet,
                                 bench_kvxfer, bench_paged_decode)
         print("bench,config,us_per_call,derived")
@@ -59,6 +133,10 @@ def main() -> None:
               f"{ab['fcfs']['interactive_ttfd_p99_steps']:.1f} (fcfs) -> "
               f"{ab['slo']['interactive_ttfd_p99_steps']:.1f} (slo) steps, "
               f"{fl['goodput']['points'][-1]['shed']} shed past saturation")
+        # profile mode runs suites that record wall clock too — flush them
+        # (this branch used to return without flushing, silently dropping
+        # every best_of(record=) sample)
+        _flush_measured(out_dir)
         return
 
     from benchmarks import (bench_broadcast, bench_cutover, bench_device,
@@ -86,20 +164,7 @@ def main() -> None:
             continue
         fn()
 
-    # fit whatever wall-clock samples the suites recorded (benchmarks pass
-    # record= to best_of) — the measured half of the tuning loop.  On CPU the
-    # fits are interpreter wall clock (relative trends only), so the table is
-    # written to a separate artifact and never fed to the CI cutover gate;
-    # on TPU this file IS a hardware-truth ISHMEM_TUNING_FILE.
-    if common.MEASURED.total_count():
-        from repro.tune import estimator
-        tbl = estimator.build_table(common.MEASURED,
-                                    source="measured-wall-clock")
-        if tbl.profiles or tbl.cutovers:
-            tbl.save("BENCH_measured.json")
-            print(f"# wrote BENCH_measured.json: "
-                  f"{common.MEASURED.total_count()} wall-clock samples, "
-                  f"{len(tbl.profiles)} fitted profiles")
+    _flush_measured()
 
 
 if __name__ == "__main__":

@@ -187,14 +187,46 @@ assert al["overload_fired"] and al["offender_verified"], \
     "not match the scheduler's own ledger"
 assert al["nominal_silent"], \
     f"burn-rate alert fired on a nominal run: {al['alerts'][:2]}"
+# measured-time profiling layer (gate g): profiling-off bitwise, a
+# populated calibration report, and a genuinely measured re-fit
+ms = doc["measured"]
+bw = ms["bitwise"]
+assert bw["prof_samples"] > 0 and bw["prof_ops"], \
+    "profiled arm collected no measured samples"
+assert (bw["outputs_bitwise_identical"] and bw["trace_doc_identical"]
+        and bw["audit_identical"]), \
+    "wall-clock profiling perturbed a deterministic output (tokens, " \
+    "trace document, or audit roll-up)"
+assert bw["trace_validation_errors"] == [], \
+    f"profiled arm's trace failed validation (wall-clock leak?): " \
+    f"{bw['trace_validation_errors'][:3]}"
+cal = ms["calibration"]
+assert cal["populated_buckets"] >= 1, \
+    "calibration report has no populated (op, tier, size, wi) bucket — " \
+    "measured samples never paired with modeled time"
+assert cal["track_doc_validation_errors"] == [] and cal["track_additive"], \
+    "measured Chrome-trace track is invalid or not strictly additive"
+wf = ms["refit"]
+assert wf["refits"] > 0, "wallclock re-fit never fired"
+assert wf["table_armed"] and wf["table_source"] == "wallclock", \
+    f"re-fit did not hot-swap a measured table (source=" \
+    f"{wf['table_source']!r})"
+assert wf["profiles"] > 0 and wf["profile_sources"] == ["wallclock"], \
+    f"fitted profiles lost wallclock provenance: {wf['profile_sources']}"
 print(f"obs work {ov['overhead_pct']:.2f}% of wall clock, "
       f"{tr['events']} events / {tr['chains']} lifelines validate clean "
       f"({tr['paths_exact']}/{tr['paths']} paths exact), "
       f"{rf['refits']} re-fits flipped {rf['decisions_changed']} "
       f"decisions, audit {au['checks']} passes clean at "
       f"{au['overhead_pct']:.2f}%, {len(doc['faults'])} seeded faults "
-      f"caught, alerts fire/stay-silent -> OK")
+      f"caught, alerts fire/stay-silent, profiler "
+      f"{bw['prof_samples']} samples bitwise-clean, "
+      f"{cal['populated_buckets']} calibration bucket(s), "
+      f"{wf['refits']} wallclock re-fit(s) -> OK")
 EOF
+
+echo "== measured tuning loop (bench record= -> fit -> warm-start) =="
+python -m benchmarks.run --measured
 
 echo "== device-initiated smoke (fused admission / ring attention) =="
 python -m benchmarks.bench_device --smoke BENCH_device.json

@@ -63,6 +63,12 @@ class ShmemContext:
     # span tracer (repro.obs): the shared Null tracer unless a driver
     # attaches a recording one — hot paths guard on ``tracer.enabled``
     tracer: tracer_mod.Tracer = tracer_mod.NULL_TRACER
+    # wall-clock profiler (repro.obs.prof): None unless a driver attaches
+    # one — hot paths guard on ``prof is not None and prof.enabled``.  Its
+    # perf_counter clock is strictly segregated from the step clock above:
+    # measured seconds only ever land in wallclock-source telemetry buckets
+    # and profiler samples, never in deterministic trace timestamps
+    prof: Optional[object] = None
     # failure-domain state: which PEs are dead, whether the proxy ring is
     # partitioned — consulted by the completion queue at flush time
     fault: FaultState = dataclasses.field(default_factory=FaultState)
@@ -93,16 +99,20 @@ class ShmemContext:
         return self.telemetry.trace
 
     def record(self, op: str, nbytes: int, path: str, tier: str,
-               work_items: int = 1, t_sec: Optional[float] = None) -> None:
+               work_items: int = 1, t_sec: Optional[float] = None,
+               source: str = telemetry_mod.MODEL_SOURCE) -> None:
         """Record one op into the sink.  ``t_sec`` carries a measured (or
         pre-modeled collective) time; when omitted the analytic RMA cost
-        model prices the op — so cold runs still populate the tuner."""
+        model prices the op — so cold runs still populate the tuner.
+        ``source`` tags provenance: the default ``"model"`` stream is the
+        deterministic comm clock; ``"wallclock"`` records (profiler,
+        measured benches) aggregate into their own buckets."""
         if t_sec is None:
             t_sec = cutover.op_time(nbytes, path, work_items=work_items,
                                     tier=tier if path != "proxy" else "dcn",
                                     hw=self.hw)
         self.telemetry.record(OpRecord(op, nbytes, path, tier, t_sec,
-                                       work_items))
+                                       work_items, source))
 
     def total_time(self) -> float:
         return self.telemetry.total_time()
@@ -110,14 +120,20 @@ class ShmemContext:
     def reset_ledger(self) -> None:
         self.telemetry.clear()
 
-    def fit_tuning_table(self, *, arm: bool = True):
+    def fit_tuning_table(self, *, arm: bool = True,
+                         sample_source: Optional[str] = None):
         """Fit a measured cutover table from everything recorded so far
         (``repro.tune.estimator``); when ``arm`` is set the table is installed
-        on ``self.tuning`` so subsequent ``choose_path`` calls use it."""
+        on ``self.tuning`` so subsequent ``choose_path`` calls use it.
+        ``sample_source`` restricts the fit to one telemetry provenance
+        stream (``"wallclock"`` = measured profiler samples only) and labels
+        the resulting table with it."""
         from repro.tune import estimator, table as table_mod
         if not isinstance(self.telemetry, telemetry_mod.TelemetrySink):
             return table_mod.TuningTable(source="empty")  # e.g. NullSink
-        tbl = estimator.build_table(self.telemetry)
+        tbl = estimator.build_table(self.telemetry,
+                                    source=sample_source or "measured",
+                                    sample_source=sample_source)
         if arm and (tbl.cutovers or tbl.profiles):
             self.tuning = dataclasses.replace(self.tuning, table=tbl)
         return tbl

@@ -190,7 +190,8 @@ def _make_batch(cfg, key, batch: int, prompt_len: int) -> dict:
 
 def _make_obs(args):
     """Build the observability bundle from ISHMEM_OBS_* merged with the CLI
-    flags (CLI wins).  Returns (obs|None, trace_path, metrics_path)."""
+    flags (CLI wins).  Returns (obs|None, trace_path, metrics_path,
+    prof_path, calibration_path)."""
     from repro import obs as obs_mod
 
     cfg = obs_mod.load_obs_env()
@@ -201,9 +202,16 @@ def _make_obs(args):
     recorder = (args.recorder if args.recorder is not None
                 else cfg.recorder_window)
     alerts = bool(args.alerts) or cfg.alerts
+    # --profile/--calibration use "1" as the bare-flag sentinel (same
+    # convention as the env vars); anything else is an output path
+    prof_cli_path = args.profile if args.profile not in (None, "1") else None
+    cal_cli_path = (args.calibration
+                    if args.calibration not in (None, "1") else None)
+    calibration = bool(args.calibration) or cfg.calibration
+    prof = bool(args.profile) or cfg.prof or calibration
     if not (trace or metrics or refit > 0 or audit > 0 or recorder > 0
-            or alerts):
-        return None, None, None
+            or alerts or prof):
+        return None, None, None, None, None
     obs = obs_mod.Obs(
         trace=trace, metrics=metrics, refit_period=refit,
         refit_min_samples=(args.refit_min_samples
@@ -214,16 +222,22 @@ def _make_obs(args):
         recorder_window=recorder,
         recorder_path=cfg.recorder_path,
         alerts=alerts, alert_target=cfg.alert_target,
-        alert_windows=cfg.alert_windows)
+        alert_windows=cfg.alert_windows,
+        prof=prof, calibration=calibration)
     return obs, (args.trace or cfg.trace_path), \
-        (args.metrics or cfg.metrics_path)
+        (args.metrics or cfg.metrics_path), \
+        (prof_cli_path or cfg.prof_path), \
+        (cal_cli_path or cfg.calibration_path)
 
 
-def _emit_obs(obs, trace_path, metrics_path) -> None:
+def _emit_obs(obs, trace_path, metrics_path,
+              prof_path=None, calibration_path=None) -> None:
     if obs is None:
         return
     if trace_path:
-        doc = obs.write_trace(trace_path)
+        doc = obs.write_trace(trace_path,
+                              measured=obs.prof is not None
+                              and bool(obs.prof.samples))
         print(f"[serve]   trace: {len(doc['traceEvents'])} events -> "
               f"{trace_path} (load in ui.perfetto.dev)")
     if metrics_path:
@@ -260,6 +274,32 @@ def _emit_obs(obs, trace_path, metrics_path) -> None:
             print(f"[serve]   flight recorder: armed, "
                   f"{r['buffered_events']} span(s) in the "
                   f"{r['window_steps']}-step window, no incident")
+    if obs.prof is not None:
+        ps = obs.prof.summary()
+        print(f"[serve]   profiler: {ps['samples']} measured sample(s) "
+              f"({ps['wall_s'] * 1e3:.1f} ms wall, "
+              f"{ps['model_s'] * 1e3:.3f} ms modeled) over "
+              f"ops {', '.join(ps['ops']) or 'none'}")
+        if prof_path:
+            obs.write_prof(prof_path)
+            print(f"[serve]   profiler samples -> {prof_path} "
+                  f"(analyze with --calibration)")
+        if obs.calibration:
+            from repro.obs import calibrate as calibrate_mod
+            report = obs.calibration_report()
+            sink_rows = None
+            ctx = obs.prof.ctx
+            if ctx is not None:
+                sink_rows = calibrate_mod.sink_join(ctx.telemetry)
+            for line in calibrate_mod.render(
+                    report, sink_rows=sink_rows).splitlines():
+                print(f"[serve]   {line}")
+            if calibration_path:
+                import json as json_mod
+                with open(calibration_path, "w") as f:
+                    json_mod.dump(report, f, indent=2, sort_keys=True)
+                    f.write("\n")
+                print(f"[serve]   calibration report -> {calibration_path}")
 
 
 def _run_disagg(args, cfg, params) -> None:
@@ -274,7 +314,8 @@ def _run_disagg(args, cfg, params) -> None:
     npes = args.prefill_pes + args.decode_pes
     node_size = args.prefill_pes if args.cross_pod else npes
     ctx, heap = context.init(npes=npes, node_size=node_size)
-    obs, trace_path, metrics_path = _make_obs(args)
+    obs, trace_path, metrics_path, prof_path, calibration_path = \
+        _make_obs(args)
     if obs is not None:
         obs.attach(ctx)
     pre, dec = teams.disagg_partition(teams.world(npes), args.prefill_pes)
@@ -341,7 +382,7 @@ def _run_disagg(args, cfg, params) -> None:
           f"{ps['heap']['bytes_free']} B free")
     for rid in sorted(outs)[:4]:
         print(f"[serve]   req {rid}: {outs[rid].tolist()}")
-    _emit_obs(obs, trace_path, metrics_path)
+    _emit_obs(obs, trace_path, metrics_path, prof_path, calibration_path)
 
 
 def _run_fleet(args, cfg, params) -> None:
@@ -371,7 +412,8 @@ def _run_fleet(args, cfg, params) -> None:
         admit_delay=args.admit_delay, admission=args.admission,
         queue_bound=args.queue_bound, router=args.router, seed=args.seed)
     engine = Engine(cfg, params, max_len=fcfg.max_len)
-    obs, trace_path, metrics_path = _make_obs(args)
+    obs, trace_path, metrics_path, prof_path, calibration_path = \
+        _make_obs(args)
     fleet = Fleet(fcfg, engine=engine, obs=obs, fault_plan=fault_plan)
     tenants = [
         TenantSpec("chat", weight=2.0, prompt_lens=(args.prompt_len,),
@@ -431,7 +473,7 @@ def _run_fleet(args, cfg, params) -> None:
               f"re-admitted ({rec['remigrated']} re-migrated, "
               f"{rec['recomputed']} recomputed from prompt, "
               f"{rec['replayed_tokens']} tokens replayed)")
-    _emit_obs(obs, trace_path, metrics_path)
+    _emit_obs(obs, trace_path, metrics_path, prof_path, calibration_path)
 
 
 def main():
@@ -561,6 +603,21 @@ def main():
                          "burn per deadline class over the metrics series, "
                          "alerts carry the top offending requests by "
                          "critical-path segment (implies metrics sampling)")
+    ap.add_argument("--profile", nargs="?", const="1", default=None,
+                    metavar="OUT.json",
+                    help="wall-clock profiler on the serve hot paths "
+                         "(decode steps, paged-attention, prefill, "
+                         "migration flushes); an argument also writes the "
+                         "measured-sample JSON for "
+                         "'python -m repro.obs.analyze --calibration'. "
+                         "Deterministic outputs stay bitwise-identical")
+    ap.add_argument("--calibration", nargs="?", const="1", default=None,
+                    metavar="OUT.json",
+                    help="measured-vs-modeled divergence report at shutdown "
+                         "(ratio percentiles per (op, tier, size, "
+                         "work-items) bucket, worst buckets, unmodeled "
+                         "coverage); implies --profile; an argument also "
+                         "writes the report JSON")
     args = ap.parse_args()
     if args.fleet and fenv_err is not None:
         raise fenv_err

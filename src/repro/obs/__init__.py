@@ -24,6 +24,8 @@ from __future__ import annotations
 
 from typing import Optional, Union
 
+from repro.obs import calibrate as calibrate_mod
+from repro.obs import prof as prof_mod
 from repro.obs.alerts import (DEFAULT_WINDOWS, Alert, BurnRateMonitor,
                               BurnWindow, parse_windows)
 from repro.obs.audit import AuditError, AuditViolation, FleetAuditor
@@ -31,6 +33,7 @@ from repro.obs.env import ObsConfig, load_obs_env
 from repro.obs.export import (chrome_trace, request_chains, validate,
                               write_chrome_trace)
 from repro.obs.metrics import MetricsRegistry, sample_fleet
+from repro.obs.prof import NULL_PROF, ProfClock, Profiler, ProfSample
 from repro.obs.recorder import FlightRecorder, RingTracer
 from repro.obs.refit import OnlineRefitter, RefitEvent
 from repro.obs.tracer import NULL_TRACER, SpanTracer, TraceEvent, Tracer
@@ -38,6 +41,7 @@ from repro.obs.tracer import NULL_TRACER, SpanTracer, TraceEvent, Tracer
 __all__ = [
     "Obs", "ObsConfig", "load_obs_env",
     "Tracer", "SpanTracer", "TraceEvent", "NULL_TRACER", "RingTracer",
+    "Profiler", "ProfClock", "ProfSample", "NULL_PROF",
     "MetricsRegistry", "sample_fleet",
     "OnlineRefitter", "RefitEvent",
     "FleetAuditor", "AuditError", "AuditViolation",
@@ -70,7 +74,8 @@ class Obs:
                  recorder_window: int = 0,
                  recorder_path: str = "postmortem_trace.json",
                  alerts: bool = False, alert_target: float = 0.9,
-                 alert_windows: Union[str, tuple] = DEFAULT_WINDOWS):
+                 alert_windows: Union[str, tuple] = DEFAULT_WINDOWS,
+                 prof: bool = False, calibration: bool = False):
         if trace:
             self.tracer = SpanTracer(max_events=trace_limit)
         elif recorder_window > 0:
@@ -96,6 +101,11 @@ class Obs:
         self.monitor = (BurnRateMonitor(target=alert_target,
                                         windows=alert_windows)
                         if alerts else None)
+        # wall-clock profiler (strictly segregated clock): a calibration
+        # report needs measured samples, so calibration implies prof
+        self.calibration = calibration
+        self.prof: Optional[Profiler] = (Profiler()
+                                         if (prof or calibration) else None)
 
     @classmethod
     def from_env(cls, cfg: Optional[ObsConfig] = None) -> "Obs":
@@ -108,7 +118,8 @@ class Obs:
                    recorder_window=cfg.recorder_window,
                    recorder_path=cfg.recorder_path,
                    alerts=cfg.alerts, alert_target=cfg.alert_target,
-                   alert_windows=cfg.alert_windows)
+                   alert_windows=cfg.alert_windows,
+                   prof=cfg.prof, calibration=cfg.calibration)
 
     @classmethod
     def from_config(cls, cfg: ObsConfig) -> "Obs":
@@ -116,18 +127,27 @@ class Obs:
 
     # ------------------------------------------------------------- wiring
     def attach(self, ctx) -> None:
-        """Install the tracer on a context and arm the refit loop."""
+        """Install the tracer (and profiler, when armed) on a context and
+        arm the refit loop.  With the profiler attached the refitter fits
+        the *measured* wallclock stream — the adapt-from-measurement loop —
+        instead of the analytic model echo."""
         ctx.tracer = self.tracer
+        if self.prof is not None:
+            self.prof.attach(ctx)
         if self.refit_period > 0:
             self.refitter = OnlineRefitter(
                 ctx, period_steps=self.refit_period,
-                min_samples=self.refit_min_samples, tracer=self.tracer)
+                min_samples=self.refit_min_samples, tracer=self.tracer,
+                sample_source=("wallclock" if self.prof is not None
+                               else None))
 
     # ------------------------------------------------- fleet step hooks
     def begin_step(self, step: int) -> None:
         if self.tracer.enabled:
             self.tracer.clock.set_step(step)
             self.tracer.begin("step", "fleet", "fleet", "steps", step=step)
+        if self.prof is not None:
+            self.prof.set_step(step)
 
     def end_step(self, fleet) -> None:
         if self.refitter is not None:
@@ -168,15 +188,39 @@ class Obs:
         return self.recorder.dump(reason=f"crash:{reason}")
 
     # ------------------------------------------------------------- output
-    def write_trace(self, path: str) -> dict:
+    def write_trace(self, path: str, *, measured: bool = False) -> dict:
+        """Export the Chrome trace; ``measured=True`` additionally appends
+        the profiler's step-clocked ``measured`` track.  The track is
+        strictly additive and opt-in — the default export is byte-identical
+        whether or not a profiler ran."""
         if not self.tracer.enabled:
             raise RuntimeError("tracing was not enabled on this Obs")
-        return write_chrome_trace(self.tracer, path)
+        track = None
+        if measured:
+            if self.prof is None:
+                raise RuntimeError("measured track requested but profiling "
+                                   "was not enabled on this Obs")
+            track = calibrate_mod.measured_track_events(self.prof.samples)
+        return write_chrome_trace(self.tracer, path, measured=track)
 
     def write_metrics(self, path: str) -> dict:
         if self.metrics is None:
             raise RuntimeError("metrics were not enabled on this Obs")
         return self.metrics.write(path)
+
+    def write_prof(self, path: str) -> dict:
+        """Persist the measured sample file (``repro.obs.analyze
+        --calibration`` input)."""
+        if self.prof is None:
+            raise RuntimeError("profiling was not enabled on this Obs")
+        return self.prof.save(path)
+
+    def calibration_report(self) -> dict:
+        """Measured-vs-modeled divergence report over the profiler samples
+        collected so far (``repro.obs.calibrate``)."""
+        if self.prof is None:
+            raise RuntimeError("profiling was not enabled on this Obs")
+        return calibrate_mod.report_from_samples(self.prof.samples)
 
     def summary(self) -> dict:
         """Small JSON-able roll-up for benchmark emission."""
@@ -197,4 +241,8 @@ class Obs:
             out["recorder"] = self.recorder.summary()
         if self.monitor is not None:
             out["alerts"] = self.monitor.summary()
+        if self.prof is not None:
+            out["prof"] = self.prof.summary()
+            if self.calibration:
+                out["calibration"] = self.calibration_report()
         return out

@@ -1,12 +1,19 @@
 """Offline critical-path analysis of an exported trace.
 
     python -m repro.obs.analyze trace.json [--json report.json] [--q 99]
+                                [--calibration samples.json]
 
 Loads a Chrome-trace document written by ``--trace`` (or a flight-recorder
 postmortem dump), validates it, reconstructs every request's critical path
 (``repro.obs.critical``), and prints the "where does p99 TTFD go" report:
 per-segment attribution, the order-statistic request behind the p99, and
 the what-if bounds (zero-wire / zero-signal-wait / zero-queue TTFD).
+
+With ``--calibration`` pointing at a profiler sample file (written by
+``--profile`` on the serve driver, ``repro.obs.prof.Profiler.save``), the
+report additionally carries the measured-vs-modeled divergence summary
+(``repro.obs.calibrate``) and a per-segment *measured* overlay next to the
+step-clocked attribution.
 
 Truncated traces (``otherData.dropped_events > 0``) are analyzed but loudly
 flagged: with spans missing, chains can have phantom gaps and the segment
@@ -18,7 +25,7 @@ import argparse
 import json
 import sys
 
-from repro.obs import critical, export
+from repro.obs import calibrate, critical, export, prof as prof_mod
 
 
 def _fmt_steps(x: float) -> str:
@@ -65,6 +72,13 @@ def render(report: dict, *, q: int, errors, warnings) -> str:
     if dev["events"]:
         lines.append(f"device waits: {dev['events']} device_* event(s), "
                      f"{dev['spins']} flush spin(s)")
+    overlay = report.get("measured_overlay")
+    if overlay:
+        lines.append("measured overlay (wall-clock seconds per segment):")
+        for seg, row in overlay.items():
+            lines.append(f"  {seg:<12}{row['wall_s'] * 1e3:10.3f} ms wall  "
+                         f"{row['model_s'] * 1e3:10.3f} ms modeled  "
+                         f"(n={row['n']})")
     return "\n".join(lines)
 
 
@@ -80,6 +94,10 @@ def main(argv=None) -> int:
                          "paths) as JSON")
     ap.add_argument("--q", type=int, default=99,
                     help="tail percentile for the report (default 99)")
+    ap.add_argument("--calibration", metavar="SAMPLES.json", default=None,
+                    help="profiler sample file (serve --profile output); "
+                         "adds the measured-vs-modeled divergence report "
+                         "and a per-segment measured overlay")
     args = ap.parse_args(argv)
 
     with open(args.trace) as f:
@@ -88,18 +106,27 @@ def main(argv=None) -> int:
     errors = export.validate(doc, warnings=warnings)
     events = export.events_from_doc(doc)
     chains = export._chains_from_events(events)
-    report = critical.analyze(chains, events, q=float(args.q))
+    samples = (prof_mod.load_samples(args.calibration)
+               if args.calibration else None)
+    report = critical.analyze(chains, events, q=float(args.q),
+                              measured=samples)
+    cal_report = (calibrate.report_from_samples(samples)
+                  if samples is not None else None)
 
     if args.json:
         paths = critical.fleet_paths(chains, events)
         full = dict(report)
         full["validation_errors"] = errors
         full["validation_warnings"] = warnings
+        if cal_report is not None:
+            full["calibration"] = cal_report
         full["paths"] = {str(rid): p for rid, p in sorted(paths.items())}
         with open(args.json, "w") as f:
             json.dump(full, f, indent=1, sort_keys=True)
             f.write("\n")
     print(render(report, q=args.q, errors=errors, warnings=warnings))
+    if cal_report is not None:
+        print(calibrate.render(cal_report))
     return 1 if errors else 0
 
 

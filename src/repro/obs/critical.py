@@ -197,7 +197,7 @@ def _percentile(xs: List[float], q: float) -> float:
 
 
 def analyze(chains: Dict[int, List[dict]], events=None, *,
-            q: float = 99.0) -> dict:
+            q: float = 99.0, measured=None) -> dict:
     """The "where does p99 TTFD go" fleet report.
 
     Aggregates every admitted request's TTFD-prefix segments, names the
@@ -205,7 +205,13 @@ def analyze(chains: Dict[int, List[dict]], events=None, *,
     and computes what-if bounds: for each segment, the p-``q`` TTFD if that
     segment cost zero (``zero_wire_p99_steps`` is the headline — the bound
     a perfect interconnect could reach without touching the scheduler).
-    All times are in scheduler steps (ticks / STEP_QUANTUM)."""
+    All times are in scheduler steps (ticks / STEP_QUANTUM).
+
+    ``measured`` optionally carries wall-clock profiler samples
+    (:class:`repro.obs.prof.ProfSample`); when given, the report grows a
+    ``measured_overlay`` — per-segment *measured* wall seconds next to the
+    step-clocked attribution, so "wire is 60% of TTFD" can be sanity-checked
+    against what a real clock saw for the same segments."""
     paths = fleet_paths(chains, events)
     admitted = {rid: p for rid, p in paths.items()
                 if p["ttfd_ticks"] is not None}
@@ -250,6 +256,10 @@ def analyze(chains: Dict[int, List[dict]], events=None, *,
             if ev.ph == "i" and str(ev.name).startswith("device_"):
                 dev_events += 1
                 dev_spins += int((ev.args or {}).get("spins", 0))
+    overlay = None
+    if measured is not None:
+        from repro.obs import calibrate as calibrate_mod
+        overlay = calibrate_mod.measured_overlay(measured)
     return {
         "requests": len(paths),
         "admitted": len(admitted),
@@ -270,15 +280,18 @@ def analyze(chains: Dict[int, List[dict]], events=None, *,
             f"p{int(q)}_steps": _percentile(e2e, q),
         },
         "device": {"events": dev_events, "spins": dev_spins},
+        "measured_overlay": overlay,
     }
 
 
-def analyze_tracer(tracer, *, q: float = 99.0) -> dict:
+def analyze_tracer(tracer, *, q: float = 99.0, measured=None) -> dict:
     """:func:`analyze` straight off a live :class:`SpanTracer`."""
-    return analyze(export_mod.request_chains(tracer), tracer.events, q=q)
+    return analyze(export_mod.request_chains(tracer), tracer.events, q=q,
+                   measured=measured)
 
 
-def analyze_doc(doc: dict, *, q: float = 99.0) -> dict:
+def analyze_doc(doc: dict, *, q: float = 99.0, measured=None) -> dict:
     """:func:`analyze` over a loaded Chrome-trace JSON document."""
     events = export_mod.events_from_doc(doc)
-    return analyze(export_mod._chains_from_events(events), events, q=q)
+    return analyze(export_mod._chains_from_events(events), events, q=q,
+                   measured=measured)

@@ -32,10 +32,19 @@ run is bitwise-identical to one built before this subsystem existed.
                                  (default 0.9)
 ``ISHMEM_OBS_ALERT_WINDOWS``     burn windows as ``steps:threshold`` pairs,
                                  e.g. ``8:6,32:3`` (the default)
+``ISHMEM_OBS_PROF``              ``1`` (collect in memory) or a path —
+                                 wall-clock profiler on serve hot paths; a
+                                 path also writes the measured-sample JSON
+                                 there at shutdown.  Deterministic outputs
+                                 stay bitwise-identical either way
+``ISHMEM_OBS_CALIBRATION``       ``1`` or a path — measured-vs-modeled
+                                 divergence report at shutdown (implies
+                                 ``PROF``); a path writes the report JSON
 ===============================  ============================================
 
 CLI flags on ``launch/serve.py`` (``--trace``/``--metrics``/``--refit``/
-``--audit``/``--recorder``/``--alerts``) override the environment.
+``--audit``/``--recorder``/``--alerts``/``--profile``/``--calibration``)
+override the environment.
 """
 from __future__ import annotations
 
@@ -63,12 +72,16 @@ class ObsConfig:
     alerts: bool = False
     alert_target: float = 0.9
     alert_windows: str = "8:6,32:3"     # parse_windows format
+    prof: bool = False
+    prof_path: Optional[str] = None
+    calibration: bool = False
+    calibration_path: Optional[str] = None
 
     @property
     def enabled(self) -> bool:
         return (self.trace or self.metrics or self.refit_period > 0
                 or self.audit_period > 0 or self.recorder_window > 0
-                or self.alerts)
+                or self.alerts or self.prof or self.calibration)
 
 
 def _flag_or_path(val: Optional[str]) -> tuple:
@@ -138,6 +151,10 @@ def load_obs_env(environ: Optional[Mapping[str, str]] = None) -> ObsConfig:
     alert_windows = get("ALERT_WINDOWS") or "8:6,32:3"
     from repro.obs.alerts import parse_windows
     parse_windows(alert_windows)        # fail fast on a malformed spec
+    prof, prof_path = _flag_or_path(get("PROF"))
+    calibration, calibration_path = _flag_or_path(get("CALIBRATION"))
+    if calibration:
+        prof = True                     # a report needs measured samples
     return ObsConfig(trace=trace, trace_path=trace_path,
                      metrics=metrics, metrics_path=metrics_path,
                      refit_period=refit_period,
@@ -148,4 +165,7 @@ def load_obs_env(environ: Optional[Mapping[str, str]] = None) -> ObsConfig:
                      recorder_path=recorder_path,
                      alerts=alerts,
                      alert_target=alert_target,
-                     alert_windows=alert_windows)
+                     alert_windows=alert_windows,
+                     prof=prof, prof_path=prof_path,
+                     calibration=calibration,
+                     calibration_path=calibration_path)

@@ -50,15 +50,25 @@ def _event_json(ev: TraceEvent) -> dict:
 
 
 def chrome_trace_events(span_events, *, dropped: int = 0,
-                        other: Optional[dict] = None) -> dict:
+                        other: Optional[dict] = None,
+                        measured: Optional[List[dict]] = None) -> dict:
     """Trace-Event-Format document from an explicit event sequence — the
     serializer behind :func:`chrome_trace`, reused by the flight recorder
     for windowed postmortem dumps.  ``other`` merges extra keys into
-    ``otherData`` (e.g. the dump reason)."""
+    ``otherData`` (e.g. the dump reason).
+
+    ``measured`` appends a pre-serialized ``measured`` track
+    (:func:`repro.obs.calibrate.measured_track_events`): wall-clock profiler
+    instants on step-clocked timestamps.  The track is additive — omitting
+    it yields a byte-identical document, which is what keeps profiling-off
+    exports bitwise."""
     events: List[dict] = []
     span_events = list(span_events)
+    measured = list(measured or [])
     # metadata naming: one process_name per pid, sorted for stable diffs
     pids = sorted({ev.pid for ev in span_events}, key=_sort_key)
+    if measured:
+        pids.append("measured")
     for pid in pids:
         events.append({"name": "process_name", "ph": "M", "pid": str(pid),
                        "args": {"name": str(pid)}})
@@ -71,11 +81,21 @@ def chrome_trace_events(span_events, *, dropped: int = 0,
                            "pid": str(ev.pid), "tid": str(ev.tid),
                            "args": {"name": str(ev.tid)}})
         events.append(_event_json(ev))
+    for ev in measured:
+        key = (ev["pid"], ev["tid"])
+        if key not in seen_tids:
+            seen_tids.add(key)
+            events.append({"name": "thread_name", "ph": "M",
+                           "pid": str(ev["pid"]), "tid": str(ev["tid"]),
+                           "args": {"name": str(ev["tid"])}})
+        events.append(ev)
     other_data = {
         "schema_version": TRACE_SCHEMA_VERSION,
         "clock": "step",                # ts = step * 1000 + sub-tick
         "dropped_events": dropped,
     }
+    if measured:
+        other_data["measured_samples"] = len(measured)
     if other:
         other_data.update(other)
     return {
@@ -85,13 +105,16 @@ def chrome_trace_events(span_events, *, dropped: int = 0,
     }
 
 
-def chrome_trace(tracer: SpanTracer) -> dict:
+def chrome_trace(tracer: SpanTracer, *,
+                 measured: Optional[List[dict]] = None) -> dict:
     """Full Trace-Event-Format document (``traceEvents`` + metadata)."""
-    return chrome_trace_events(tracer.events, dropped=tracer.dropped)
+    return chrome_trace_events(tracer.events, dropped=tracer.dropped,
+                               measured=measured)
 
 
-def write_chrome_trace(tracer: SpanTracer, path: str) -> dict:
-    doc = chrome_trace(tracer)
+def write_chrome_trace(tracer: SpanTracer, path: str, *,
+                       measured: Optional[List[dict]] = None) -> dict:
+    doc = chrome_trace(tracer, measured=measured)
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)
         f.write("\n")
@@ -109,6 +132,11 @@ def validate(doc: dict, *, warnings: Optional[list] = None) -> List[str]:
 
     - every event has ``ph``/``name``/``pid``/``tid``; non-metadata events
       have a numeric ``ts`` that is non-decreasing per (pid, tid) track
+    - every ``ts`` (and ``dur``, when present) is an INTEGER value: the
+      deterministic step clock only produces ``step*1000 + sub-tick``, so a
+      fractional timestamp means a wall-clock (``ProfClock``) value leaked
+      into a deterministic field — measured seconds belong in ``args``
+      (the ``measured`` track keeps wall time there for exactly this rule)
     - ``B``/``E`` slice stacks balance per (pid, tid) and never go negative
     - ``b``/``e`` async spans balance per (cat, id, name), end-after-begin
     - every flow start (``s``) has a matching finish (``f``) with the same
@@ -153,6 +181,17 @@ def validate(doc: dict, *, warnings: Optional[list] = None) -> List[str]:
         if not isinstance(ts, (int, float)):
             errors.append(f"event {i} ({ev['name']}): missing/non-numeric ts")
             continue
+        if float(ts) != int(ts):
+            errors.append(
+                f"event {i} ({ev['name']}): non-integral ts {ts!r} — "
+                f"wall-clock value leaked into a step-clocked field "
+                f"(measured seconds belong in args, not ts)")
+        dur = ev.get("dur")
+        if dur is not None and (not isinstance(dur, (int, float))
+                                or float(dur) != int(dur)):
+            errors.append(
+                f"event {i} ({ev['name']}): non-integral dur {dur!r} — "
+                f"wall-clock value leaked into a step-clocked field")
         track = (ev["pid"], ev["tid"])
         if ts < last_ts.get(track, float("-inf")):
             errors.append(f"event {i} ({ev['name']}): ts regressed on "

@@ -21,13 +21,17 @@ gate asserts at least one flip in the heterogeneous-tier smoke run, and
 each re-fit lands in the trace as a ``fleet/refit`` instant carrying the
 flip list.
 
-Note the honest shape of the demonstration: in this simulation, live op
-timings are priced by the same analytic model ``choose_path`` falls back
-to, so a re-fit from a *clean* start converges to the decisions already
-being made (a no-op — and that's correct behavior, not a failure).  The
-interesting case is a stale/skewed warm-start table, which the re-fit
-visibly overwrites with measured reality.  ``benchmarks/bench_obs.py``
-arms exactly such a table to exercise the loop.
+Two sample streams can feed the fit.  The default (``sample_source=None``)
+fits the analytic model stream: live op timings are priced by the same
+model ``choose_path`` falls back to, so a re-fit from a *clean* start
+converges to the decisions already being made (a no-op — correct behavior,
+not a failure); the interesting case is a stale/skewed warm-start table,
+which the re-fit visibly overwrites.  With a wall-clock profiler attached
+(``repro.obs.prof``), ``sample_source="wallclock"`` fits only the profiler's
+*measured* samples instead — the table that gets hot-swapped then carries
+``source="wallclock"`` provenance down to its profiles, closing the paper's
+adapt-from-measurement loop with genuinely measured time rather than model
+echo.  ``benchmarks/bench_obs.py`` exercises both shapes.
 """
 from __future__ import annotations
 
@@ -74,7 +78,8 @@ class OnlineRefitter:
                  probe_sizes: Sequence[int] = PROBE_SIZES,
                  probe_tiers: Sequence[str] = PROBE_TIERS,
                  probe_wis: Sequence[int] = PROBE_WIS,
-                 tracer=None):
+                 tracer=None,
+                 sample_source: Optional[str] = None):
         if period_steps <= 0:
             raise ValueError("period_steps must be positive (0 = use no "
                              "refitter at all)")
@@ -85,6 +90,9 @@ class OnlineRefitter:
         self.probe_tiers = tuple(probe_tiers)
         self.probe_wis = tuple(probe_wis)
         self.tracer = tracer
+        # telemetry provenance stream to fit (None = the model stream;
+        # "wallclock" = measured profiler samples only)
+        self.sample_source = sample_source
         self.last_refit_step = -1
         self.history: List[RefitEvent] = []
 
@@ -103,6 +111,9 @@ class OnlineRefitter:
 
     def _nsamples(self) -> int:
         tel = self.ctx.telemetry
+        count = getattr(tel, "nsamples", None)
+        if count is not None:
+            return count(self.sample_source)
         buckets = getattr(tel, "buckets", None) or {}
         return sum(len(b.samples) for b in buckets.values())
 
@@ -120,7 +131,8 @@ class OnlineRefitter:
     def refit(self, step: int, *, nsamples: Optional[int] = None) -> RefitEvent:
         """Unconditional re-fit + hot-swap; records and returns the event."""
         before = self._probe()
-        tbl = self.ctx.fit_tuning_table(arm=True)
+        tbl = self.ctx.fit_tuning_table(arm=True,
+                                        sample_source=self.sample_source)
         after = self._probe()
         changed = [(t, wi, n, before[(t, wi, n)], after[(t, wi, n)])
                    for (t, wi, n) in before
@@ -136,7 +148,8 @@ class OnlineRefitter:
             self.tracer.instant(
                 "refit", "fleet", "fleet", "tuner",
                 step=step, nsamples=ev.nsamples, ncutovers=ev.ncutovers,
-                decisions_changed=len(changed))
+                decisions_changed=len(changed),
+                source=self.sample_source or "model")
         return ev
 
     def decisions_changed(self) -> int:

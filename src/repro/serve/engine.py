@@ -134,8 +134,23 @@ class Engine:
         bank cache keeps only non-paged state; its paged leaves stay zero.
         Returns ``(new_slots, tokens, heap)``."""
         cache = view.assemble(heap, slots.cache)
-        logits, new_cache = self._decode(self.params, slots.tok[:, None],
-                                         slots.pos, cache)
+        pf = getattr(ctx, "prof", None)
+        if pf is not None and pf.enabled:
+            # the paged-attention kernel region proper: assembled K/V in,
+            # next-token logits out.  nbytes = assembled cache footprint
+            # (static .nbytes attrs — no device sync to compute the label)
+            import jax as _jax
+            kv_bytes = sum(leaf.nbytes
+                           for leaf in _jax.tree_util.tree_leaves(cache))
+            with pf.scope("paged_attn", nbytes=kv_bytes, path="engine",
+                          tier="local",
+                          work_items=int(slots.active.sum())) as ps:
+                logits, new_cache = self._decode(
+                    self.params, slots.tok[:, None], slots.pos, cache)
+                logits = ps(logits)
+        else:
+            logits, new_cache = self._decode(self.params, slots.tok[:, None],
+                                             slots.pos, cache)
         tok = self._sample(logits, key, temperature)
         heap = view.writeback(ctx, heap, new_cache, slots.pos, slots.active)
         mask = jnp.asarray(slots.active)

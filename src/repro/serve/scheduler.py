@@ -319,12 +319,24 @@ class DisaggScheduler:
         self._key = jax.random.key(scfg.seed)
         # trace process track: this scheduler's pod (fleet pods are nodes)
         self._trace_pid = f"pod{ctx.node_of(self.prefill_pes[0])}"
+        # cached KV sizes for profiler scope labels (bytes moved/read per
+        # token / per block) — computed once, consulted only when profiling
+        lay = pool.layout
+        self._block_bytes = lay.block_bytes
+        self._token_bytes = lay.block_bytes // max(1, lay.block_tokens)
 
     # ------------------------------------------------------------- tracing
     def _tracer(self):
         """Context tracer when recording, else None (guard hot paths)."""
         tr = getattr(self.ctx, "tracer", None)
         return tr if tr is not None and tr.enabled else None
+
+    def _prof(self):
+        """Wall-clock profiler when measuring, else None (guard hot paths).
+        Mirrors :meth:`_tracer`; the profiler's perf_counter values stay in
+        its own samples/wallclock buckets, never in step-clocked state."""
+        pf = getattr(self.ctx, "prof", None)
+        return pf if pf is not None and pf.enabled else None
 
     def _trace_phase(self, req: Request, phase: Optional[str],
                      end_args: Optional[dict] = None, **begin_args) -> None:
@@ -481,9 +493,19 @@ class DisaggScheduler:
         stream — all blocks issued, waiting slot-less for a decode slot.
         Parked streams keep draining under other requests' compute and bind
         a slot the moment one frees (tail + header only)."""
+        pf = self._prof()
         for req in list(self.streaming):
             st = req.stream
-            self.heap = self.migrator.stream_flush(self.heap, st)
+            if pf is not None:
+                tier = self.ctx.tier(st.src_pe, st.dst_pe)
+                with pf.scope("stream_flush",
+                              nbytes=st.sent * self._block_bytes,
+                              path="proxy" if tier == "dcn" else "direct",
+                              tier=tier,
+                              work_items=self.migrator.work_items) as ps:
+                    self.heap = ps(self.migrator.stream_flush(self.heap, st))
+            else:
+                self.heap = self.migrator.stream_flush(self.heap, st)
             if st.pending:
                 self.heap = self.migrator.stream_chunk(self.heap, st,
                                                        self.stream_chunks)
@@ -495,7 +517,17 @@ class DisaggScheduler:
                                   end_args={"chunks": st.chunks,
                                             "blocks_sent": st.sent})
         for req in self.policy.waiting_order(list(self.parked)):
-            self.heap = self.migrator.stream_flush(self.heap, req.stream)
+            st = req.stream
+            if pf is not None:
+                tier = self.ctx.tier(st.src_pe, st.dst_pe)
+                with pf.scope("stream_flush",
+                              nbytes=st.sent * self._block_bytes,
+                              path="proxy" if tier == "dcn" else "direct",
+                              tier=tier,
+                              work_items=self.migrator.work_items) as ps:
+                    self.heap = ps(self.migrator.stream_flush(self.heap, st))
+            else:
+                self.heap = self.migrator.stream_flush(self.heap, st)
             self._try_bind(req)
 
     def _phase_prefill(self) -> None:
@@ -530,8 +562,17 @@ class DisaggScheduler:
                     tr.begin("prefill", "sched", self._trace_pid, f"pe{pe}",
                              rid=req.rid, prompt_len=req.prompt_len)
                 key = jax.random.fold_in(self._key, req.rid)
-                tok, _, cache1 = self.engine.prefill_request(
-                    req.batch, key, self.scfg.temperature)
+                pf = self._prof()
+                if pf is not None:
+                    with pf.scope("serve_prefill",
+                                  nbytes=req.prompt_len * self._token_bytes,
+                                  path="engine", tier="local") as ps:
+                        tok, _, cache1 = self.engine.prefill_request(
+                            req.batch, key, self.scfg.temperature)
+                        tok = ps(tok)
+                else:
+                    tok, _, cache1 = self.engine.prefill_request(
+                        req.batch, key, self.scfg.temperature)
                 req.first_token = tok
                 req.prefill_cache = cache1
                 self.stats.prefills += 1
@@ -1044,7 +1085,24 @@ class DisaggScheduler:
                          slots=int(bank.active.sum()))
             # per-PE fold: decode PEs must not share sampling noise
             key = jax.random.fold_in(self._step_key, pe)
-            if self.paged:
+            pf = self._prof()
+            if pf is not None:
+                # KV bytes the step reads: total context tokens across the
+                # PE's active slots (positions) at per-token KV size
+                ctx_tokens = int(bank.pos[bank.active].sum())
+                with pf.scope("serve_decode",
+                              nbytes=ctx_tokens * self._token_bytes,
+                              path="engine", tier="local",
+                              work_items=int(bank.active.sum())) as ps:
+                    if self.paged:
+                        bank, toks, self.heap = self.engine.decode_slots_paged(
+                            bank, key, self.ctx, self.heap, self.views[pe],
+                            self.scfg.temperature)
+                    else:
+                        bank, toks = self.engine.decode_slots(
+                            bank, key, self.scfg.temperature)
+                    toks = ps(toks)
+            elif self.paged:
                 bank, toks, self.heap = self.engine.decode_slots_paged(
                     bank, key, self.ctx, self.heap, self.views[pe],
                     self.scfg.temperature)
@@ -1122,6 +1180,9 @@ class DisaggScheduler:
             # monotonic-max: in fleet mode the driver already advanced the
             # shared clock to this step, so this is a no-op there
             tr.clock.set_step(self._step)
+        pf = self._prof()
+        if pf is not None:
+            pf.set_step(self._step)
         self._phase_recover()
         self._phase_prefill()
         self._phase_admit()

@@ -69,20 +69,32 @@ def fit_linear(samples: Sequence[Tuple[int, float]]) -> Optional[PathProfile]:
 
 
 def fit_profiles(sink: telemetry_mod.TelemetrySink, *,
-                 min_samples: int = MIN_SAMPLES
+                 min_samples: int = MIN_SAMPLES,
+                 sample_source: Optional[str] = None
                  ) -> Dict[Tuple[str, str, int], PathProfile]:
-    """Fit every (path, tier[, work_items]) combination with enough samples."""
+    """Fit every (path, tier[, work_items]) combination with enough samples.
+
+    ``sample_source`` selects one provenance stream from the sink (e.g.
+    ``"wallclock"`` to fit only measured profiler samples); ``None`` keeps
+    the historical behavior of fitting the analytic model stream.  Each
+    fitted profile is stamped with the stream it came from."""
     profiles: Dict[Tuple[str, str, int], PathProfile] = {}
-    for tier in sink.tiers():
-        for wi in sink.work_item_keys(path="direct", tier=tier):
+    label = sample_source or telemetry_mod.MODEL_SOURCE
+    for tier in sink.tiers(source=sample_source):
+        for wi in sink.work_item_keys(path="direct", tier=tier,
+                                      source=sample_source):
             prof = fit_linear(sink.samples(path="direct", tier=tier,
-                                           work_items=wi, op_ok=_is_p2p))
+                                           work_items=wi, op_ok=_is_p2p,
+                                           source=sample_source))
             if prof is not None and prof.nsamples >= min_samples:
+                prof.source = label
                 profiles[("direct", tier, wi)] = prof
         for path in ("engine", "proxy"):
             prof = fit_linear(sink.samples(path=path, tier=tier,
-                                           op_ok=_is_p2p))
+                                           op_ok=_is_p2p,
+                                           source=sample_source))
             if prof is not None and prof.nsamples >= min_samples:
+                prof.source = label
                 profiles[(path, tier, ANY_WI)] = prof
     return profiles
 
@@ -104,9 +116,15 @@ def derive_cutovers(profiles: Dict[Tuple[str, str, int], PathProfile]
 
 def build_table(sink: telemetry_mod.TelemetrySink, *,
                 min_samples: int = MIN_SAMPLES,
-                source: str = "measured") -> TuningTable:
-    """Sink -> fitted profiles -> measured cutover table (the whole pipeline)."""
-    profiles = fit_profiles(sink, min_samples=min_samples)
+                source: str = "measured",
+                sample_source: Optional[str] = None) -> TuningTable:
+    """Sink -> fitted profiles -> measured cutover table (the whole pipeline).
+
+    ``source`` labels the table artifact; ``sample_source`` restricts the fit
+    to one telemetry provenance stream (``"wallclock"`` fits only measured
+    samples — the table the online refitter arms when profiling is on)."""
+    profiles = fit_profiles(sink, min_samples=min_samples,
+                            sample_source=sample_source)
     return TuningTable(cutovers=derive_cutovers(profiles), profiles=profiles,
                        source=source)
 

@@ -36,11 +36,24 @@ class PathProfile:
     bw: float                             # B/s — effective bandwidth (may be inf)
     nsamples: int = 0
     resid: float = 0.0                    # RMS residual of the fit (s)
+    source: str = ""                      # sample provenance ("model",
+    #                                       "wallclock", ""=pre-provenance)
 
     def time(self, nbytes: int) -> float:
         if not math.isfinite(self.bw) or self.bw <= 0:
             return self.alpha
         return self.alpha + nbytes / self.bw
+
+
+def _merge_source(a: str, b: str) -> str:
+    """Provenance of a sample-weighted profile merge: identical (or absent)
+    labels pass through, mixes are recorded explicitly so ``"wallclock"``
+    provenance is never silently laundered into a model label."""
+    if a == b or not b:
+        return a
+    if not a:
+        return b
+    return f"{a}+{b}"
 
 
 @dataclasses.dataclass
@@ -97,7 +110,8 @@ class TuningTable:
                 alpha=wa * mine.alpha + wb * theirs.alpha,
                 bw=(1.0 / inv_bw) if inv_bw > 0 else float("inf"),
                 nsamples=n,
-                resid=max(mine.resid, theirs.resid))
+                resid=max(mine.resid, theirs.resid),
+                source=_merge_source(mine.source, theirs.source))
         def backing(tbl: "TuningTable", tier: str, wi: int) -> int:
             d = tbl.profiles.get(("direct", tier, wi))
             e = (tbl.profiles.get(("engine", tier, wi))
@@ -134,6 +148,7 @@ class TuningTable:
                     "bw": (None if not math.isfinite(prof.bw) else prof.bw),
                     "nsamples": prof.nsamples,
                     "resid": prof.resid,
+                    "source": prof.source,
                 }
                 for (p, t, wi), prof in sorted(self.profiles.items())
             },
@@ -153,7 +168,8 @@ class TuningTable:
                 alpha=float(val["alpha"]),
                 bw=float("inf") if bw is None else float(bw),
                 nsamples=int(val.get("nsamples", 0)),
-                resid=float(val.get("resid", 0.0)))
+                resid=float(val.get("resid", 0.0)),
+                source=str(val.get("source", "")))
         return cls(cutovers=cutovers, profiles=profiles,
                    source=str(obj.get("source", "loaded")),
                    version=int(obj.get("version", 1)))

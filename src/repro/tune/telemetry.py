@@ -14,6 +14,17 @@ Memory is bounded in both dimensions: the trace drops its oldest half when it
 exceeds ``max_trace``, and each bucket's reservoir decimates (keep every other
 sample, double the stride) when it reaches ``max_samples`` — so long runs keep
 a spread of samples across time instead of only the newest.
+
+Provenance (``OpRecord.source``): records default to ``"model"`` — the
+deterministic analytic pricing stream that existed before the measured-time
+layer.  The wall-clock profiler (``repro.obs.prof``) and the benchmark
+``best_of(record=...)`` hook emit ``source="wallclock"`` records instead.
+Each source aggregates into its OWN bucket map so measured CPU wall clock can
+never contaminate the modeled comm clock (``total_time`` and the public
+``buckets`` attribute remain the model stream — that invariant is what keeps
+profiling-on runs bitwise-identical in every deterministic output).  Only the
+model stream lands in the bounded ``trace`` (the back-compat ledger); other
+sources are aggregate-only.
 """
 from __future__ import annotations
 
@@ -21,6 +32,11 @@ import dataclasses
 from typing import Dict, Iterable, List, Optional, Tuple
 
 Key = Tuple[str, str, str, int]          # (op, path, tier, work_items)
+
+#: provenance of the default (analytically priced) record stream
+MODEL_SOURCE = "model"
+#: provenance of measured wall-clock samples (profiler / best_of records)
+WALLCLOCK_SOURCE = "wallclock"
 
 
 @dataclasses.dataclass
@@ -33,6 +49,7 @@ class OpRecord:
     tier: str
     t_sec: float
     work_items: int = 1
+    source: str = MODEL_SOURCE
 
 
 def _log2_bucket(nbytes: int) -> int:
@@ -106,6 +123,9 @@ class NullSink(Sink):
     def total_time(self) -> float:
         return 0.0
 
+    def source_time(self, source: str = MODEL_SOURCE) -> float:
+        return 0.0
+
     def clear(self) -> None:
         pass
 
@@ -117,45 +137,78 @@ class TelemetrySink(Sink):
         self.max_samples_per_bucket = max_samples_per_bucket
         self.trace: List[OpRecord] = []
         self.buckets: Dict[Key, StatBucket] = {}
+        # per-provenance bucket maps; "model" aliases self.buckets so every
+        # pre-provenance consumer (comm clock, tests, merge of old sinks)
+        # keeps reading exactly the stream it always read
+        self.sources: Dict[str, Dict[Key, StatBucket]] = {
+            MODEL_SOURCE: self.buckets}
 
     # -------------------------------------------------------------- record
     def record(self, rec: OpRecord) -> None:
-        self.trace.append(rec)
-        if len(self.trace) > self.max_trace:
-            # amortized drop-oldest — preferring to keep pending nbi markers
-            # (rma.quiet() completes them later), but the bound always wins:
-            # if pending ops alone overflow it, the oldest are dropped too
-            half = len(self.trace) // 2
-            pending = [r for r in self.trace[:half]
-                       if r.op.endswith("(pending)")]
-            self.trace[:half] = pending
+        source = getattr(rec, "source", MODEL_SOURCE) or MODEL_SOURCE
+        if source == MODEL_SOURCE:
+            # only the deterministic model stream feeds the ledger trace:
+            # wall-clock records interleaving there would perturb every
+            # "last recorded op" consumer when profiling is on
+            self.trace.append(rec)
             if len(self.trace) > self.max_trace:
-                del self.trace[: len(self.trace) - self.max_trace]
+                # amortized drop-oldest — preferring to keep pending nbi
+                # markers (rma.quiet() completes them later), but the bound
+                # always wins: if pending ops alone overflow it, the oldest
+                # are dropped too
+                half = len(self.trace) // 2
+                pending = [r for r in self.trace[:half]
+                           if r.op.endswith("(pending)")]
+                self.trace[:half] = pending
+                if len(self.trace) > self.max_trace:
+                    del self.trace[: len(self.trace) - self.max_trace]
+        buckets = self.sources.get(source)
+        if buckets is None:
+            buckets = self.sources[source] = {}
         key = (rec.op, rec.path, rec.tier, rec.work_items)
-        bucket = self.buckets.get(key)
+        bucket = buckets.get(key)
         if bucket is None:
-            bucket = self.buckets[key] = StatBucket(
+            bucket = buckets[key] = StatBucket(
                 max_samples=self.max_samples_per_bucket)
         bucket.add(rec.nbytes, rec.t_sec)
 
     # --------------------------------------------------------------- query
+    def _source_buckets(self, source: Optional[str]) -> Dict[Key, StatBucket]:
+        """Bucket map for one provenance; ``None`` selects the model stream
+        (the pre-provenance default, so every legacy caller is unchanged)."""
+        return self.sources.get(source or MODEL_SOURCE, {})
+
     def total_time(self) -> float:
-        """Total modeled/measured time over ALL recorded ops (stable even
-        after the bounded trace has dropped old records)."""
+        """Total MODELED time over all recorded ops (stable even after the
+        bounded trace has dropped old records).  Deliberately excludes
+        wall-clock sources: this is the deterministic comm clock."""
         return sum(b.time_total for b in self.buckets.values())
 
     def total_count(self) -> int:
         return sum(b.count for b in self.buckets.values())
 
+    def source_time(self, source: str = MODEL_SOURCE) -> float:
+        """Total recorded time for ONE provenance stream."""
+        return sum(b.time_total
+                   for b in self._source_buckets(source).values())
+
+    def nsamples(self, source: Optional[str] = None) -> int:
+        """Retained reservoir samples for one provenance stream."""
+        return sum(len(b.samples)
+                   for b in self._source_buckets(source).values())
+
     def samples(self, *, path: str, tier: str,
                 work_items: Optional[int] = None,
                 op: Optional[str] = None,
-                op_ok=None) -> List[Tuple[int, float]]:
+                op_ok=None,
+                source: Optional[str] = None) -> List[Tuple[int, float]]:
         """All retained (nbytes, t_sec) samples matching the filter.
         ``op_ok`` is an optional predicate over the op name (e.g. to keep
-        collective timings out of a point-to-point fit)."""
+        collective timings out of a point-to-point fit); ``source`` selects
+        a provenance stream (default: the model stream)."""
         out: List[Tuple[int, float]] = []
-        for (k_op, k_path, k_tier, k_wi), b in self.buckets.items():
+        for (k_op, k_path, k_tier, k_wi), b in \
+                self._source_buckets(source).items():
             if k_path != path or k_tier != tier:
                 continue
             if work_items is not None and k_wi != work_items:
@@ -167,26 +220,30 @@ class TelemetrySink(Sink):
             out.extend(b.samples)
         return out
 
-    def work_item_keys(self, *, path: str, tier: str) -> List[int]:
+    def work_item_keys(self, *, path: str, tier: str,
+                       source: Optional[str] = None) -> List[int]:
         """Distinct work-group sizes observed for (path, tier)."""
-        keys = {k_wi for (_, k_path, k_tier, k_wi) in self.buckets
+        keys = {k_wi for (_, k_path, k_tier, k_wi)
+                in self._source_buckets(source)
                 if k_path == path and k_tier == tier}
         return sorted(keys)
 
-    def tiers(self) -> List[str]:
-        return sorted({k_tier for (_, _, k_tier, _) in self.buckets})
+    def tiers(self, source: Optional[str] = None) -> List[str]:
+        return sorted({k_tier for (_, _, k_tier, _)
+                       in self._source_buckets(source)})
 
     # ------------------------------------------------------------ maintain
     def clear(self) -> None:
         self.trace = []
         self.buckets = {}
+        self.sources = {MODEL_SOURCE: self.buckets}
 
-    def merge(self, other: "TelemetrySink") -> None:
-        """Fold another sink's aggregates into this one (trace not merged)."""
-        for key, b in other.buckets.items():
-            mine = self.buckets.get(key)
+    def _merge_buckets(self, mine_map: Dict[Key, StatBucket],
+                       other_map: Dict[Key, StatBucket]) -> None:
+        for key, b in other_map.items():
+            mine = mine_map.get(key)
             if mine is None:
-                mine = self.buckets[key] = StatBucket(
+                mine = mine_map[key] = StatBucket(
                     max_samples=self.max_samples_per_bucket)
             mine.count += b.count
             mine.bytes_total += b.bytes_total
@@ -211,15 +268,37 @@ class TelemetrySink(Sink):
             mine._stride = max(mine._stride, b._stride)
             mine._seen += b._seen
 
+    def merge(self, other: "TelemetrySink") -> None:
+        """Fold another sink's aggregates into this one, source by source
+        (trace not merged)."""
+        other_sources = getattr(other, "sources", None)
+        if other_sources is None:                # pre-provenance sink
+            other_sources = {MODEL_SOURCE: other.buckets}
+        for source, other_map in other_sources.items():
+            if source == MODEL_SOURCE:
+                mine_map = self.buckets
+            else:
+                mine_map = self.sources.setdefault(source, {})
+            self._merge_buckets(mine_map, other_map)
+
     def snapshot(self) -> dict:
-        """JSON-able aggregate view (no raw trace)."""
+        """JSON-able aggregate view (no raw trace).  Model-stream buckets
+        keep the historical key format; other sources are suffixed
+        ``@source``."""
+        buckets = {
+            f"{op}/{path}/{tier}/{wi}": b.snapshot()
+            for (op, path, tier, wi), b in sorted(self.buckets.items())
+        }
+        for source in sorted(self.sources):
+            if source == MODEL_SOURCE:
+                continue
+            for (op, path, tier, wi), b in sorted(
+                    self.sources[source].items()):
+                buckets[f"{op}/{path}/{tier}/{wi}@{source}"] = b.snapshot()
         return {
             "total_count": self.total_count(),
             "total_time": self.total_time(),
-            "buckets": {
-                f"{op}/{path}/{tier}/{wi}": b.snapshot()
-                for (op, path, tier, wi), b in sorted(self.buckets.items())
-            },
+            "buckets": buckets,
         }
 
 

@@ -1,0 +1,409 @@
+"""Measured-time profiling layer acceptance (repro.obs.prof / calibrate):
+
+- clock segregation: profiling on vs off => bitwise-identical outputs,
+  fleet report, and Chrome-trace document; wall-clock values never reach a
+  deterministic ``ts`` (export.validate's integral rule, + negatives),
+- scope pairing: measured wall seconds ride next to the analytic model's
+  pricing of the same region; wallclock records land in their own telemetry
+  provenance stream and never move the modeled comm clock,
+- estimator/refit provenance: ``sample_source="wallclock"`` fits only
+  measured samples and stamps ``source="wallclock"`` through table JSON,
+  merge, and the online refitter's hot-swap,
+- calibration report: deterministic from a canned sample file, ranked
+  divergence, honest unmodeled coverage, step-clocked measured track,
+- benchmark hooks: ``best_of`` trial env knob, details dict, and the
+  trimmed-median wallclock record.
+"""
+import functools
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base as cfgbase
+from repro.core import context
+from repro.models import model
+from repro.obs import (Obs, OnlineRefitter, calibrate_mod, chrome_trace,
+                       load_obs_env, prof_mod, validate)
+from repro.obs.prof import NULL_PROF, ProfClock, Profiler, ProfSample
+from repro.obs.tracer import STEP_QUANTUM
+from repro.serve.engine import Engine
+from repro.serve.frontend import Fleet, FleetConfig, TenantSpec, TrafficEngine
+from repro.tune import estimator, table as table_mod
+from repro.tune import telemetry as telemetry_mod
+
+MAXLEN = 24
+NEW = 4
+
+
+@functools.lru_cache(maxsize=1)
+def _engine():
+    cfg = cfgbase.reduced(cfgbase.get_config("qwen3_4b"))
+    params = model.init_params(jax.random.key(0), cfg)
+    return cfg, Engine(cfg, params, max_len=MAXLEN)
+
+
+def _serve(obs):
+    cfg, engine = _engine()
+    fleet = Fleet(FleetConfig(
+        n_pods=2, prefill_per_pod=1, decode_per_pod=2, num_slots=2,
+        kv_blocks=96, block_tokens=4, max_len=MAXLEN, max_new=NEW,
+        stream_chunks=1, admission="slo", router="affinity", seed=11),
+        engine=engine, obs=obs)
+    traffic = TrafficEngine(
+        [TenantSpec("chat", weight=2.0, prompt_lens=(8,), max_new=(NEW,),
+                    slo="interactive"),
+         TenantSpec("scan", weight=1.0, prompt_lens=(12,), max_new=(NEW,),
+                    slo="batch")],
+        rate=1.0, vocab=cfg.vocab_size, seed=17)
+    rep = fleet.run(traffic.schedule(6), max_steps=1500)
+    rep.pop("obs", None)
+    return fleet, rep
+
+
+# ---------------------------------------------------------------------------
+# clock segregation: profiling on/off is bitwise identical
+# ---------------------------------------------------------------------------
+
+
+def test_profiling_off_is_bitwise_identical():
+    """The tentpole contract: a recording wall-clock profiler must not
+    change one bit of any deterministic output — tokens, fleet report, or
+    the step-clocked Chrome trace (measured data is an opt-in extra track,
+    never mixed into the base document)."""
+    fleet_off, rep_off = _serve(Obs(trace=True))
+    fleet_on, rep_on = _serve(Obs(trace=True, prof=True))
+
+    assert rep_off == rep_on
+    outs_off, outs_on = fleet_off.outputs(), fleet_on.outputs()
+    assert set(outs_off) == set(outs_on)
+    for idx in outs_off:
+        np.testing.assert_array_equal(outs_off[idx], outs_on[idx])
+
+    doc_off = chrome_trace(fleet_off.obs.tracer)
+    doc_on = chrome_trace(fleet_on.obs.tracer)
+    assert json.dumps(doc_off, sort_keys=True) == \
+        json.dumps(doc_on, sort_keys=True)
+    assert validate(doc_on) == []
+
+    # the profiler DID measure the run (this test must not pass vacuously)
+    prof = fleet_on.obs.prof
+    assert prof is not None and len(prof.samples) > 0
+    assert {"serve_prefill", "serve_decode"} <= {s.op for s in prof.samples}
+    # ...and its wallclock telemetry stayed in its own provenance stream
+    tel = fleet_on.ctx.telemetry
+    assert tel.nsamples("wallclock") > 0
+    assert tel.source_time("wallclock") > 0.0
+    assert all(r.source == telemetry_mod.MODEL_SOURCE for r in tel.trace)
+
+
+def test_measured_track_is_additive_and_step_clocked():
+    fleet, _ = _serve(Obs(trace=True, prof=True))
+    tracer, prof = fleet.obs.tracer, fleet.obs.prof
+    track = calibrate_mod.measured_track_events(prof.samples)
+    assert len(track) == len(prof.samples)
+    doc_with = chrome_trace(tracer, measured=track)
+    assert validate(doc_with) == []
+    # strictly additive: re-exporting without the track gives the base doc
+    base = chrome_trace(tracer)
+    assert json.dumps(chrome_trace(tracer), sort_keys=True) == \
+        json.dumps(base, sort_keys=True)
+    assert len(doc_with["traceEvents"]) > len(base["traceEvents"])
+    # step-clocked instants: integral ts on the measured pid, wall time
+    # only in args
+    for ev in track:
+        assert ev["pid"] == "measured" and ev["ph"] == "i"
+        assert isinstance(ev["ts"], int)
+        assert ev["ts"] // STEP_QUANTUM == ev["args"]["step"]
+        assert "wall_us" in ev["args"]
+
+
+def test_validate_rejects_wallclock_shaped_timestamps():
+    """The integral-ts rule is the leak detector: a perf_counter value
+    sneaking into ``ts``/``dur`` shows up as a fractional timestamp."""
+    def doc(**ev):
+        base = {"name": "x", "cat": "c", "ph": "i", "s": "t",
+                "pid": "p", "tid": "t", "ts": 0}
+        base.update(ev)
+        return {"traceEvents": [base]}
+
+    assert validate(doc()) == []
+    errs = validate(doc(ts=1.5))
+    assert any("non-integral ts" in e for e in errs)
+    errs = validate(doc(ph="X", dur=2.5))
+    assert any("non-integral dur" in e for e in errs)
+    assert validate(doc(ts=3.0)) == []            # integral float is fine
+
+
+# ---------------------------------------------------------------------------
+# profiler scopes
+# ---------------------------------------------------------------------------
+
+
+class _ScriptClock(ProfClock):
+    """Deterministic stand-in for perf_counter."""
+
+    def __init__(self, vals):
+        self.vals = list(vals)
+
+    def now(self):
+        return self.vals.pop(0)
+
+
+def test_scope_pairs_wall_with_model_delta():
+    ctx, _ = context.init(npes=2, node_size=2)
+    prof = Profiler(clock=_ScriptClock([10.0, 10.5])).attach(ctx)
+    assert ctx.prof is prof
+    prof.set_step(5)
+    t_model0 = ctx.telemetry.total_time()
+
+    with prof.scope("copy", nbytes=4096, path="direct", tier="ici",
+                    work_items=4) as ps:
+        # the analytic model prices one op inside the scope
+        ctx.telemetry.record(telemetry_mod.OpRecord(
+            "put", 4096, "direct", "ici", 0.25, 4))
+        assert ps(("x", 1)) == ("x", 1)           # block_until_ready passthru
+
+    (s,) = prof.samples
+    assert (s.op, s.nbytes, s.path, s.tier, s.work_items) == \
+        ("copy", 4096, "direct", "ici", 4)
+    assert s.step == 5
+    assert s.wall_s == pytest.approx(0.5)
+    assert s.model_s == pytest.approx(0.25)
+
+    # the wallclock record went to its own stream: the modeled comm clock
+    # moved only by the model op, and the ledger trace holds no wallclock row
+    tel = ctx.telemetry
+    assert tel.total_time() == pytest.approx(t_model0 + 0.25)
+    assert tel.source_time("wallclock") == pytest.approx(0.5)
+    key = ("copy", "direct", "ici", 4)
+    assert key in tel.sources["wallclock"] and key not in tel.buckets
+    assert all(r.source == telemetry_mod.MODEL_SOURCE for r in tel.trace)
+
+    prof.set_step(3)                              # monotonic max, like tracer
+    assert prof.step == 5
+
+
+def test_null_prof_is_inert():
+    assert not NULL_PROF.enabled
+    sc = NULL_PROF.scope("copy", nbytes=1)
+    with sc as ps:
+        obj = object()
+        assert ps(obj) is obj
+    assert NULL_PROF.samples == []
+    ctx, _ = context.init(npes=2, node_size=2)
+    with pytest.raises(RuntimeError):
+        NULL_PROF.attach(ctx)                     # off == ctx.prof unset
+
+
+# ---------------------------------------------------------------------------
+# telemetry provenance streams
+# ---------------------------------------------------------------------------
+
+
+def _rec(op="put", nbytes=1024, path="direct", tier="ici", t=1e-6, wi=1,
+         source=telemetry_mod.MODEL_SOURCE):
+    return telemetry_mod.OpRecord(op, nbytes, path, tier, t, wi, source)
+
+
+def test_sink_source_segregation_merge_and_snapshot():
+    sink = telemetry_mod.TelemetrySink()
+    sink.record(_rec(t=1e-6))
+    sink.record(_rec(t=5e-3, source="wallclock"))
+    key = ("put", "direct", "ici", 1)
+
+    assert sink.buckets[key].count == 1           # model stream only
+    assert sink.sources["wallclock"][key].count == 1
+    assert sink.total_time() == pytest.approx(1e-6)
+    assert sink.source_time("wallclock") == pytest.approx(5e-3)
+    assert len(sink.trace) == 1                   # wallclock never ledgers
+    assert sink.nsamples() == 1 and sink.nsamples("wallclock") == 1
+    assert sink.tiers(source="wallclock") == ["ici"]
+    assert sink.samples(path="direct", tier="ici",
+                        source="wallclock") == [(1024, 5e-3)]
+
+    snap = sink.snapshot()
+    assert snap["buckets"]["put/direct/ici/1"]["count"] == 1
+    assert snap["buckets"]["put/direct/ici/1@wallclock"]["count"] == 1
+    assert snap["total_time"] == pytest.approx(1e-6)   # model clock only
+
+    other = telemetry_mod.TelemetrySink()
+    other.record(_rec(t=7e-3, source="wallclock"))
+    sink.merge(other)                             # source-by-source merge
+    assert sink.sources["wallclock"][key].count == 2
+    assert sink.buckets[key].count == 1
+
+
+# ---------------------------------------------------------------------------
+# estimator / table / refit provenance
+# ---------------------------------------------------------------------------
+
+
+def _wallclock_sink():
+    sink = telemetry_mod.TelemetrySink()
+    for n in (1 << 10, 1 << 12, 1 << 14, 1 << 16):
+        sink.record(_rec(nbytes=n, t=1e-6 + n / 1e9, source="wallclock"))
+    return sink
+
+
+def test_estimator_fits_only_the_requested_stream(tmp_path):
+    sink = _wallclock_sink()
+    tbl = estimator.build_table(sink, source="wallclock",
+                                sample_source="wallclock")
+    assert tbl.profiles and tbl.source == "wallclock"
+    assert all(p.source == "wallclock" for p in tbl.profiles.values())
+    # default fit reads the (empty) model stream — measured samples must
+    # never leak into a model-provenance table
+    assert not estimator.build_table(sink).profiles
+
+    path = str(tmp_path / "tuning.json")
+    tbl.save(path)
+    loaded = table_mod.TuningTable.load(path)
+    assert "wallclock" in loaded.source
+    assert all(p.source == "wallclock" for p in loaded.profiles.values())
+
+
+def test_merge_never_launders_wallclock_provenance():
+    assert table_mod._merge_source("wallclock", "wallclock") == "wallclock"
+    assert table_mod._merge_source("", "wallclock") == "wallclock"
+    assert table_mod._merge_source("wallclock", "") == "wallclock"
+    assert table_mod._merge_source("wallclock", "model") == "wallclock+model"
+
+    key = ("direct", "ici", 0)
+    a = table_mod.TuningTable(profiles={key: table_mod.PathProfile(
+        1e-6, 1e9, nsamples=4, source="wallclock")}, source="wallclock")
+    b = table_mod.TuningTable(profiles={key: table_mod.PathProfile(
+        2e-6, 2e9, nsamples=4, source="model")}, source="model")
+    merged = a.merge(b)
+    assert merged.profiles[key].source == "wallclock+model"
+    # one-sided keys pass provenance through untouched
+    only = a.merge(table_mod.TuningTable(source="model"))
+    assert only.profiles[key].source == "wallclock"
+
+
+def test_refitter_hot_swaps_a_measured_table():
+    ctx, _ = context.init(npes=2, node_size=2)
+    for n in (1 << 10, 1 << 12, 1 << 14, 1 << 16):
+        ctx.telemetry.record(_rec(nbytes=n, t=1e-6 + n / 1e9,
+                                  source="wallclock"))
+    rf = OnlineRefitter(ctx, period_steps=1, min_samples=1,
+                        sample_source="wallclock")
+    ev = rf.maybe_refit(1)
+    assert ev is not None and ev.nsamples == 4
+    tbl = ctx.tuning.table
+    assert tbl is not None and "wallclock" in tbl.source
+    assert tbl.profiles
+    assert all("wallclock" in p.source for p in tbl.profiles.values())
+
+
+# ---------------------------------------------------------------------------
+# calibration report
+# ---------------------------------------------------------------------------
+
+
+def _canned():
+    return (
+        [ProfSample(op="serve_decode", nbytes=4096, path="engine",
+                    tier="local", work_items=4, step=s, wall_s=2e-3,
+                    model_s=1e-3) for s in range(4)]
+        + [ProfSample(op="stream_flush", nbytes=65536, path="proxy",
+                      tier="dcn", work_items=8, step=0, wall_s=5e-3,
+                      model_s=5e-4),
+           ProfSample(op="serve_prefill", nbytes=8192, path="engine",
+                      tier="local", work_items=1, step=1, wall_s=3e-3,
+                      model_s=0.0)])
+
+
+def test_calibration_report_is_deterministic_and_ranked(tmp_path):
+    samples = _canned()
+    report = calibrate_mod.report_from_samples(samples)
+    assert report["samples"] == 6
+    assert report["populated_buckets"] == 2       # prefill is unmodeled
+    # worst divergence first: flush at 10x beats decode at 2x
+    assert [w["op"] for w in report["worst"]] == \
+        ["stream_flush", "serve_decode"]
+    assert report["worst"][0]["ratio_p50"] == pytest.approx(10.0)
+    assert report["worst"][1]["ratio_p50"] == pytest.approx(2.0)
+    # unmodeled coverage is reported honestly, not folded into a ratio
+    cov = report["coverage"]
+    assert cov["unmodeled_wall_s"] == pytest.approx(3e-3)
+    assert cov["unmodeled_wall_frac"] == pytest.approx(3e-3 / 16e-3)
+    by_op = {b["op"]: b for b in report["buckets"]}
+    assert by_op["serve_prefill"]["ratio"] is None
+    assert by_op["serve_prefill"]["modeled_n"] == 0
+
+    # byte-for-byte deterministic from a saved sample file
+    prof = Profiler(sink_records=False)
+    prof.samples = samples
+    path = str(tmp_path / "prof.json")
+    prof.save(path)
+    loaded = calibrate_mod.report_from_samples(prof_mod.load_samples(path))
+    assert json.dumps(loaded, sort_keys=True) == \
+        json.dumps(report, sort_keys=True)
+    assert calibrate_mod.render(report)           # CLI rendering never dies
+
+
+def test_overlay_and_sink_join():
+    overlay = calibrate_mod.measured_overlay(_canned())
+    assert overlay["compute"]["n"] == 5           # decode + prefill
+    assert overlay["wire"]["wall_s"] == pytest.approx(5e-3)
+    assert calibrate_mod.measured_overlay(
+        [ProfSample(op="weird", nbytes=1, path="p", tier="t", work_items=1,
+                    step=0, wall_s=1.0, model_s=0.0)])["other"]["n"] == 1
+
+    sink = telemetry_mod.TelemetrySink()
+    sink.record(_rec(t=1e-3))
+    sink.record(_rec(t=4e-3, source="wallclock"))
+    sink.record(_rec(op="lonely", t=9e-3, source="wallclock"))  # no model twin
+    rows = calibrate_mod.sink_join(sink)
+    assert [r["op"] for r in rows] == ["put"]     # only keys in BOTH streams
+    assert rows[0]["ratio"] == pytest.approx(4.0)
+
+
+# ---------------------------------------------------------------------------
+# benchmark hooks + env surface
+# ---------------------------------------------------------------------------
+
+
+def test_best_of_env_trials_details_and_record(monkeypatch):
+    from benchmarks import common
+    monkeypatch.setenv("ISHMEM_BENCH_TRIALS", "4")
+    details = {}
+    before = common.MEASURED.nsamples("wallclock")
+    best = common.best_of(lambda: None, discard=2, details=details,
+                          record=("test_measured_op", 512, "direct", "ici", 7))
+    assert details["trials"] == 4 and details["discarded"] == 2
+    assert best == details["min"] <= details["tmed"]
+    key = ("test_measured_op", "direct", "ici", 7)
+    bucket = common.MEASURED.sources["wallclock"][key]
+    assert bucket.count >= 1
+    assert common.MEASURED.nsamples("wallclock") > before
+    assert key not in common.MEASURED.buckets     # never the model stream
+
+    monkeypatch.setenv("ISHMEM_BENCH_TRIALS", "zero")
+    with pytest.raises(ValueError):
+        common._env_trials()
+    monkeypatch.setenv("ISHMEM_BENCH_TRIALS", "0")
+    with pytest.raises(ValueError):
+        common._env_trials()
+
+
+def test_trimmed_median():
+    from benchmarks.common import trimmed_median
+    assert trimmed_median([5.0]) == 5.0
+    assert trimmed_median([1.0, 2.0, 3.0, 4.0]) == 2.5     # small n: plain
+    assert trimmed_median([1.0, 2.0, 3.0, 4.0, 100.0]) == 3.0  # outlier cut
+    assert trimmed_median([100.0, 3.0, 1.0, 2.0, 4.0]) == 3.0  # order-free
+
+
+def test_obs_env_prof_and_calibration():
+    cfg = load_obs_env({})
+    assert not cfg.prof and not cfg.calibration and not cfg.enabled
+    cfg = load_obs_env({"ISHMEM_OBS_PROF": "1"})
+    assert cfg.prof and cfg.prof_path is None and cfg.enabled
+    cfg = load_obs_env({"ISHMEM_OBS_PROF": "/tmp/prof.json"})
+    assert cfg.prof and cfg.prof_path == "/tmp/prof.json"
+    cfg = load_obs_env({"ISHMEM_OBS_CALIBRATION": "/tmp/cal.json"})
+    assert cfg.calibration and cfg.calibration_path == "/tmp/cal.json"
+    assert cfg.prof                               # calibration implies prof

@@ -319,8 +319,12 @@ def test_best_of_records_measured_wall_clock():
                                          4))
     finally:
         bench_common.MEASURED = orig
-    assert sink.total_count() == 3
-    samples = sink.samples(path="direct", tier="local", work_items=4)
+    # measured provenance: records land in the "wallclock" stream, never
+    # the model stream (total_count/buckets stay the deterministic clock)
+    assert sink.total_count() == 0
+    assert sink.nsamples("wallclock") == 3
+    samples = sink.samples(path="direct", tier="local", work_items=4,
+                           source="wallclock")
     assert len(samples) == 3
     assert all(t >= 0.0 for _, t in samples)
     prof = estimator.fit_linear(samples)
